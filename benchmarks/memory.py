@@ -1,0 +1,83 @@
+"""Paper Fig. 8 + Table 4: memory cost of StarTrail vs Ring Attention.
+
+  (theory)   eqs. (5)-(7): peak activation memory PM_Ring = M + (Y+4)A,
+             PM_Wall = M + (Y+3C+1)A -> relative overhead per C.
+  (measured) compiled peak bytes (memory_analysis) of the attention island
+             at C=1 vs C=2 on 8 host devices: the measured extra footprint
+             must track the 3(C-1)A prediction.
+  (table4)   supported sequence lengths: compute the paper's Table-4 style
+             feasibility (fits-in-HBM) for the dry-run cells from
+             results/dryrun (full-model numbers on v5e budgets).
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import startrail as st
+from repro.roofline import hw
+
+
+def theory(emit):
+    # llama-30B case study from the paper's §3.2.2
+    Y, C = 64, 4
+    ring = Y + 4
+    wall = Y + 3 * C + 1
+    emit("fig8_theory_llama30b_c4", wall / ring,
+         f"extra_mem_ratio={(wall - ring) / ring:.3f} (paper: <13.2%)")
+    for c in (2, 4):
+        emit(f"fig8_theory_generic_c{c}", (Y + 3 * c + 1) / (Y + 4),
+             f"Y={Y}")
+
+
+def measured(emit):
+    if len(jax.devices()) < 8:
+        emit("fig8_measured", 0, "skipped=needs 8 devices")
+        return
+    B, S, hq, hkv, d, p = 1, 8192, 8, 8, 64, 8
+    peaks = {}
+    for c in (1, 2):
+        cfg = st.StarTrailConfig(seq_len=S, seq_scheme="zigzag", causal=True)
+        r = p // (c * c)
+        devs = np.array(jax.devices()[:p]).reshape(c, r, c)
+        mesh = jax.sharding.Mesh(devs, cfg.axes)
+        spec = P(None, cfg.axes, None, None)
+        f = jax.jit(jax.shard_map(
+            lambda q, k, v: st.startrail_attention(q, k, v, cfg),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec, check_vma=False))
+        args = [jax.ShapeDtypeStruct((B, S, h, d), jnp.bfloat16)
+                for h in (hq, hkv, hkv)]
+        m = f.lower(*args).compile().memory_analysis()
+        peaks[c] = (m.argument_size_in_bytes + m.output_size_in_bytes
+                    + m.temp_size_in_bytes - m.alias_size_in_bytes)
+    emit("fig8_measured_attn_island", peaks[2] / peaks[1],
+         f"c1_MiB={peaks[1]/2**20:.1f},c2_MiB={peaks[2]/2**20:.1f}")
+
+
+def table4(emit):
+    results = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    if not results.exists():
+        emit("tab4_fits", 0, "skipped=run launch.dryrun first")
+        return
+    for f in sorted(results.glob("*__single__c2.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        peak = rec["memory"]["peak_bytes_per_device"]
+        fits = peak <= hw.HBM_BYTES
+        emit(f"tab4_{rec['arch']}_{rec['shape']}", peak / 2**30,
+             f"fits_16GiB_v5e={'yes' if fits else 'NO'}")
+
+
+def run(emit):
+    theory(emit)
+    measured(emit)
+    table4(emit)
+
+
+if __name__ == "__main__":
+    run(lambda n, v, d: print(f"{n},{v},{d}"))

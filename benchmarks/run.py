@@ -1,0 +1,30 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. The comm/memory/throughput-wall
+benchmarks need 8 host devices — this launcher sets XLA_FLAGS before jax
+imports (it must run as the entry point: ``python -m benchmarks.run``).
+"""
+
+import os
+
+if __name__ == "__main__":
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=16")
+
+
+def main() -> None:
+    from benchmarks import comm_volume, memory, scaling, throughput
+
+    print("name,us_per_call,derived")
+
+    def emit(name, value, derived=""):
+        print(f"{name},{value:.3f},{derived}", flush=True)
+
+    comm_volume.run(emit)
+    throughput.run(emit)
+    memory.run(emit)
+    scaling.run(emit)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Figs. 9-10: strong and weak scaling, Ring vs StarTrail.
+
+Evaluated with the analytic cluster model (CPU container; v5e target):
+  strong: fixed 128k sequence, devices 8 -> 64;
+  weak:   sequence and devices scale together (128k@8 .. 512k@32).
+Reports projected throughput (tokens/s) for Ring (C=1) and the best
+StarTrail config at each point; the paper's qualitative claims to verify:
+StarTrail's advantage grows with device count (strong) and stays constant
+or grows with sequence (weak).
+"""
+
+from repro.configs import paper_models
+from repro.core import scheduler as sch
+
+
+def run(emit):
+    cfg = paper_models.GPT_7B
+    # strong scaling: N fixed, P grows
+    seq = 128 * 1024
+    for p in (8, 16, 32, 64):
+        w = sch.AttnWorkload(batch=1, seq_len=seq, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=cfg.head_dim_)
+        cl = sch.ClusterModel(sp_size=p, link_bw=25e9)
+        out = sch.schedule(w, cl)
+        ring = min(g["total_s"] for g in out["grid"] if g["c"] == 1)
+        best = out["best"]
+        emit(f"fig9_strong_p{p}", seq / best["total_s"],
+             f"ring_tok_s={seq/ring:.0f},best_c={best['c']},"
+             f"advantage={ring/best['total_s']-1:.2%}")
+    # weak scaling: N and P grow together
+    # paper Fig. 10a runs on the A100/Ethernet clusters -> slow links
+    for k, p in ((1, 8), (2, 16), (4, 32)):
+        seq = 128 * 1024 * k
+        w = sch.AttnWorkload(batch=1, seq_len=seq, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=cfg.head_dim_)
+        cl = sch.ClusterModel(sp_size=p, link_bw=3e9)
+        out = sch.schedule(w, cl)
+        ring = min(g["total_s"] for g in out["grid"] if g["c"] == 1)
+        best = out["best"]
+        emit(f"fig10_weak_{seq//1024}k_p{p}", seq / best["total_s"],
+             f"ring_tok_s={seq/ring:.0f},best_c={best['c']},"
+             f"advantage={ring/best['total_s']-1:.2%}")
+
+
+if __name__ == "__main__":
+    run(lambda n, v, d: print(f"{n},{v},{d}"))

@@ -1,0 +1,94 @@
+"""Paper Fig. 7: throughput, Ring Attention vs StarTrail (Wall-2 / Wall-4).
+
+The paper measures tokens/s on GPU clusters; we are CPU-only with TPU v5e
+as the target, so this benchmark has two parts:
+
+  (model)    the topology scheduler's analytic cost model evaluated at the
+             paper's own settings (GPT 3B/7B, DiT 1B; 32 devices; 64k-512k
+             sequence) -> projected tokens/s per config, reproducing the
+             qualitative Fig. 7 result (StarTrail > Ring, best C varies
+             with the interconnect).
+  (wall)     real wall-clock of the attention island on 8 host devices at
+             a reduced size: relative step times Ring vs StarTrail-2 (CPU
+             timing, *relative* numbers only).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import paper_models
+from repro.core import scheduler as sch
+from repro.core import startrail as st
+
+
+PAPER_SETTINGS = [
+    # (model, seq_len, link_bw, tag)  bw ~ IB vs 100Gb ethernet
+    (paper_models.GPT_7B, 128 * 1024, 25e9, "H100_IB_128k"),
+    (paper_models.GPT_7B, 512 * 1024, 25e9, "H100_IB_512k"),
+    (paper_models.GPT_3B, 256 * 1024, 3e9, "A100_eth_256k"),
+    (paper_models.DIT_1B, 512 * 1024, 3e9, "A100_eth_512k"),
+]
+
+
+def model_part(emit):
+    for cfg, seq, bw, tag in PAPER_SETTINGS:
+        w = sch.AttnWorkload(batch=1, seq_len=seq, num_heads=cfg.num_heads,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=cfg.head_dim_,
+                             causal=(cfg.name != "dit-1b"))
+        cl = sch.ClusterModel(sp_size=32, link_bw=bw)
+        out = sch.schedule(w, cl)
+        per_c = {}
+        for g in out["grid"]:
+            c = g["c"]
+            if c not in per_c or g["total_s"] < per_c[c]:
+                per_c[c] = g["total_s"]
+        ring_t = per_c[1]
+        best = out["best"]
+        speedup = ring_t / best["total_s"] - 1
+        emit(f"fig7_{tag}", best["total_s"] * 1e6,
+             f"best_c={best['c']},placement={best['placement']},"
+             f"speedup_vs_ring={speedup:.2%},"
+             + ",".join(f"c{c}_us={t*1e6:.0f}" for c, t in sorted(per_c.items())))
+
+
+def wall_part(emit):
+    if len(jax.devices()) < 8:
+        emit("fig7_wallclock", 0, "skipped=needs 8 devices")
+        return
+    B, S, hq, hkv, d, p = 1, 4096, 8, 4, 64, 8
+    for c in (1, 2):
+        cfg = st.StarTrailConfig(seq_len=S, seq_scheme="zigzag", causal=True)
+        r = p // (c * c)
+        devs = np.array(jax.devices()[:p]).reshape(c, r, c)
+        mesh = jax.sharding.Mesh(devs, cfg.axes)
+        spec = P(None, cfg.axes, None, None)
+        f = jax.jit(jax.shard_map(
+            lambda q, k, v: st.startrail_attention(q, k, v, cfg),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec, check_vma=False))
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (B, S, hq, d), jnp.float32)
+        k = jax.random.normal(key, (B, S, hkv, d), jnp.float32)
+        v = jax.random.normal(key, (B, S, hkv, d), jnp.float32)
+        f(q, k, v).block_until_ready()
+        t0 = time.perf_counter()
+        n = 3
+        for _ in range(n):
+            out = f(q, k, v)
+        out.block_until_ready()
+        us = (time.perf_counter() - t0) / n * 1e6
+        emit(f"fig7_wallclock_c{c}", us,
+             f"tokens_per_s={B*S/(us/1e6):.0f},note=cpu-relative-only")
+
+
+def run(emit):
+    model_part(emit)
+    wall_part(emit)
+
+
+if __name__ == "__main__":
+    run(lambda n, v, d: print(f"{n},{v},{d}"))

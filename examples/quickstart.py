@@ -1,0 +1,52 @@
+"""Quickstart: StarTrail concentric-ring attention in ~40 lines.
+
+Runs on CPU with 8 forced host devices; computes exact full-sequence
+attention of a sequence sharded over the (sp_grp, sp_ring, sp_team) mesh
+and checks it against the single-device reference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import StarTrailConfig, startrail_attention
+from repro.core import zigzag as zz
+from repro.kernels.ref import mha_reference
+
+# ---- mesh: P = 8 sequence-parallel devices, attention-parallel size C = 2
+C, R = 2, 2                                # P = C^2 * R = 8
+mesh = jax.sharding.Mesh(
+    np.array(jax.devices()).reshape(C, R, C), ("sp_grp", "sp_ring", "sp_team"))
+
+B, S, HQ, HKV, D = 2, 512, 8, 2, 64        # GQA 4:1
+cfg = StarTrailConfig(seq_len=S, seq_scheme="zigzag", causal=True)
+
+key = jax.random.PRNGKey(0)
+kq, kk, kv = jax.random.split(key, 3)
+q = jax.random.normal(kq, (B, S, HQ, D))
+k = jax.random.normal(kk, (B, S, HKV, D))
+v = jax.random.normal(kv, (B, S, HKV, D))
+
+# shard the sequence in the zigzag layout (causal load balance, paper §3.5)
+pos = zz.make_positions(S, 8, "zigzag")
+perm = pos.reshape(-1)
+spec = P(None, ("sp_grp", "sp_ring", "sp_team"), None, None)
+
+attn = jax.jit(jax.shard_map(
+    lambda q, k, v: startrail_attention(q, k, v, cfg),
+    mesh=mesh, in_specs=(spec,) * 3, out_specs=spec, check_vma=False))
+
+o_sharded = attn(q[:, perm], k[:, perm], v[:, perm])
+o = np.asarray(o_sharded)[:, zz.inverse_permutation_for(pos)]
+
+o_ref = np.asarray(mha_reference(q, k, v, causal=True))
+err = np.abs(o - o_ref).max()
+print(f"StarTrail(C={C}) vs reference: max err {err:.2e}")
+assert err < 1e-4
+print("OK — concentric-ring attention is exact.")

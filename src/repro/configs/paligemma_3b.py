@@ -1,0 +1,34 @@
+"""paligemma-3b [vlm]: gemma-2b text backbone behind a SigLIP frontend.
+
+18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216 [arXiv:2407.07726; hf]
+
+The SigLIP vision tower is a STUB per the assignment: ``input_specs()``
+supplies precomputed patch embeddings that form a bidirectional prefix
+(PaliGemma prefix-LM masking); text tokens continue causally. kv=1 (MQA)
+means head-sharded SP (Ulysses) is impossible here — StarTrail is not
+head-limited, which is exactly the paper's argument.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    prefix_len_frac=0.125,   # image-patch prefix fraction of the sequence
+    frontend_stub="patch",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=4, num_kv_heads=1,
+        head_dim=16, d_ff=192, vocab_size=512, param_dtype="float32")

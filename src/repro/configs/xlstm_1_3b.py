@@ -1,0 +1,34 @@
+"""xlstm-1.3b [ssm]: sLSTM + mLSTM blocks (no attention, no FFN: d_ff=0).
+
+48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304 [arXiv:2405.04517; unverified]
+
+No attention => the StarTrail K/V ring is inapplicable (see DESIGN.md
+§Arch-applicability). The mLSTM matrix-memory recurrence is parallelised
+with the paper's *hierarchical* insight instead: chunked intra-shard scan +
+team-gathered cross-shard state combine. sLSTM (1 in 8 blocks) keeps
+shard-local state during training (documented approximation); decode is
+exact (step recurrent). Sub-quadratic => long_500k runs.
+"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    xlstm=XLSTMConfig(slstm_every=8),
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=64, num_heads=2, num_kv_heads=2,
+        vocab_size=256, xlstm=XLSTMConfig(slstm_every=2, chunk=8),
+        param_dtype="float32")

@@ -1,0 +1,59 @@
+"""Numerically-stable combination of partial softmax-attention results.
+
+A partial result is a pair (o, lse) where
+
+    o   = softmax(s_block) @ v_block          (normalised within the block)
+    lse = logsumexp(s_block, axis=keys)
+
+Two partials over disjoint key sets merge exactly:
+
+    m      = max(lse1, lse2)
+    w_i    = exp(lse_i - m)
+    o      = (w1 * o1 + w2 * o2) / (w1 + w2)
+    lse    = m + log(w1 + w2)
+
+Fully-masked blocks carry lse = -inf and weight 0. All math in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # used instead of -inf to keep XLA/grad paths NaN-free
+
+
+def combine_pair(o1, lse1, o2, lse2):
+    """Merge two partial attention results.
+
+    Shapes: o (..., S, H, D); lse (..., H, S). Returns (o, lse) in f32.
+    """
+    o1 = o1.astype(jnp.float32)
+    o2 = o2.astype(jnp.float32)
+    lse1 = lse1.astype(jnp.float32)
+    lse2 = lse2.astype(jnp.float32)
+    m = jnp.maximum(lse1, lse2)
+    # guard: if both are NEG_INF the row saw no keys at all; emit zeros.
+    both_dead = m <= NEG_INF / 2
+    m_safe = jnp.where(both_dead, 0.0, m)
+    w1 = jnp.exp(lse1 - m_safe)
+    w2 = jnp.exp(lse2 - m_safe)
+    denom = w1 + w2
+    denom_safe = jnp.where(denom == 0.0, 1.0, denom)
+    # broadcast weights (..., H, S) -> (..., S, H, 1)
+    w1b = _lse_to_o_layout(w1)
+    w2b = _lse_to_o_layout(w2)
+    db = _lse_to_o_layout(denom_safe)
+    o = (w1b * o1 + w2b * o2) / db
+    lse = jnp.where(both_dead, NEG_INF, m_safe + jnp.log(denom_safe))
+    return o, lse
+
+
+def _lse_to_o_layout(x):
+    """(..., H, S) -> (..., S, H, 1) to broadcast against o."""
+    return jnp.swapaxes(x, -1, -2)[..., None]
+
+
+def finalize(o, lse):
+    """No-op placeholder kept for API symmetry; o is already normalised."""
+    return o, lse

@@ -1,0 +1,26 @@
+"""Ring Attention baseline (Liu, Zaharia, Abbeel 2023).
+
+In the StarTrail formulation, Ring Attention is exactly the C = 1
+degenerate point: team size 1 (no gather / scatter), a single ring of all
+P devices, P ring steps circulating N/P-token K/V chunks. We therefore
+*implement* it as StarTrail with a (1, P, 1) axis factorisation, which both
+deduplicates code and guarantees the baseline/technique comparison is
+apples-to-apples (same block kernel, same masks, same scan machinery).
+
+The paper's analysis (eqs. 2-4) is reproduced in
+``benchmarks/comm_volume.py`` against this implementation's measured
+collective bytes.
+"""
+
+from __future__ import annotations
+
+from repro.core.startrail import StarTrailConfig, startrail_attention
+
+
+def ring_attention(q, k, v, cfg: StarTrailConfig):
+    """Per-shard ring attention: requires cfg.axes sized (1, P, 1)."""
+    return startrail_attention(q, k, v, cfg)
+
+
+def ring_config(seq_len: int, **kw) -> StarTrailConfig:
+    return StarTrailConfig(seq_len=seq_len, **kw)

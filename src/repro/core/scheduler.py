@@ -1,0 +1,120 @@
+"""Communication Topology Scheduler (paper §3.4).
+
+Grid-searches the StarTrail tuning space
+
+    Config = argmax_{C, placement} Profile(C in [1, sqrt(P)],
+                                           placement in {P2P_intra, Collect_intra})
+
+The paper profiles a few iterations on the real cluster; without hardware,
+``Profile`` defaults to the analytic cost model below (the paper's eqs. 2-4
+plus an overlap model on v5e constants). On a real deployment, pass
+``profile_fn`` that wall-clocks the compiled step — the search is identical.
+
+Cost model for one attention block over sequence N, hidden H, P devices,
+attention-parallel size C (bf16, bytes):
+
+    collective (team gather + reduce-scatter):  4*B*N*H*(C-1)/P      (eq. 3)
+    ring P2P total:                             2*B*N*kvH/C          (eq. 4)
+    ring steps:                                 P / C^2
+    attention compute per device:               2 * (2*N^2*Hq*dh/P)  flops
+
+Overlap: per ring step, XLA overlaps the permute with the block compute;
+the exposed time is max(compute_step, comm_step) + per-step latency. The
+placement option decides which axis gets the fast links: 'team_inner'
+(Collect_intra) gives the team collectives the short hops; 'ring_inner'
+(P2P_intra) favours the permutes. We model it as a bandwidth discount on
+the favoured class (paper's inter/intra-node distinction mapped to ICI
+hop distance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.topology import valid_c_values
+from repro.roofline import hw
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnWorkload:
+    batch: int
+    seq_len: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    dtype_bytes: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    sp_size: int
+    peak_flops: float = hw.PEAK_FLOPS_BF16
+    link_bw: float = hw.ICI_BW_PER_LINK
+    # hop-distance discount for the non-favoured collective class
+    far_penalty: float = 2.0
+    step_latency: float = 1e-6
+
+
+def attention_step_cost(w: AttnWorkload, cl: ClusterModel, c: int,
+                        placement: str) -> Dict[str, float]:
+    """Analytic per-block cost (seconds) for attention-parallel size c."""
+    p = cl.sp_size
+    r = p // (c * c)
+    causal_frac = 0.5 if w.causal else 1.0
+
+    # compute: each device computes Q_team (c*N/p) x (N/c) of keys
+    flops = (4.0 * w.batch * (c * w.seq_len / p) * (w.seq_len / c)
+             * w.num_heads * w.head_dim * causal_frac)
+    t_compute = flops / cl.peak_flops
+
+    kv_h = w.num_kv_heads * w.head_dim
+    q_h = w.num_heads * w.head_dim
+    # collective: all-gather q,k,v + reduce-scatter o over the team (eq. 3)
+    coll_bytes = (w.batch * w.seq_len / p * (c - 1)
+                  * (2 * kv_h + 2 * q_h) * w.dtype_bytes)
+    # ring: r-1 steps of the team's K/V chunk (eq. 4 without the setup hop)
+    ring_step_bytes = 2 * w.batch * (c * w.seq_len / p) * kv_h * w.dtype_bytes
+    ring_bytes = ring_step_bytes * max(r - 1, 0)
+
+    bw_coll = cl.link_bw
+    bw_ring = cl.link_bw
+    if placement == "team_inner":     # collectives on the short hops
+        bw_ring = cl.link_bw / cl.far_penalty
+    else:                              # rings on the short hops
+        bw_coll = cl.link_bw / cl.far_penalty
+
+    t_coll = coll_bytes / bw_coll
+    t_ring_step = ring_step_bytes / bw_ring + cl.step_latency
+    t_compute_step = t_compute / max(r, 1)
+    # per-step overlap of permute with block compute
+    t_ring_exposed = max(r - 1, 0) * max(t_ring_step, t_compute_step)
+    t_ring_exposed += t_compute_step  # last step has no permute to hide
+    # team collectives overlap with the qkv matmuls only partially (paper:
+    # "up to two-thirds"); expose one third
+    t_total = t_ring_exposed + t_coll / 3.0
+
+    return {
+        "c": c, "placement": placement, "total_s": t_total,
+        "compute_s": t_compute, "collective_bytes": coll_bytes,
+        "ring_bytes": ring_bytes, "ring_steps": r,
+    }
+
+
+def schedule(w: AttnWorkload, cl: ClusterModel,
+             profile_fn: Optional[Callable[[int, str], float]] = None
+             ) -> Dict[str, object]:
+    """Grid search; returns the best config + the full grid (paper eq. 8)."""
+    grid = []
+    for c in valid_c_values(cl.sp_size):
+        for placement in ("team_inner", "ring_inner"):
+            if profile_fn is not None:
+                cost = {"c": c, "placement": placement,
+                        "total_s": profile_fn(c, placement)}
+            else:
+                cost = attention_step_cost(w, cl, c, placement)
+            grid.append(cost)
+    best = min(grid, key=lambda g: g["total_s"])
+    return {"best": best, "grid": grid}

@@ -1,0 +1,439 @@
+"""StarTrail (WallFacer) concentric-ring sequence-parallel attention.
+
+The paper's contribution, as a composable JAX module. The sequence-parallel
+dimension P is factored onto three mesh axes
+
+    (sp_grp = C, sp_ring = R, sp_team = C),      P = C^2 * R
+
+and exact full-sequence attention of a sequence sharded over those axes is
+computed as:
+
+  1. all_gather Q/K/V over ``sp_team``          (paper: team gather, overlaps
+                                                 with the QKV projections)
+  2. one ppermute over the joint SP axes with the Alg.-2 placement
+     permutation                                 (paper: initial K/V dispatch)
+  3. a ``jax.lax.scan`` of R ring steps: flash-attention block accumulate
+     (online softmax) + ppermute of K/V along ``sp_ring``
+                                                 (paper: concentric rings;
+                                                 XLA overlaps the
+                                                 collective-permute with the
+                                                 block compute)
+  4. log-sum-exp combine across ``sp_team`` + psum_scatter
+                                                 (paper: ReduceScatter_combine)
+
+C = 1 degenerates to Ring Attention (the paper's baseline); R = 1 to a fully
+collective scheme. The backward is a custom VJP implementing the paper's
+two-loop scheme: K/V and their grads stay resident; the (Q, dO, lse, delta,
+dQ) pack circulates the ring (the "query inner loop"), followed by the
+transposed placement permute and team reduce-scatters.
+
+Masks are derived from *global token positions*, computed on-device from
+axis indices (no position tensors are communicated). Causal, sliding-window
+(SWA) and full masks are supported; the zigzag layout (§3.5) balances causal
+work across shards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import topology as topo_lib
+from repro.core.combine import NEG_INF, combine_pair
+from repro.kernels import ref as ref_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class StarTrailConfig:
+    """Static configuration of the concentric-ring attention.
+
+    Attributes:
+      seq_len: global sequence length N.
+      axes: mesh axis names (sp_grp, sp_ring, sp_team).
+      seq_scheme: 'zigzag' (causal load balance) or 'contiguous'.
+      causal: causal mask.
+      window: sliding-window size (tokens), None = full.
+      scale: softmax scale; None = 1/sqrt(D).
+      block_impl: 'ref' (pure-jnp / XLA; CPU + dry-run default) or 'pallas'
+        (TPU kernel; validated in interpret mode on CPU).
+      block_skip: skip fully-masked ring steps with lax.cond (wins for SWA
+        with contiguous layout).
+    """
+
+    seq_len: int
+    axes: Tuple[str, str, str] = ("sp_grp", "sp_ring", "sp_team")
+    seq_scheme: str = "zigzag"
+    causal: bool = True
+    window: Optional[int] = None
+    scale: Optional[float] = None
+    prefix_len: Optional[int] = None   # prefix-LM (VLM): keys < prefix_len
+                                       # are visible to all queries
+    block_impl: str = "ref"
+    block_skip: bool = False
+    unroll: bool = False   # unroll ring scans (dry-run cost accounting:
+                           # XLA cost_analysis counts while-loop bodies once)
+
+    @property
+    def grp_axis(self) -> str:
+        return self.axes[0]
+
+    @property
+    def ring_axis(self) -> str:
+        return self.axes[1]
+
+    @property
+    def team_axis(self) -> str:
+        return self.axes[2]
+
+
+# ---------------------------------------------------------------------------
+# Position bookkeeping (pure jnp; works with traced shard indices)
+# ---------------------------------------------------------------------------
+
+def shard_positions(sp_rank: jax.Array, seq_len: int, sp_size: int, scheme: str) -> jax.Array:
+    """Global positions of SP shard `sp_rank` (traced ok) -> (S_local,) int32."""
+    s_local = seq_len // sp_size
+    if scheme == "contiguous":
+        return sp_rank * s_local + jnp.arange(s_local, dtype=jnp.int32)
+    if scheme == "zigzag":
+        ch = seq_len // (2 * sp_size)
+        a = sp_rank * ch + jnp.arange(ch, dtype=jnp.int32)
+        b = (2 * sp_size - 1 - sp_rank) * ch + jnp.arange(ch, dtype=jnp.int32)
+        return jnp.concatenate([a, b])
+    raise ValueError(f"unknown seq scheme {scheme!r}")
+
+
+def team_positions(team_idx: jax.Array, c: int, seq_len: int, sp_size: int, scheme: str) -> jax.Array:
+    """Positions of the C concatenated member shards of team `team_idx`."""
+    ranks = team_idx * c + jnp.arange(c, dtype=jnp.int32)
+    rows = jax.vmap(lambda r: shard_positions(r, seq_len, sp_size, scheme))(ranks)
+    return rows.reshape(-1)
+
+
+# ---------------------------------------------------------------------------
+# Block dispatch
+# ---------------------------------------------------------------------------
+
+def _block_fwd(cfg: StarTrailConfig, q, k, v, pos_q, pos_k):
+    if cfg.block_impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention_fwd(
+            q, k, v, pos_q, pos_k, causal=cfg.causal, window=cfg.window,
+            scale=cfg.scale, prefix_len=cfg.prefix_len,
+        )
+    return ref_kernels.block_attention(
+        q, k, v, pos_q, pos_k, causal=cfg.causal, window=cfg.window,
+        scale=cfg.scale, prefix_len=cfg.prefix_len,
+    )
+
+
+def _block_bwd(cfg: StarTrailConfig, q, k, v, do, lse, delta, pos_q, pos_k):
+    if cfg.block_impl == "pallas":
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.flash_attention_bwd(
+            q, k, v, do, lse, delta, pos_q, pos_k,
+            causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+            prefix_len=cfg.prefix_len,
+        )
+    return ref_kernels.block_attention_bwd(
+        q, k, v, do, lse, delta, pos_q, pos_k,
+        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+        prefix_len=cfg.prefix_len,
+    )
+
+
+def _fully_masked(cfg: StarTrailConfig, pos_q, pos_k):
+    """True iff the whole (Q block x K block) pair is masked out."""
+    dead = jnp.array(False)
+    if cfg.causal:
+        dead = dead | (jnp.min(pos_k) > jnp.max(pos_q))
+    if cfg.window is not None:
+        p = (jnp.min(pos_q) - jnp.max(pos_k)) >= cfg.window
+        if not cfg.causal:
+            p = p & ((jnp.min(pos_k) - jnp.max(pos_q)) >= cfg.window)
+        dead = dead | p
+    if cfg.prefix_len is not None:
+        # any key inside the prefix keeps the tile alive
+        dead = dead & (jnp.min(pos_k) >= cfg.prefix_len)
+    return dead
+
+
+# ---------------------------------------------------------------------------
+# The per-shard attention (call inside shard_map) with custom VJP
+# ---------------------------------------------------------------------------
+
+def startrail_attention(q, k, v, cfg: StarTrailConfig):
+    """Exact full-sequence attention for sequence-sharded q, k, v.
+
+    Must be called inside a ``shard_map`` whose mesh contains ``cfg.axes``.
+    Shapes (per shard): q (B, S, Hq, D); k, v (B, S, Hkv, D);
+    returns o (B, S, Hq, D). S = N / P, with the shard's tokens laid out by
+    ``cfg.seq_scheme``.
+    """
+    fn = _make_attention(cfg)
+    return fn(q, k, v)
+
+
+@functools.lru_cache(maxsize=None)
+def _make_attention(cfg: StarTrailConfig):
+    g_ax, r_ax, t_ax = cfg.axes
+
+    def _sizes():
+        c = jax.lax.axis_size(t_ax)
+        r = jax.lax.axis_size(r_ax)
+        g = jax.lax.axis_size(g_ax)
+        if g != c:
+            raise ValueError(
+                f"sp_grp axis size {g} must equal sp_team axis size {c} "
+                f"(both are the paper's C)"
+            )
+        return c, r, c * c * r
+
+    def _self_coords():
+        gi = jax.lax.axis_index(g_ax)
+        ji = jax.lax.axis_index(r_ax)
+        ti = jax.lax.axis_index(t_ax)
+        return gi, ji, ti
+
+    def _topo(c, r):
+        return topo_lib.StarTrailTopology(sp_size=c * c * r, c=c)
+
+    # -- forward ------------------------------------------------------------
+    def _forward(q, k, v):
+        c, r, p = _sizes()
+        tp = _topo(c, r)
+        gi, ji, ti = _self_coords()
+        B, S, Hq, D = q.shape
+
+        # 1. team gather (paper: AllGather_QKVmatmul)
+        q_team = jax.lax.all_gather(q, t_ax, axis=1, tiled=True)
+        k_team = jax.lax.all_gather(k, t_ax, axis=1, tiled=True)
+        v_team = jax.lax.all_gather(v, t_ax, axis=1, tiled=True)
+
+        # 2. initial K/V placement (paper Alg. 2)
+        perm = tp.init_placement_permutation()
+        k0 = jax.lax.ppermute(k_team, cfg.axes, perm)
+        v0 = jax.lax.ppermute(v_team, cfg.axes, perm)
+
+        own_team = gi * r + ji
+        pos_q = team_positions(own_team, c, cfg.seq_len, p, cfg.seq_scheme)
+
+        ring_perm = tp.ring_permutation()
+
+        # 3. concentric-ring scan
+        def step(carry, s):
+            k_cur, v_cur, o_acc, lse_acc = carry
+            kv_team = ((ji + s) % r) * c + ti
+            pos_k = team_positions(kv_team, c, cfg.seq_len, p, cfg.seq_scheme)
+            # barrier: stops XLA hoisting the f32 upcast through the
+            # ppermute (keeps K/V bf16 on the wire)
+            k_use, v_use = jax.lax.optimization_barrier((k_cur, v_cur))
+
+            def compute(o_acc, lse_acc):
+                o_s, lse_s = _block_fwd(cfg, q_team, k_use, v_use, pos_q, pos_k)
+                return combine_pair(o_acc, lse_acc, o_s, lse_s)
+
+            if cfg.block_skip:
+                o_acc, lse_acc = jax.lax.cond(
+                    _fully_masked(cfg, pos_q, pos_k),
+                    lambda oa, la: (oa, la),
+                    compute,
+                    o_acc,
+                    lse_acc,
+                )
+            else:
+                o_acc, lse_acc = compute(o_acc, lse_acc)
+
+            # rotate K/V for the next step (also on the last step: the chunks
+            # end back in placement order, which the backward reuses).
+            k_nxt = jax.lax.ppermute(k_cur, cfg.axes, ring_perm)
+            v_nxt = jax.lax.ppermute(v_cur, cfg.axes, ring_perm)
+            return (k_nxt, v_nxt, o_acc, lse_acc), None
+
+        o0 = jnp.zeros((B, c * S, Hq, D), jnp.float32)
+        l0 = jnp.full((B, Hq, c * S), NEG_INF, jnp.float32)
+        (k_fin, v_fin, o_part, lse_part), _ = jax.lax.scan(
+            step, (k0, v0, o0, l0), jnp.arange(r),
+            unroll=r if cfg.unroll else 1,
+        )
+        del k_fin, v_fin  # == (k0, v0); XLA aliases them
+
+        # 4. lse-combine + reduce-scatter (paper: ReduceScatter_combine)
+        m = jax.lax.pmax(lse_part, t_ax)
+        dead = m <= NEG_INF / 2
+        m_safe = jnp.where(dead, 0.0, m)
+        se = jax.lax.psum(jnp.exp(lse_part - m_safe), t_ax)
+        se_safe = jnp.where(se == 0.0, 1.0, se)
+        lse_glob = jnp.where(dead, NEG_INF, m_safe + jnp.log(se_safe))
+
+        w = jnp.exp(lse_part - jnp.where(dead, 0.0, lse_glob))
+        w = jnp.where(dead, 0.0, w)
+        o_scaled = o_part * jnp.swapaxes(w, 1, 2)[..., None]
+        o_local = jax.lax.psum_scatter(o_scaled, t_ax, scatter_dimension=1, tiled=True)
+        return o_local.astype(q.dtype), (q_team, k0, v0, lse_glob)
+
+    # -- backward (paper: two-loop; Q pack circulates, K/V grads resident) --
+    def _backward(res, o_local, do_local):
+        q_team, k0, v0, lse_glob = res
+        c, r, p = _sizes()
+        tp = _topo(c, r)
+        gi, ji, ti = _self_coords()
+        B, CS, Hq, D = q_team.shape
+        Hkv = k0.shape[2]
+
+        do_f = do_local.astype(jnp.float32)
+        o_f = o_local.astype(jnp.float32)
+        delta_local = jnp.einsum("bshd,bshd->bhs", do_f, o_f)
+
+        do_team = jax.lax.all_gather(do_local, t_ax, axis=1, tiled=True)
+        delta_team = jax.lax.all_gather(delta_local, t_ax, axis=2, tiled=True)
+
+        # K/V (and their positions) stay resident on this device.
+        kv_team_idx = ji * c + ti
+        pos_k = team_positions(kv_team_idx, c, cfg.seq_len, p, cfg.seq_scheme)
+
+        ring_perm = tp.ring_permutation()
+        own_team = gi * r + ji
+
+        pack = dict(
+            q=q_team,
+            do=do_team,
+            delta=delta_team,
+            lse=lse_glob,
+            dq=jnp.zeros((B, CS, Hq, D), jnp.float32),
+            team=own_team.astype(jnp.int32),
+        )
+        dk_acc = jnp.zeros((B, CS, Hkv, D), jnp.float32)
+        dv_acc = jnp.zeros((B, CS, Hkv, D), jnp.float32)
+
+        def step(carry, _):
+            pack, dk_acc, dv_acc = carry
+            pos_q = team_positions(pack["team"], c, cfg.seq_len, p, cfg.seq_scheme)
+            q_use, do_use = jax.lax.optimization_barrier(
+                (pack["q"], pack["do"]))  # keep the circulating pack bf16
+
+            def compute(pack_dq, dk_acc, dv_acc):
+                dq_c, dk_c, dv_c = _block_bwd(
+                    cfg, q_use, k0, v0, do_use, pack["lse"],
+                    pack["delta"], pos_q, pos_k,
+                )
+                return pack_dq + dq_c, dk_acc + dk_c, dv_acc + dv_c
+
+            if cfg.block_skip:
+                dq_new, dk_acc, dv_acc = jax.lax.cond(
+                    _fully_masked(cfg, pos_q, pos_k),
+                    lambda dq, dk, dv: (dq, dk, dv),
+                    compute,
+                    pack["dq"],
+                    dk_acc,
+                    dv_acc,
+                )
+            else:
+                dq_new, dk_acc, dv_acc = compute(pack["dq"], dk_acc, dv_acc)
+
+            pack = dict(pack, dq=dq_new)
+            pack = jax.tree.map(lambda a: jax.lax.ppermute(a, cfg.axes, ring_perm), pack)
+            return (pack, dk_acc, dv_acc), None
+
+        (pack, dk_acc, dv_acc), _ = jax.lax.scan(
+            step, (pack, dk_acc, dv_acc), None, length=r,
+            unroll=r if cfg.unroll else 1,
+        )
+        # after R permutes the pack is back home (full ring tour)
+
+        dq_local = jax.lax.psum_scatter(
+            pack["dq"], t_ax, scatter_dimension=1, tiled=True
+        )
+
+        inv = tp.inverse_placement_permutation()
+        dk_team = jax.lax.ppermute(dk_acc, cfg.axes, inv)
+        dv_team = jax.lax.ppermute(dv_acc, cfg.axes, inv)
+        dk_local = jax.lax.psum_scatter(dk_team, t_ax, scatter_dimension=1, tiled=True)
+        dv_local = jax.lax.psum_scatter(dv_team, t_ax, scatter_dimension=1, tiled=True)
+        return dq_local, dk_local, dv_local
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        o, _ = _forward(q, k, v)
+        return o
+
+    def attn_fwd(q, k, v):
+        o, res = _forward(q, k, v)
+        return o, (res, o)
+
+    def attn_bwd(saved, do):
+        res, o = saved
+        q_team, k0, v0, _ = res
+        dq, dk, dv = _backward(res, o, do)
+        return (
+            dq.astype(q_team.dtype),
+            dk.astype(k0.dtype),
+            dv.astype(v0.dtype),
+        )
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+# ---------------------------------------------------------------------------
+# shard_map wrapper for GSPMD-style models
+# ---------------------------------------------------------------------------
+
+def sharded_startrail_attention(
+    q, k, v, *, mesh, cfg: StarTrailConfig, batch_axes=("data",),
+):
+    """shard_map island: q,k,v are global (B, N, H, D) arrays (or tracers in
+    a surrounding pjit); attention runs under the StarTrail scheme.
+
+    Batch is sharded over `batch_axes`; sequence over cfg.axes.
+    """
+    seq_spec = tuple(cfg.axes)
+    spec = P(tuple(batch_axes), seq_spec, None, None)
+
+    def local(q, k, v):
+        return startrail_attention(q, k, v, cfg)
+
+    return jax.shard_map(
+        local, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec,
+        check_vma=False,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Decode-time attention: one (or few) new token(s) vs an SP-sharded KV cache.
+# The ring degenerates to a partial-attention + global lse-combine reduction.
+# ---------------------------------------------------------------------------
+
+def decode_attention(q_new, k_cache, v_cache, pos_q, pos_k, valid_k, cfg: StarTrailConfig):
+    """Per-shard decode attention (call inside shard_map).
+
+    q_new: (B, M, Hq, D) replicated across SP axes (M = new tokens, usually 1)
+    k_cache/v_cache: (B, S_local, Hkv, D) this shard's slice of the cache
+    pos_q: (M,) positions of the new tokens; pos_k: (S_local,) cache positions
+    valid_k: (B, S_local) bool — which cache slots are filled
+    Returns (B, M, Hq, D) fully-combined attention, replicated across SP.
+    """
+    o, lse = ref_kernels.block_attention(
+        q_new, k_cache, v_cache, pos_q, pos_k,
+        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+    )
+    # mask out unfilled cache slots: recompute with -inf where invalid is
+    # handled by giving invalid slots pos = huge so the causal mask kills
+    # them; callers encode validity via pos_k (see serve.kv_cache).
+    del valid_k
+    axes = tuple(cfg.axes)
+    m = jax.lax.pmax(lse, axes)
+    dead = m <= NEG_INF / 2
+    m_safe = jnp.where(dead, 0.0, m)
+    se = jax.lax.psum(jnp.exp(lse - m_safe), axes)
+    se_safe = jnp.where(se == 0.0, 1.0, se)
+    w = jnp.where(dead, 0.0, jnp.exp(lse - m_safe) / se_safe)
+    o = o * jnp.swapaxes(w, 1, 2)[..., None]
+    return jax.lax.psum(o, axes).astype(q_new.dtype)

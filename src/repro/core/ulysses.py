@@ -1,0 +1,55 @@
+"""DeepSpeed-Ulysses baseline: all-to-all head-sharded sequence parallelism.
+
+Included because the paper compares against it (§2.2.1) and to demonstrate
+its head-count scalability limit: the SP degree cannot exceed the number of
+KV heads (GQA), which is why e.g. paligemma (kv=1) cannot use it at all —
+StarTrail has no such limit. Raises a clear error in that case.
+
+Implementation: two ``jax.lax.all_to_all`` collectives over the joint SP
+axes swap the sharded dimension seq <-> heads around a fully-local
+attention.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_kernels
+from repro.core.startrail import StarTrailConfig, shard_positions
+
+
+def ulysses_attention(q, k, v, cfg: StarTrailConfig):
+    """Per-shard Ulysses attention (inside shard_map over cfg.axes).
+
+    q: (B, S_local, Hq, D); k, v: (B, S_local, Hkv, D).
+    """
+    axes = tuple(cfg.axes)
+    sp = 1
+    for a in axes:
+        sp *= jax.lax.axis_size(a)
+    B, S, Hq, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv % sp != 0 or Hq % sp != 0:
+        raise ValueError(
+            f"Ulysses requires head counts divisible by SP degree: "
+            f"Hq={Hq}, Hkv={Hkv}, SP={sp} (the paper's scalability limit)"
+        )
+
+    # seq-sharded -> head-sharded: gather seq (axis 1), scatter heads (axis 2)
+    qh = jax.lax.all_to_all(q, axes, split_axis=2, concat_axis=1, tiled=True)
+    kh = jax.lax.all_to_all(k, axes, split_axis=2, concat_axis=1, tiled=True)
+    vh = jax.lax.all_to_all(v, axes, split_axis=2, concat_axis=1, tiled=True)
+
+    # positions: full sequence, in shard-major order of the chosen scheme
+    ranks = jnp.arange(sp, dtype=jnp.int32)
+    pos = jax.vmap(lambda r: shard_positions(r, cfg.seq_len, sp, cfg.seq_scheme))(ranks).reshape(-1)
+
+    o, _ = ref_kernels.block_attention(
+        qh, kh, vh, pos, pos, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+    )
+    o = o.astype(q.dtype)
+    # head-sharded -> seq-sharded
+    return jax.lax.all_to_all(o, axes, split_axis=1, concat_axis=2, tiled=True)

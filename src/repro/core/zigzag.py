@@ -1,0 +1,93 @@
+"""Zigzag sequence sharding (StarTrail/WallFacer §3.5, after [Zhu et al.]).
+
+For causal masks, contiguous sequence sharding is unbalanced: the shard
+holding the head of the sequence does ~0 work while the tail shard does the
+most. The zigzag loader splits the sequence into 2*P chunks and gives shard
+p chunks (p, 2P-1-p), so every shard owns one "early" and one "late" chunk
+and the causal workload is balanced to within one chunk.
+
+Positions are carried explicitly through the attention (the mask is
+``pos_k <= pos_q``), so any assignment is *correct*; zigzag only changes the
+balance. These helpers are pure index manipulation usable both host-side
+(numpy, data pipeline) and trace-side (jnp).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def zigzag_positions(seq_len: int, num_shards: int) -> np.ndarray:
+    """Global token positions per shard, shape (num_shards, seq_len // num_shards).
+
+    Shard p owns chunks p and 2P-1-p of the 2P-chunk split, concatenated.
+    """
+    if seq_len % (2 * num_shards) != 0:
+        raise ValueError(
+            f"seq_len={seq_len} must be divisible by 2*num_shards={2 * num_shards}"
+        )
+    chunk = seq_len // (2 * num_shards)
+    pos = np.arange(seq_len, dtype=np.int32).reshape(2 * num_shards, chunk)
+    out = np.empty((num_shards, 2 * chunk), dtype=np.int32)
+    for p in range(num_shards):
+        out[p] = np.concatenate([pos[p], pos[2 * num_shards - 1 - p]])
+    return out
+
+
+def contiguous_positions(seq_len: int, num_shards: int) -> np.ndarray:
+    """Plain contiguous sharding (used for full/bidirectional masks)."""
+    if seq_len % num_shards != 0:
+        raise ValueError(f"seq_len={seq_len} % num_shards={num_shards} != 0")
+    return (
+        np.arange(seq_len, dtype=np.int32).reshape(num_shards, seq_len // num_shards)
+    )
+
+
+def make_positions(seq_len: int, num_shards: int, scheme: str) -> np.ndarray:
+    if scheme == "zigzag":
+        return zigzag_positions(seq_len, num_shards)
+    if scheme == "contiguous":
+        return contiguous_positions(seq_len, num_shards)
+    raise ValueError(f"unknown sharding scheme {scheme!r}")
+
+
+def permutation_for(positions: np.ndarray) -> np.ndarray:
+    """Flat permutation perm with x_sharded = x[perm] (host-side reorder).
+
+    `positions.reshape(-1)` IS that permutation: entry i of the flattened
+    sharded layout holds global token positions[i // S, i % S].
+    """
+    return positions.reshape(-1)
+
+
+def inverse_permutation_for(positions: np.ndarray) -> np.ndarray:
+    perm = permutation_for(positions)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(perm.size, dtype=perm.dtype)
+    return inv
+
+
+def shard_tokens(x: np.ndarray, positions: np.ndarray, axis: int = -1) -> np.ndarray:
+    """Reorder a (…, seq_len, …) array so an even split over `axis` realises
+    the given per-shard positions. Host-side (numpy)."""
+    perm = permutation_for(positions)
+    return np.take(x, perm, axis=axis)
+
+
+def unshard_tokens(x: np.ndarray, positions: np.ndarray, axis: int = -1) -> np.ndarray:
+    inv = inverse_permutation_for(positions)
+    return np.take(x, inv, axis=axis)
+
+
+def causal_workload(positions: np.ndarray, seq_len: int) -> np.ndarray:
+    """Number of (q, k) pairs each shard computes under a causal mask,
+    assuming it sees all keys (ring completes a full tour). Used by tests
+    and the load-balance benchmark."""
+    # each query at global position g attends to g+1 keys
+    return (positions.astype(np.int64) + 1).sum(axis=1)
+
+
+def balance_ratio(positions: np.ndarray, seq_len: int) -> float:
+    """max/mean causal workload across shards; 1.0 = perfectly balanced."""
+    w = causal_workload(positions, seq_len)
+    return float(w.max() / w.mean())

@@ -1,0 +1,115 @@
+"""Data pipeline: deterministic synthetic + memory-mapped file sources,
+zigzag/contiguous sequence layout, host-side prefetch.
+
+Determinism is a fault-tolerance feature: the sampler is a pure function of
+(seed, step), so a restore-from-checkpoint resumes the exact token stream
+with no data-state checkpointing, and an elastic re-plan (different DP
+width) re-shards the same global batch consistently.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import zigzag as zz
+
+
+class SyntheticLM:
+    """Deterministic synthetic next-token data (self-supervised layout)."""
+
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, *, seed: int = 0,
+                 seq_scheme: str = "zigzag", sp_size: int = 1):
+        self.cfg = cfg
+        self.shape = shape
+        self.seed = seed
+        self.scheme = seq_scheme
+        self.positions = zz.make_positions(shape.seq_len, sp_size, seq_scheme)
+        self.perm = self.positions.reshape(-1)
+
+    def _tokens(self, step: int) -> np.ndarray:
+        rng = np.random.Generator(np.random.Philox(key=self.seed + step))
+        b, s = self.shape.global_batch, self.shape.seq_len
+        # markov-ish stream so the loss is learnable (not pure noise)
+        base = rng.integers(0, self.cfg.vocab_size, size=(b, s // 8),
+                            dtype=np.int64)
+        toks = np.repeat(base, 8, axis=1)
+        noise = rng.integers(0, self.cfg.vocab_size, size=(b, s))
+        flip = rng.random((b, s)) < 0.1
+        toks = np.where(flip, noise, toks)
+        return toks.astype(np.int32)
+
+    def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+        toks = self._tokens(step)
+        labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        batch = {
+            "tokens": np.take(toks, self.perm, axis=1),
+            "labels": np.take(labels, self.perm, axis=1),
+        }
+        if self.cfg.frontend_stub is not None:
+            rng = np.random.Generator(np.random.Philox(key=99 + step))
+            batch["frontend_emb"] = rng.standard_normal(
+                (self.shape.global_batch, self.shape.seq_len,
+                 self.cfg.d_model), dtype=np.float32)
+        return batch
+
+
+class TokenFile:
+    """Memory-mapped packed-token file source (uint16/uint32 .bin)."""
+
+    def __init__(self, path: str, cfg: ModelConfig, shape: ShapeConfig, *,
+                 dtype=np.uint16, seq_scheme: str = "zigzag",
+                 sp_size: int = 1):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.cfg = cfg
+        self.shape = shape
+        self.perm = zz.make_positions(shape.seq_len, sp_size,
+                                      seq_scheme).reshape(-1)
+        self.tokens_per_batch = shape.global_batch * (shape.seq_len + 1)
+        self.num_batches = len(self.data) // self.tokens_per_batch
+        if self.num_batches == 0:
+            raise ValueError(f"{path}: too small for one batch")
+
+    def get_batch(self, step: int) -> Dict[str, np.ndarray]:
+        i = step % self.num_batches
+        flat = np.asarray(
+            self.data[i * self.tokens_per_batch:(i + 1) * self.tokens_per_batch],
+            dtype=np.int32)
+        b, s = self.shape.global_batch, self.shape.seq_len
+        chunk = flat.reshape(b, s + 1)
+        toks, labels = chunk[:, :-1], chunk[:, 1:]
+        return {
+            "tokens": np.take(toks, self.perm, axis=1),
+            "labels": np.take(labels, self.perm, axis=1),
+        }
+
+
+class Prefetcher:
+    """Background-thread prefetch of the next `depth` batches."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self.thread = threading.Thread(target=self._work, daemon=True)
+        self.thread.start()
+
+    def _work(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self.q.put((s, self.source.get_batch(s)), timeout=0.5)
+                s += 1
+            except queue.Full:
+                continue
+
+    def next(self):
+        return self.q.get()
+
+    def stop(self):
+        self._stop.set()

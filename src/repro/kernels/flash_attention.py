@@ -1,0 +1,376 @@
+"""Pallas TPU flash-attention kernels (the per-ring-step compute hot spot).
+
+TPU-native adaptation of the paper's FlashAttention usage: blocks are tiled
+for VMEM with MXU-aligned shapes (multiples of 128 on the matmul dims), the
+online-softmax statistics (m, l, acc) live in VMEM scratch that persists
+across the innermost (K/V-block) grid dimension, and fully-masked tiles are
+skipped with ``pl.when`` using the position metadata (this is what makes
+zigzag/causal and sliding-window cheap inside a ring step).
+
+Layouts match ``repro.kernels.ref``:
+    q (B, Sq, Hq, D); k, v (B, Sk, Hkv, D); o (B, Sq, Hq, D); lse (B, Hq, Sq)
+GQA is native: the K/V block index maps divide the query-head index by
+G = Hq // Hkv, so K/V tiles are never materialised per query head.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.py``
+(tests/test_kernels.py sweeps shapes/dtypes); compiled path targets TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.combine import NEG_INF
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+
+
+def _mask_tile(pos_q, pos_k, causal, window, prefix_len=None):
+    """(bq, bk) bool mask tile from position vectors; None = all visible."""
+    if not causal and window is None:
+        return None
+    pq = pos_q[:, None]
+    pk = pos_k[None, :]
+    m = jnp.ones((pos_q.shape[0], pos_k.shape[0]), dtype=jnp.bool_)
+    if causal:
+        cm = pk <= pq
+        if prefix_len is not None:
+            cm |= pk < prefix_len
+        m &= cm
+    if window is not None:
+        wm = (pq - pk) < window
+        if not causal:
+            wm &= (pk - pq) < window
+        if prefix_len is not None:
+            wm |= pk < prefix_len
+        m &= wm
+    return m
+
+
+def _tile_live(pos_q, pos_k, causal, window, prefix_len=None):
+    """Scalar: does this tile have any unmasked entry? (for pl.when skip)"""
+    live = jnp.bool_(True)
+    if causal:
+        live &= jnp.min(pos_k) <= jnp.max(pos_q)
+    if window is not None:
+        live &= (jnp.min(pos_q) - jnp.max(pos_k)) < window
+        if not causal:
+            live &= (jnp.min(pos_k) - jnp.max(pos_q)) < window
+    if prefix_len is not None:
+        live |= jnp.min(pos_k) < prefix_len
+    return live
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
+                o_ref, lse_ref,                              # outputs
+                acc_ref, m_ref, l_ref,                       # scratch
+                *, causal, window, scale, prefix_len, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos_q = pos_q_ref[...]
+    pos_k = pos_k_ref[...]
+
+    @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)   # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        mask = _mask_tile(pos_q, pos_k, causal, window, prefix_len)
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_cur <= NEG_INF / 2, 0.0, m_cur)
+        p = jnp.exp(s - m_safe[:, None])
+        if mask is not None:
+            p = p * mask
+        alpha = jnp.where(
+            m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        m = m_ref[...]
+        l = l_ref[...]
+        dead = m <= NEG_INF / 2
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(
+            dead, NEG_INF, jnp.where(dead, 0.0, m) + jnp.log(l_safe)
+        ).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "prefix_len", "block_q",
+                     "block_k", "interpret"),
+)
+def flash_attention_fwd(
+    q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
+    prefix_len=None, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+    interpret=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Block flash attention -> (o, lse). Same semantics as ref.block_attention."""
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    if Sq % block_q or Sk % block_k:
+        raise ValueError(f"{Sq=} % {block_q=} or {Sk=} % {block_k=} != 0")
+    n_q, n_k = Sq // block_q, Sk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    grid = (B, Hq, n_q, n_k)
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, scale=scale,
+        prefix_len=prefix_len, n_k=n_k)
+
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, iq, ik: (iq,)),
+            pl.BlockSpec((block_k,), lambda b, h, iq, ik: (ik,)),
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward: dq kernel (accumulate over K/V blocks)
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
+                   lse_ref, delta_ref, dq_ref, dq_acc, *, causal, window,
+                   scale, prefix_len, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    pos_q = pos_q_ref[...]
+    pos_k = pos_k_ref[...]
+
+    @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, :].astype(jnp.float32)
+        delta = delta_ref[0, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _mask_tile(pos_q, pos_k, causal, window, prefix_len)
+        if mask is not None:
+            # mask BEFORE exp: masked raw scores can exceed lse -> inf*0=NaN
+            s = jnp.where(mask, s, NEG_INF)
+        dead = lse <= NEG_INF / 2
+        p = jnp.exp(s - jnp.where(dead, 0.0, lse)[:, None])
+        p = jnp.where(dead[:, None], 0.0, p)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# backward: dk/dv kernel (accumulate over the G * n_q combined dimension)
+# ---------------------------------------------------------------------------
+
+def _bwd_dkv_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
+                    lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc,
+                    *, causal, window, scale, prefix_len, n_t):
+    it = pl.program_id(3)
+
+    @pl.when(it == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    pos_q = pos_q_ref[...]
+    pos_k = pos_k_ref[...]
+
+    @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        do = do_ref[0, :, 0, :].astype(jnp.float32)
+        lse = lse_ref[0, 0, :].astype(jnp.float32)
+        delta = delta_ref[0, 0, :].astype(jnp.float32)
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = _mask_tile(pos_q, pos_k, causal, window, prefix_len)
+        if mask is not None:
+            # mask BEFORE exp: masked raw scores can exceed lse -> inf*0=NaN
+            s = jnp.where(mask, s, NEG_INF)
+        dead = lse <= NEG_INF / 2
+        p = jnp.exp(s - jnp.where(dead, 0.0, lse)[:, None])
+        p = jnp.where(dead[:, None], 0.0, p)
+        # dv += p^T do ; ds = p (do v^T - delta) ; dk += ds^T q
+        dv_acc[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta[:, None]) * scale
+        dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                           preferred_element_type=jnp.float32)
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "prefix_len", "block_q",
+                     "block_k", "interpret"),
+)
+def flash_attention_bwd(
+    q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True, window=None,
+    scale=None, prefix_len=None, block_q=DEFAULT_BLOCK_Q,
+    block_k=DEFAULT_BLOCK_K, interpret=None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash backward for one (Q x K/V) block pair using the global lse.
+
+    Returns (dq, dk, dv) in float32 (shapes of q, k, v). Semantics match
+    ``ref.block_attention_bwd``.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
+
+    # ---- dq: grid (B, Hq, n_q, n_k), accumulate over ik ----
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, causal=causal, window=window,
+                          scale=scale, prefix_len=prefix_len, n_k=n_k),
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, iq, ik: (iq,)),
+            pl.BlockSpec((block_k,), lambda b, h, iq, ik: (ik,)),
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v, do, lse, delta)
+
+    # ---- dk/dv: grid (B, Hkv, n_k, G * n_q); t = g * n_q + iq ----
+    n_t = G * n_q
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, causal=causal, window=window,
+                          scale=scale, prefix_len=prefix_len, n_t=n_t),
+        grid=(B, Hkv, n_k, n_t),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda b, h, ik, t: (t % n_q,)),
+            pl.BlockSpec((block_k,), lambda b, h, ik, t: (ik,)),
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, ik, t: (b, t % n_q, h * G + t // n_q, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik, t: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik, t: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, ik, t: (b, t % n_q, h * G + t // n_q, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, ik, t: (b, h * G + t // n_q, t % n_q)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik, t: (b, ik, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ik, t: (b, ik, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_k, D), jnp.float32),
+            pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v, do, lse, delta)
+
+    return dq, dk, dv

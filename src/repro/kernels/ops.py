@@ -1,0 +1,77 @@
+"""Jit'd public wrappers for the Pallas kernels + backend dispatch.
+
+``flash_attention`` is a differentiable drop-in for
+``ref.block_attention(...)[0]`` wired through a custom VJP that calls the
+Pallas backward kernels. The StarTrail ring uses the fwd/bwd pair directly
+(it manages its own residuals across ring steps).
+
+On CPU the kernels run in interpret mode (Python-level execution of the
+kernel body) — correct but slow; production path is TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import ref as ref_kernels
+
+
+def flash_attention_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None,
+                        scale=None, prefix_len=None, block_q=None,
+                        block_k=None):
+    kw = {}
+    if block_q is not None:
+        kw["block_q"] = block_q
+    if block_k is not None:
+        kw["block_k"] = block_k
+    return fa.flash_attention_fwd(
+        q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
+        prefix_len=prefix_len, **kw)
+
+
+def flash_attention_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,
+                        window=None, scale=None, prefix_len=None,
+                        block_q=None, block_k=None):
+    kw = {}
+    if block_q is not None:
+        kw["block_q"] = block_q
+    if block_k is not None:
+        kw["block_k"] = block_k
+    return fa.flash_attention_bwd(
+        q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
+        scale=scale, prefix_len=prefix_len, **kw)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def flash_attention(q, k, v, pos_q, pos_k, causal=True, window=None,
+                    scale=None):
+    o, _ = flash_attention_fwd(q, k, v, pos_q, pos_k, causal=causal,
+                               window=window, scale=scale)
+    return o.astype(q.dtype)
+
+
+def _fa_fwd(q, k, v, pos_q, pos_k, causal, window, scale):
+    o, lse = flash_attention_fwd(q, k, v, pos_q, pos_k, causal=causal,
+                                 window=window, scale=scale)
+    return o.astype(q.dtype), (q, k, v, pos_q, pos_k, o, lse)
+
+
+def _fa_bwd(causal, window, scale, res, do):
+    q, k, v, pos_q, pos_k, o, lse = res
+    delta = jnp.einsum(
+        "bshd,bshd->bhs", do.astype(jnp.float32), o.astype(jnp.float32))
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
+        scale=scale)
+    zero_q = jnp.zeros_like(pos_q)
+    zero_k = jnp.zeros_like(pos_k)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            zero_q, zero_k)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,199 @@
+"""Pure-jnp reference (oracle) for block flash attention.
+
+These functions are the semantic ground truth for
+
+  * the Pallas TPU kernels in ``flash_attention.py`` (validated in
+    interpret mode against this file), and
+  * the per-ring-step block computation inside StarTrail attention
+    (``block_impl='ref'`` runs these under jit; XLA fuses them well enough
+    for the CPU dry-run, while the Pallas path is the TPU target).
+
+Conventions:
+  q        : (B, Sq, Hq, D)
+  k, v     : (B, Sk, Hkv, D), Hq = G * Hkv (GQA; G = 1 is MHA)
+  pos_q/k  : (Sq,) / (Sk,) int32 global token positions (masks are computed
+             from *positions*, so zigzag/contiguous layouts are both exact)
+  o        : (B, Sq, Hq, D)
+  lse      : (B, Hq, Sq)   float32 log-sum-exp of the masked scores
+
+All reductions/accumulations are float32 regardless of input dtype.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.combine import NEG_INF
+
+
+def make_mask(
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    prefix_len: Optional[int] = None,
+) -> Optional[jax.Array]:
+    """(Sq, Sk) boolean mask; None means fully visible.
+
+    prefix_len: prefix-LM (PaliGemma): keys with pos < prefix_len are
+    visible to every query (bidirectional prefix), the rest is causal.
+    """
+    if not causal and window is None:
+        return None
+    pq = pos_q[:, None]
+    pk = pos_k[None, :]
+    mask = jnp.ones((pos_q.shape[0], pos_k.shape[0]), dtype=bool)
+    if causal:
+        cm = pk <= pq
+        if prefix_len is not None:
+            cm |= pk < prefix_len
+        mask &= cm
+    if window is not None:
+        wm = (pq - pk) < window
+        if not causal:
+            wm &= (pk - pq) < window
+        if prefix_len is not None:
+            wm |= pk < prefix_len
+        mask &= wm
+    return mask
+
+
+def block_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prefix_len: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Masked attention of a (Q block x K/V block) pair -> (o, lse).
+
+    o is normalised within the block; (o, lse) pairs over disjoint key
+    blocks merge exactly via ``repro.core.combine.combine_pair``.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    if Hq % Hkv != 0:
+        raise ValueError(f"Hq={Hq} must be a multiple of Hkv={Hkv}")
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # scores: (B, Hkv, G, Sq, Sk)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    mask = make_mask(pos_q, pos_k, causal=causal, window=window,
+                     prefix_len=prefix_len)
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+    m = jnp.max(s, axis=-1)  # (B, Hkv, G, Sq)
+    dead = m <= NEG_INF / 2
+    m_safe = jnp.where(dead, 0.0, m)
+    p = jnp.exp(s - m_safe[..., None])
+    if mask is not None:
+        p = p * mask[None, None, None]
+    l = jnp.sum(p, axis=-1)  # (B, Hkv, G, Sq)
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf) / jnp.moveaxis(l_safe, (1, 2, 3), (2, 3, 1))[..., None]
+    lse = jnp.where(dead, NEG_INF, m_safe + jnp.log(l_safe))  # (B, Hkv, G, Sq)
+    return (
+        o.reshape(B, Sq, Hq, D),
+        lse.reshape(B, Hq, Sq),
+    )
+
+
+def block_attention_bwd(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    do: jax.Array,
+    lse: jax.Array,
+    delta: jax.Array,
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prefix_len: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash-attention backward for one (Q block x K/V block) pair.
+
+    Uses the *global* lse (over the full key set) and
+    delta_i = sum_d do_i * o_final_i, so each pair's contribution is the
+    exact partial derivative of full softmax attention:
+
+        p_ij = exp(s_ij - lse_i)            (true attention probabilities)
+        dv_j = sum_i p_ij do_i
+        ds_ij = p_ij (do_i . v_j - delta_i)
+        dq_i = scale * sum_j ds_ij k_j ;  dk_j = scale * sum_i ds_ij q_i
+
+    Shapes: do (B,Sq,Hq,D); lse, delta (B,Hq,Sq).
+    Returns (dq, dk, dv) in float32 with shapes of q, k, v.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    dof = do.astype(jnp.float32).reshape(B, Sq, Hkv, G, D)
+    lsef = lse.astype(jnp.float32).reshape(B, Hkv, G, Sq)
+    deltaf = delta.astype(jnp.float32).reshape(B, Hkv, G, Sq)
+
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf) * scale
+    mask = make_mask(pos_q, pos_k, causal=causal, window=window,
+                     prefix_len=prefix_len)
+    if mask is not None:
+        # mask BEFORE the exp: masked raw scores can exceed lse (which only
+        # covers unmasked entries), and exp would overflow to inf -> NaN
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    dead = lsef <= NEG_INF / 2
+    lse_safe = jnp.where(dead, 0.0, lsef)
+    p = jnp.exp(s - lse_safe[..., None])
+    p = jnp.where(dead[..., None], 0.0, p)
+
+    # (B, Hkv, G, Sq, Sk)
+    dp = jnp.einsum("bqhgd,bkhd->bhgqk", dof, vf)
+    ds = p * (dp - deltaf[..., None]) * scale
+
+    dq = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kf).reshape(B, Sq, Hq, D)
+    dk = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qf)
+    dv = jnp.einsum("bhgqk,bqhgd->bkhd", p, dof)
+    return dq, dk, dv
+
+
+def mha_reference(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prefix_len: Optional[int] = None,
+) -> jax.Array:
+    """Plain full (non-distributed) attention — end-to-end oracle."""
+    S = q.shape[1]
+    pos = positions if positions is not None else jnp.arange(S, dtype=jnp.int32)
+    o, _ = block_attention(
+        q, k, v, pos, pos, causal=causal, window=window, scale=scale,
+        prefix_len=prefix_len,
+    )
+    return o.astype(q.dtype)

@@ -1,0 +1,247 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each cell
+the full production step (train: fwd+bwd+AdamW; prefill / decode: serve
+step) is lowered with ShapeDtypeStruct stand-ins (zero allocation) onto the
+16x16 single-pod mesh and the 2x16x16 multi-pod mesh, compiled, and the
+compiled artifact's memory/cost analyses + collective schedule are recorded
+for the roofline analysis (results/dryrun/*.json).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--c 2]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, RunConfig
+from repro.dist import meshes
+from repro.launch.mesh import make_production_mesh
+from repro.models.factory import build_model
+from repro.optim import adamw
+from repro.roofline import hlo as hlo_lib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _compile_once(model, mesh, run_cfg, shape, cfg):
+    """Lower + compile the step for this shape kind; returns (lowered, compiled)."""
+    from repro.serve import kv_cache, step as serve_step
+    from repro.train import step as train_step
+
+    if shape.kind == "train":
+        acfg = adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+        jstep, _ = train_step.build_train_step(model, mesh, run_cfg, shape,
+                                               acfg)
+        params = model.abstract()
+        opt = adamw.abstract_state(params, acfg)
+        batch = model.input_specs(shape)
+        lowered = jstep.lower(params, opt, batch)
+    elif shape.kind == "prefill":
+        jstep, _ = serve_step.build_prefill_step(model, mesh, run_cfg, shape)
+        params = model.abstract()
+        batch = {k: v for k, v in model.input_specs(shape).items()
+                 if k != "labels"}
+        if cfg.encdec and "frontend_emb" not in batch:
+            batch["frontend_emb"] = jax.ShapeDtypeStruct(
+                (shape.global_batch, shape.seq_len, cfg.d_model),
+                jnp.dtype(cfg.param_dtype))
+        lowered = jstep.lower(params, batch)
+    else:  # decode
+        jstep, _ = serve_step.build_decode_step(model, mesh, run_cfg, shape)
+        params = model.abstract()
+        cache = kv_cache.cache_spec(cfg, shape.global_batch, shape.seq_len)
+        tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        lowered = jstep.lower(params, cache, tokens)
+    return lowered, lowered.compile()
+
+
+def _costs(compiled):
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = hlo_lib.collective_bytes(compiled.as_text())
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "coll_total": float(coll["total_bytes"]),
+        "coll_by_kind": coll["bytes_by_kind"],
+        "coll_counts": coll["count_by_kind"],
+    }
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               c: int = 2, rules: str = "default", remat: str = "attn_out",
+               placement: str = "team_inner"):
+    """Lower + compile one cell; exact cost accounting via two-point depth
+    extrapolation.
+
+    XLA's cost_analysis counts while-loop bodies once (not x trip count),
+    so the full-depth compile proves compile/memory while per-step costs
+    come from two shallow compiles (1 and 2 layer-periods) with all inner
+    scans (rings, vocab-CE chunks) unrolled:
+
+        cost(L) = cost(1) + (cost(2) - cost(1)) * (n_periods - 1)
+
+    which is exact for homogeneous periods (true by construction).
+    """
+    import dataclasses as dc
+
+    from repro.models import transformer
+
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = registry.shape_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    prod = make_production_mesh(multi_pod=multi_pod)
+    mesh = meshes.refine_mesh(prod, c=c, placement=placement)
+    run_cfg = RunConfig(c=c, multi_pod=multi_pod, sharding_rules=rules,
+                        remat=remat)
+
+    # ---- full-depth compile: proves the cell + memory analysis ----
+    model = build_model(cfg)
+    t0 = time.time()
+    lowered, compiled = _compile_once(model, mesh, run_cfg, shape, cfg)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    raw = _costs(compiled)
+
+    # ---- shallow unrolled compiles for exact per-step costs ----
+    period = len(transformer.layer_pattern(cfg))
+    n_periods = cfg.num_layers // period
+    run_u = dc.replace(run_cfg, unroll_scans=True)
+    shallow = []
+    for k in (1, 2):
+        kcfg = dc.replace(cfg, num_layers=k * period)
+        if cfg.encdec:
+            kcfg = dc.replace(kcfg, num_encoder_layers=k)
+        _, comp_k = _compile_once(build_model(kcfg), mesh, run_u, shape, kcfg)
+        shallow.append(_costs(comp_k))
+    c1, c2 = shallow
+
+    def extrap(key):
+        return c1[key] + (c2[key] - c1[key]) * (n_periods - 1)
+
+    coll_by_kind = {}
+    for kind in set(c1["coll_by_kind"]) | set(c2["coll_by_kind"]):
+        a = c1["coll_by_kind"].get(kind, 0)
+        b = c2["coll_by_kind"].get(kind, 0)
+        coll_by_kind[kind] = a + (b - a) * (n_periods - 1)
+
+    n_dev = 512 if multi_pod else 256
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "c": c,
+        "rules": rules,
+        "remat": remat,
+        "placement": placement,
+        "devices": n_dev,
+        "n_periods": n_periods,
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": extrap("flops"),
+        "bytes_accessed_per_device": extrap("bytes"),
+        "collectives": {
+            "total_bytes": extrap("coll_total"),
+            "bytes_by_kind": coll_by_kind,
+            "count_by_kind_one_period": c1["coll_counts"],
+        },
+        "raw_full_depth": raw,
+        "shallow": {"k1": c1, "k2": c2},
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+        },
+    }
+    return rec
+
+
+def run_and_save(arch, shape_name, **kw):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    tag = "multi" if kw.get("multi_pod") else "single"
+    c = kw.get("c", 2)
+    name = f"{arch}__{shape_name}__{tag}__c{c}"
+    if kw.get("rules", "default") != "default":
+        name += f"__{kw['rules']}"
+    if kw.get("placement", "team_inner") != "team_inner":
+        name += f"__{kw['placement']}"
+    if kw.get("remat", "attn_out") != "attn_out":
+        name += f"__remat_{kw['remat']}"
+    out = RESULTS / f"{name}.json"
+    try:
+        rec = lower_cell(arch, shape_name, **kw)
+        rec["status"] = "skipped" if rec.get("skipped") else "ok"
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": arch, "shape": shape_name, "status": "error",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-3000:], **kw}
+    out.write_text(json.dumps(rec, indent=2))
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        gb = rec["memory"]["peak_bytes_per_device"] / 2**30
+        extra = (f" peak={gb:.2f}GiB/dev flops={rec['flops_per_device']:.3g}"
+                 f" compile={rec['compile_s']}s")
+    print(f"[{status}] {name}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--c", type=int, default=2)
+    ap.add_argument("--rules", default="default")
+    ap.add_argument("--remat", default="attn_out")
+    ap.add_argument("--placement", default="team_inner")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in registry.ASSIGNED_ARCHS:
+            for sname in SHAPES:
+                cells.append((a, sname))
+    else:
+        cells.append((args.arch, args.shape))
+
+    meshes_to_run = [args.multi_pod]
+    if args.both_meshes:
+        meshes_to_run = [False, True]
+
+    n_bad = 0
+    for mp in meshes_to_run:
+        for a, sname in cells:
+            rec = run_and_save(a, sname, multi_pod=mp, c=args.c,
+                               rules=args.rules, remat=args.remat,
+                               placement=args.placement)
+            if rec.get("status") == "error":
+                n_bad += 1
+    if n_bad:
+        raise SystemExit(f"{n_bad} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Production mesh definition.
+
+``make_production_mesh`` builds the mandated device grid (a function, not a
+module-level constant, so importing this module never touches jax device
+state). The framework refines its 'model' axis into the StarTrail
+(sp_grp, sp_ring, sp_team) structure via ``repro.dist.meshes.refine_mesh``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

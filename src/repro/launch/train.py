@@ -1,0 +1,76 @@
+"""End-to-end training driver.
+
+On real hardware this runs the production mesh; on CPU use --devices to
+force host devices and a reduced config for a real multi-step run:
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --smoke --devices 8 --data 2 --c 1 --steps 20
+"""
+
+import argparse
+import os
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (CPU-runnable)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (CPU)")
+    ap.add_argument("--data", type=int, default=2)
+    ap.add_argument("--c", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--rules", default="default")
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.configs import registry
+    from repro.configs.base import SHAPES, RunConfig, ShapeConfig
+    from repro.dist import meshes
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.factory import build_model
+    from repro.optim import adamw
+    from repro.train import trainer as trainer_lib
+
+    if args.smoke:
+        cfg = registry.get_smoke(args.arch)
+        shape = ShapeConfig("smoke", seq_len=args.seq_len,
+                            global_batch=args.batch, kind="train")
+        r = args.devices // (args.data * args.c * args.c)
+        mesh = meshes.local_mesh_for_tests(c=args.c, r=r, data=args.data)
+    else:
+        cfg = registry.get(args.arch)
+        shape = SHAPES[args.shape]
+        prod = make_production_mesh(multi_pod=args.multi_pod)
+        mesh = meshes.refine_mesh(prod, c=args.c)
+
+    model = build_model(cfg)
+    run_cfg = RunConfig(c=args.c, multi_pod=args.multi_pod,
+                        sharding_rules=args.rules)
+    adam_cfg = adamw.AdamWConfig(learning_rate=args.lr, warmup_steps=5,
+                                 decay_steps=max(args.steps, 10),
+                                 state_dtype=cfg.opt_dtype)
+    tcfg = trainer_lib.TrainerConfig(
+        num_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
+        ckpt_dir=args.ckpt_dir, metrics_path=args.metrics, log_every=5)
+    metrics = trainer_lib.train(model, mesh, run_cfg, shape, adam_cfg, tcfg)
+    print(f"[train] done: {metrics}")
+    return metrics
+
+
+if __name__ == "__main__":
+    main()

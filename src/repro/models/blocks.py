@@ -1,0 +1,248 @@
+"""Composable transformer blocks (manual-SPMD aware via Runtime).
+
+All blocks follow the spec-first pattern: ``<block>_specs(cfg)`` declares
+parameters; ``<block>(rt, params, x, ...)`` applies them. Norms/residuals in
+float32; matmuls in the model's param dtype with f32 accumulation.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.runtime import Runtime
+from repro.models.spec import PSpec
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_specs(d: int):
+    return {"scale": PSpec((d,), ("embed_nosplit",), init="ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float = 10000.0):
+    """x: (B, S, H, D); positions: (S,) global token positions."""
+    B, S, H, D = x.shape
+    half = D // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (StarTrail inside)
+# ---------------------------------------------------------------------------
+
+def attention_specs(cfg: ModelConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    return {
+        "wq": PSpec((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((hq, hd, d), ("heads", "head_dim", "embed_out")),
+        "norm": rmsnorm_specs(d),
+    }
+
+
+def attention_block(rt: Runtime, params, x, cfg: ModelConfig, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    prefix_len: Optional[int] = None,
+                    return_kv: bool = False):
+    """Pre-norm attention with residual. x: (B, S_local, D)."""
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    wq = rt.dense(params["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(params["wk"], ("embed", "kv_heads", "head_dim"))
+    wv = rt.dense(params["wv"], ("embed", "kv_heads", "head_dim"))
+    wo = rt.dense(params["wo"], ("heads", "head_dim", "embed_out"))
+
+    q = jnp.einsum("bsd,dhk->bshk", h, wq)
+    k = jnp.einsum("bsd,dhk->bshk", h, wk)
+    v = jnp.einsum("bsd,dhk->bshk", h, wv)
+    pos = rt.positions(x.shape[1])
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+
+    o = rt.attention(q, k, v, causal=causal, window=window,
+                     prefix_len=prefix_len)
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    if return_kv:
+        return x + out, (k, v)
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# MLP: SwiGLU, Megatron-style TP over the model axes (ffn stays sharded;
+# activations all-gather over seq -> compute -> reduce-scatter back). In
+# 'fsdp' rules the weights are gathered instead and no activation comm runs.
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    return {
+        "w1": PSpec((d, f), ("embed", "ffn")),
+        "w3": PSpec((d, f), ("embed", "ffn")),
+        "w2": PSpec((f, d), ("ffn", "embed_out")),
+        "norm": rmsnorm_specs(d),
+    }
+
+
+def mlp_block(rt: Runtime, params, x, cfg: ModelConfig):
+    h = rmsnorm(params["norm"], x, cfg.norm_eps)
+    if rt.mode == "spmd" and rt.rules == "default":
+        # TP: gather tokens over the model axes, ffn dim stays sharded
+        w1 = rt.dense(params["w1"], ("embed", "ffn"))
+        w3 = rt.dense(params["w3"], ("embed", "ffn"))
+        w2 = rt.dense(params["w2"], ("ffn", "embed_out"))
+        hg = rt.all_gather_model(h, axis=1)              # (B, S_full_local, D)
+        u = jnp.einsum("bsd,df->bsf", hg, w1)
+        g = jnp.einsum("bsd,df->bsf", hg, w3)
+        a = jax.nn.silu(u.astype(jnp.float32)).astype(u.dtype) * g
+        o = jnp.einsum("bsf,fd->bsd", a, w2)
+        o = rt.psum_scatter_model(o, axis=1)             # back to seq-sharded
+    else:
+        w1 = rt.dense(params["w1"], ("embed", "ffn"))
+        w3 = rt.dense(params["w3"], ("embed", "ffn"))
+        w2 = rt.dense(params["w2"], ("ffn", "embed_out"))
+        u = jnp.einsum("bsd,df->bsf", h, w1)
+        g = jnp.einsum("bsd,df->bsf", h, w3)
+        a = jax.nn.silu(u.astype(jnp.float32)).astype(u.dtype) * g
+        o = jnp.einsum("bsf,fd->bsd", a, w2)
+    return x + o
+
+
+# ---------------------------------------------------------------------------
+# vocab-parallel embedding + logits/loss (Megatron-style over the SP axes)
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 32) -> int:
+    """Megatron-style vocab padding so the table shards evenly over the
+    model axes (e.g. seamless's 256206 -> 256224)."""
+    v = cfg.vocab_size
+    return ((v + multiple - 1) // multiple) * multiple
+
+
+def embedding_specs(cfg: ModelConfig):
+    # d^-0.5 scale keeps initial logits O(1) (the table doubles as the
+    # vocab-parallel LM head)
+    return {"table": PSpec((padded_vocab(cfg), cfg.d_model),
+                           ("vocab", "embed"), scale=cfg.d_model ** -0.5)}
+
+
+def _vocab_shard_lookup(rt: Runtime, table, ids):
+    """Look up ids in this shard's vocab slice (zeros outside). ids: any shape."""
+    v_local = table.shape[0]
+    lo = rt.sp_rank() * v_local
+    ids = ids - lo
+    in_range = (ids >= 0) & (ids < v_local)
+    ids = jnp.clip(ids, 0, v_local - 1)
+    return table[ids] * in_range[..., None].astype(table.dtype)
+
+
+def embed(rt: Runtime, params, tokens, cfg: ModelConfig, *,
+          tokens_replicated: bool = False):
+    """tokens: (B, S_local) int32 -> (B, S_local, D).
+
+    Vocab-parallel over the model axes. Tokens are *sequence-sharded*, so
+    each shard gathers all shards' token ids (tiny, int32), looks up the
+    ones in its vocab slice, and a reduce-scatter over the model axes both
+    sums the vocab-slice partials and returns each shard its own positions.
+    """
+    table = rt.dense(params["table"], ("vocab", "embed"))  # gather embed/data
+    if rt.mode == "local":
+        return table[tokens]
+    if tokens_replicated:  # decode path: same ids on every shard
+        return jax.lax.psum(_vocab_shard_lookup(rt, table, tokens), rt.sp_axes)
+    tokens_all = rt.all_gather_model(tokens, axis=1)     # (B, S_full)
+    out = _vocab_shard_lookup(rt, table, tokens_all)     # partial (B,S_f,D)
+    return rt.psum_scatter_model(out, axis=1)
+
+
+def lm_head_logits_and_loss(rt: Runtime, params, x, labels, cfg: ModelConfig,
+                            mask=None):
+    """Vocab-parallel cross-entropy. x: (B, S_local, D); labels (B, S_local).
+
+    Sequence is sharded and vocab is sharded over the *same* model axes, so
+    the loss runs chunk-by-chunk over the SP shards' activations: every
+    shard computes its vocab-slice logits for the current chunk, a psum
+    combines logsumexp/gold terms. Full logits are never materialised
+    (peak extra memory: B x S_local x V/P_model).
+    """
+    table = rt.dense(params["table"], ("vocab", "embed"))
+    tf32 = table.astype(jnp.float32)
+    if rt.mode == "local":
+        logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), tf32)
+        if table.shape[0] > cfg.vocab_size:  # mask padded vocab rows
+            logits = jnp.where(
+                jnp.arange(table.shape[0]) < cfg.vocab_size, logits,
+                -1e30)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        losses = logz - gold
+        if mask is not None:
+            losses = losses * mask
+            denom = jnp.sum(mask)
+        else:
+            denom = jnp.asarray(losses.size, jnp.float32)
+        return jnp.sum(losses) / denom
+
+    v_local = table.shape[0]
+    lo = rt.sp_rank() * v_local
+    x_all = rt.all_gather_sp_stack(x)                 # (Psp, B, S_l, D)
+    lab_all = rt.all_gather_sp_stack(labels)          # (Psp, B, S_l)
+    if mask is not None:
+        mask_all = rt.all_gather_sp_stack(mask)
+    else:
+        mask_all = jnp.ones(lab_all.shape, jnp.float32)
+
+    row_valid = (lo + jnp.arange(v_local)) < cfg.vocab_size
+
+    def body(acc, inp):
+        xi, li, mi = inp
+        logits = jnp.einsum("bsd,vd->bsv", xi.astype(jnp.float32), tf32)
+        logits = jnp.where(row_valid, logits, -1e30)  # padded vocab rows
+        m_loc = jnp.max(logits, axis=-1)
+        # stop_gradient *before* pmax: the logsumexp shift constant is
+        # gradient-invariant and pmax has no JVP rule, so it must not see
+        # a tangent-carrying input
+        m = jax.lax.pmax(jax.lax.stop_gradient(m_loc), rt.sp_axes)
+        se = jax.lax.psum(
+            jnp.sum(jnp.exp(logits - m[..., None]), axis=-1), rt.sp_axes)
+        logz = m + jnp.log(se)
+        ids = li - lo
+        in_range = (ids >= 0) & (ids < v_local)
+        ids = jnp.clip(ids, 0, v_local - 1)
+        gold_loc = jnp.take_along_axis(logits, ids[..., None], axis=-1)[..., 0]
+        gold = jax.lax.psum(gold_loc * in_range.astype(jnp.float32),
+                            rt.sp_axes)
+        losses = (logz - gold) * mi
+        return (acc[0] + jnp.sum(losses), acc[1] + jnp.sum(mi)), None
+
+    (total, denom), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (x_all, lab_all, mask_all),
+        unroll=x_all.shape[0] if rt.unroll_scans else 1)
+    # total/denom are identical on every SP shard; reduce over batch axes only
+    total = jax.lax.psum(total, tuple(rt.batch_axes))
+    denom = jax.lax.psum(denom, tuple(rt.batch_axes))
+    return total / denom

@@ -1,0 +1,134 @@
+"""Encoder-decoder model (seamless-m4t family).
+
+Encoder: full-mask StarTrail self-attention + MLP over frame embeddings
+(audio frontend stubbed — ``input_specs`` supplies the frames).
+Decoder: causal StarTrail self-attention + cross-attention + MLP.
+
+Cross-attention: encoder K/V are static across decoding, so each layer
+team-gathers them once over all SP axes (one all-gather, no ring — the
+degenerate-but-optimal StarTrail configuration for a static K/V set) and
+queries attend locally.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, spec
+from repro.models.runtime import Runtime
+from repro.kernels import ref as ref_kernels
+
+
+def cross_attention_specs(cfg: ModelConfig):
+    return blocks.attention_specs(cfg)
+
+
+def cross_attention_block(rt: Runtime, params, x, enc_kv, cfg: ModelConfig):
+    """x: (B, S_local, D) decoder; enc_kv: (B, S_local, D) encoder output."""
+    h = blocks.rmsnorm(params["norm"], x, cfg.norm_eps)
+    wq = rt.dense(params["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(params["wk"], ("embed", "kv_heads", "head_dim"))
+    wv = rt.dense(params["wv"], ("embed", "kv_heads", "head_dim"))
+    wo = rt.dense(params["wo"], ("heads", "head_dim", "embed_out"))
+
+    q = jnp.einsum("bsd,dhk->bshk", h, wq)
+    k = jnp.einsum("bsd,dhk->bshk", enc_kv, wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_kv, wv)
+    # static K/V: gather once over the SP axes (team gather, no ring)
+    k = rt.all_gather_model(k, axis=1)
+    v = rt.all_gather_model(v, axis=1)
+    s_q = q.shape[1]
+    pos_q = rt.positions(s_q)
+    pos_k = jnp.arange(k.shape[1], dtype=jnp.int32)  # order-free (full mask)
+    o, _ = ref_kernels.block_attention(q, k, v, pos_q, pos_k, causal=False)
+    o = o.astype(x.dtype)
+    return x + jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+def encdec_specs(cfg: ModelConfig):
+    enc_layer = {
+        "attn": blocks.attention_specs(cfg),
+        "mlp": blocks.mlp_specs(cfg),
+    }
+    dec_layer = {
+        "attn": blocks.attention_specs(cfg),
+        "cross": cross_attention_specs(cfg),
+        "mlp": blocks.mlp_specs(cfg),
+    }
+    return {
+        "frontend_proj": spec.PSpec((cfg.d_model, cfg.d_model),
+                                    ("embed_nosplit", "embed_out")),
+        "encoder": spec.stack_specs(enc_layer, cfg.num_encoder_layers),
+        "enc_norm": blocks.rmsnorm_specs(cfg.d_model),
+        "embed": blocks.embedding_specs(cfg),
+        "decoder": spec.stack_specs(dec_layer, cfg.num_layers),
+        "final_norm": blocks.rmsnorm_specs(cfg.d_model),
+        "lm_head": blocks.embedding_specs(cfg),
+    }
+
+
+def encdec_loss(rt: Runtime, params, batch, cfg: ModelConfig, *,
+                remat: str = "attn_out"):
+    """batch: {frontend_emb (B,S,D), tokens (B,S), labels (B,S)}."""
+    # ---- encoder (full mask) ----
+    fp = rt.dense(params["frontend_proj"], ("embed_nosplit", "embed_out"))
+    x = jnp.einsum("bsd,de->bse",
+                   batch["frontend_emb"].astype(fp.dtype), fp)
+
+    def enc_period(x, p):
+        x = blocks.attention_block(rt, p["attn"], x, cfg, causal=False)
+        x = checkpoint_name(x, "attn_out")
+        x = blocks.mlp_block(rt, p["mlp"], x, cfg)
+        return x, jnp.zeros((), jnp.float32)
+
+    def dec_period_fn(enc_out):
+        def dec_period(x, p):
+            x = blocks.attention_block(rt, p["attn"], x, cfg, causal=True)
+            x = checkpoint_name(x, "attn_out")
+            x = cross_attention_block(rt, p["cross"], x, enc_out, cfg)
+            x = checkpoint_name(x, "cross_out")
+            x = blocks.mlp_block(rt, p["mlp"], x, cfg)
+            return x, jnp.zeros((), jnp.float32)
+        return dec_period
+
+    policy = jax.checkpoint_policies.save_only_these_names(
+        "attn_out", "cross_out")
+    enc_fn = enc_period
+    if remat == "attn_out":
+        enc_fn = jax.checkpoint(enc_period, policy=policy)
+    elif remat == "full":
+        enc_fn = jax.checkpoint(enc_period)
+
+    def enc_body(c, p):
+        x, _ = enc_fn(c, p)
+        return x, None
+
+    n_enc = jax.tree.leaves(params["encoder"])[0].shape[0]
+    x, _ = jax.lax.scan(enc_body, x, params["encoder"],
+                        unroll=n_enc if rt.unroll_scans else 1)
+    enc_out = blocks.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+    # ---- decoder (causal + cross) ----
+    y = blocks.embed(rt, params["embed"], batch["tokens"], cfg)
+    dec_period = dec_period_fn(enc_out)
+    dec_fn = dec_period
+    if remat == "attn_out":
+        dec_fn = jax.checkpoint(dec_period, policy=policy)
+    elif remat == "full":
+        dec_fn = jax.checkpoint(dec_period)
+
+    def dec_body(c, p):
+        y, _ = dec_fn(c, p)
+        return y, None
+
+    n_dec = jax.tree.leaves(params["decoder"])[0].shape[0]
+    y, _ = jax.lax.scan(dec_body, y, params["decoder"],
+                        unroll=n_dec if rt.unroll_scans else 1)
+    y = blocks.rmsnorm(params["final_norm"], y, cfg.norm_eps)
+    return blocks.lm_head_logits_and_loss(rt, params["lm_head"], y,
+                                          batch["labels"], cfg)

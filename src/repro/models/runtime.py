@@ -1,0 +1,168 @@
+"""Runtime context threading mesh/axis/mode information through model code.
+
+Two modes:
+  * ``local``  — single device, no collectives (smoke tests, tiny runs).
+    Gathers are identity, attention is the jnp reference, positions are
+    ``arange``.
+  * ``spmd``   — inside one big ``shard_map`` over the refined mesh; all
+    communication is explicit (manual SPMD). Params arrive sharded per
+    ``dist.sharding`` rules; ``dense()`` gathers FSDP leaves on use (their
+    gradients reduce-scatter automatically via the all_gather transpose —
+    ZeRO-3 semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import startrail as st
+from repro.core import ulysses as ulysses_lib
+from repro.dist import sharding as shard_rules
+from repro.kernels import ref as ref_kernels
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mode: str                                  # 'local' | 'spmd'
+    st_cfg: st.StarTrailConfig
+    batch_axes: Tuple[str, ...] = ("data",)    # ('pod','data') multi-pod
+    rules: str = "default"
+    attention_impl: str = "startrail"          # 'startrail' | 'ulysses' | 'local'
+    unroll_scans: bool = False                 # dry-run cost accounting
+
+    # ---- axis info -----------------------------------------------------
+    @property
+    def sp_axes(self) -> Tuple[str, str, str]:
+        return tuple(self.st_cfg.axes)
+
+    def sp_size(self) -> int:
+        if self.mode == "local":
+            return 1
+        n = 1
+        for a in self.sp_axes:
+            n *= jax.lax.axis_size(a)
+        return n
+
+    def sp_rank(self) -> jax.Array:
+        if self.mode == "local":
+            return jnp.int32(0)
+        g, r, t = self.sp_axes
+        c = jax.lax.axis_size(t)
+        rr = jax.lax.axis_size(r)
+        return (jax.lax.axis_index(g) * rr + jax.lax.axis_index(r)) * c + jax.lax.axis_index(t)
+
+    def dp_size(self) -> int:
+        if self.mode == "local":
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= jax.lax.axis_size(a)
+        return n
+
+    # ---- positions -----------------------------------------------------
+    def positions(self, s_local: int) -> jax.Array:
+        """Global token positions of this shard's sequence slice."""
+        if self.mode == "local":
+            return jnp.arange(s_local, dtype=jnp.int32)
+        p = self.sp_size()
+        return st.shard_positions(
+            self.sp_rank(), s_local * p, p, self.st_cfg.seq_scheme)
+
+    def positions_contig(self, s_local: int) -> jax.Array:
+        """Contiguous positions (KV-cache layout), independent of scheme."""
+        if self.mode == "local":
+            return jnp.arange(s_local, dtype=jnp.int32)
+        return self.sp_rank() * s_local + jnp.arange(s_local, dtype=jnp.int32)
+
+    # ---- FSDP parameter gathering ---------------------------------------
+    def dense(self, leaf: jax.Array, axes: Tuple[Optional[str], ...]) -> jax.Array:
+        """Gather a parameter leaf's FSDP-sharded dims for dense use."""
+        if self.mode == "local":
+            return leaf
+        fsdp = shard_rules.fsdp_logical(self.rules)
+        rules = shard_rules.RULES[self.rules]
+        for dim, ax in enumerate(axes):
+            if ax in fsdp and rules.get(ax):
+                for mesh_ax in rules[ax]:
+                    leaf = jax.lax.all_gather(leaf, mesh_ax, axis=dim, tiled=True)
+        return leaf
+
+    # ---- collectives (no-ops in local mode) ------------------------------
+    def psum_model(self, x):
+        if self.mode == "local":
+            return x
+        return jax.lax.psum(x, self.sp_axes)
+
+    def psum_scatter_model(self, x, axis: int):
+        if self.mode == "local":
+            return x
+        g, r, t = self.sp_axes
+        for a in (g, r, t):
+            x = jax.lax.psum_scatter(x, a, scatter_dimension=axis, tiled=True)
+        return x
+
+    def all_gather_model(self, x, axis: int):
+        if self.mode == "local":
+            return x
+        g, r, t = self.sp_axes
+        for a in (t, r, g):  # inverse order so tiling matches scatter
+            x = jax.lax.all_gather(x, a, axis=axis, tiled=True)
+        return x
+
+    def psum_all(self, x):
+        if self.mode == "local":
+            return x
+        return jax.lax.psum(x, tuple(self.batch_axes) + self.sp_axes)
+
+    def all_to_all_data(self, x, split_axis: int, concat_axis: int):
+        if self.mode == "local":
+            return x
+        return jax.lax.all_to_all(x, "data", split_axis=split_axis,
+                                  concat_axis=concat_axis, tiled=True)
+
+    def ppermute_prev_shard(self, x):
+        """Receive x from the previous SP shard (linear order); shard 0
+        receives zeros. Used for conv halos / state passing."""
+        if self.mode == "local":
+            return jnp.zeros_like(x)
+        # build (src, dst) pairs: src p -> dst p+1
+        sizes = [jax.lax.axis_size(a) for a in self.sp_axes]
+        p = sizes[0] * sizes[1] * sizes[2]
+        perm = [(i, i + 1) for i in range(p - 1)]
+        return jax.lax.ppermute(x, self.sp_axes, perm)
+
+    def all_gather_sp_stack(self, x):
+        """Gather per-shard values into a leading SP dim (P, ...)."""
+        if self.mode == "local":
+            return x[None]
+        g, r, t = self.sp_axes
+        y = jax.lax.all_gather(x, t, axis=0, tiled=False)
+        y = jax.lax.all_gather(y, r, axis=0, tiled=False)
+        y = jax.lax.all_gather(y, g, axis=0, tiled=False)
+        # shape (G, R, T, ...) -> (P, ...) in linear rank order
+        return y.reshape((-1,) + x.shape)
+
+    # ---- attention -------------------------------------------------------
+    def attention(self, q, k, v, *, causal=None, window=None,
+                  prefix_len=None) -> jax.Array:
+        cfg = self.st_cfg
+        if causal is not None and causal != cfg.causal:
+            cfg = dataclasses.replace(cfg, causal=causal)
+        if window != cfg.window:
+            cfg = dataclasses.replace(cfg, window=window)
+        if prefix_len != cfg.prefix_len:
+            cfg = dataclasses.replace(cfg, prefix_len=prefix_len)
+        if self.mode == "local" or self.attention_impl == "local":
+            s = q.shape[1]
+            pos = self.positions(s)
+            o, _ = ref_kernels.block_attention(
+                q, k, v, pos, pos, causal=cfg.causal, window=cfg.window,
+                prefix_len=cfg.prefix_len)
+            return o.astype(q.dtype)
+        if self.attention_impl == "ulysses":
+            return ulysses_lib.ulysses_attention(q, k, v, cfg)
+        return st.startrail_attention(q, k, v, cfg)

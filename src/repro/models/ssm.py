@@ -1,0 +1,325 @@
+"""Sequence-mixing recurrences: Mamba (SSD form), mLSTM, sLSTM.
+
+All three share one primitive — a gated linear recurrence
+
+    h_t = a_t * h_{t-1} + k_t v_t^T ;   y_t = q_t . h_t
+
+computed in the chunked (SSD / gated-linear-attention) form: O(S * Lc)
+intra-chunk work + an O(S / Lc) inter-chunk scan, no per-token state
+materialisation. This is the TPU-friendly adaptation of Mamba's selective
+scan (see DESIGN.md): MXU-shaped matmuls instead of a sequential kernel.
+
+Sequence parallelism: shards compute locally with h0 = 0, then exchange
+per-shard (final state, total decay) summaries — a single gather of tiny
+state tensors — and add the linear h0-correction term. This applies the
+paper's hierarchical-communication insight to the recurrence instead of a
+P-step serial chain (StarTrail's K/V ring is attention-specific).
+Requires *contiguous* sequence sharding (enforced by the factory for
+ssm/hybrid archs).
+
+sLSTM (nonlinear recurrence, not scannable in parallel) keeps shard-local
+state during training — documented approximation; decode is exact.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig, XLSTMConfig
+from repro.models import blocks
+from repro.models.runtime import Runtime
+from repro.models.spec import PSpec
+
+
+# ---------------------------------------------------------------------------
+# the shared chunked gated linear recurrence
+# ---------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, log_decay, chunk: int):
+    """Chunked gated linear attention.
+
+    q, k: (B, S, H, N); v: (B, S, H, P); log_decay: (B, S, H), entries <= 0.
+    Returns:
+      y       (B, S, H, P)  with h0 = 0
+      h_fin   (B, H, N, P)  final state
+      ld_tot  (B, H)        total log decay over the shard
+      la      (B, S, H)     inclusive cumulative log decay (for h0 correction)
+    """
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+    Lc = min(chunk, S)
+    if S % Lc:
+        raise ValueError(f"S={S} % chunk={Lc}")
+    nc = S // Lc
+    qc = q.astype(jnp.float32).reshape(B, nc, Lc, H, N)
+    kc = k.astype(jnp.float32).reshape(B, nc, Lc, H, N)
+    vc = v.astype(jnp.float32).reshape(B, nc, Lc, H, P)
+    ld = log_decay.astype(jnp.float32).reshape(B, nc, Lc, H)
+    la = jnp.cumsum(ld, axis=2)                      # inclusive within chunk
+
+    # intra-chunk: y_intra[i] = sum_{j<=i} exp(la_i - la_j) (q_i.k_j) v_j
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", qc, kc)    # (B,nc,H,Lc,Lc)
+    decay = la[..., :, None, :] - la[..., None, :, :]    # (B,nc,Lc,Lc,H)
+    decay = jnp.moveaxis(decay, -1, 2)                   # (B,nc,H,Lc,Lc)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    w = jnp.where(tri, jnp.exp(jnp.where(tri, decay, 0.0)), 0.0)
+    y_intra = jnp.einsum("bchlm,bcmhp->bclhp", scores * w, vc)
+
+    # chunk summaries: state_c = sum_j exp(la_L - la_j) k_j v_j^T
+    wk = jnp.exp(la[:, :, -1:, :] - la)                  # (B,nc,Lc,H)
+    state_c = jnp.einsum("bclhn,bclh,bclhp->bchnp", kc, wk, vc)
+    ld_chunk = la[:, :, -1, :]                           # (B,nc,H)
+
+    # inter-chunk scan: h after chunk c
+    def step(h, inp):
+        s_c, ldc = inp
+        h_in = h
+        h = h * jnp.exp(ldc)[..., None, None] + s_c
+        return h, h_in
+
+    h0 = jnp.zeros((B, H, N, P), jnp.float32)
+    h_fin, h_ins = jax.lax.scan(
+        step, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(ld_chunk, 1, 0)))
+    h_ins = jnp.moveaxis(h_ins, 0, 1)                    # (B,nc,H,N,P)
+
+    # inter-chunk contribution: y_inter[i] = exp(la_i) q_i . h_in(chunk)
+    y_inter = jnp.einsum("bclhn,bclh,bchnp->bclhp", qc, jnp.exp(la), h_ins)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    ld_tot = jnp.sum(log_decay.astype(jnp.float32), axis=1)   # (B,H)
+    la_full = la.reshape(B, S, H)
+    # make la cumulative across chunks too
+    chunk_off = jnp.concatenate(
+        [jnp.zeros((B, 1, H), jnp.float32), jnp.cumsum(ld_chunk, axis=1)[:, :-1]],
+        axis=1)
+    la_full = (la + chunk_off[:, :, None, :]).reshape(B, S, H)
+    return y, h_fin, ld_tot, la_full
+
+
+def cross_shard_correction(rt: Runtime, q, la_full, h_fin, ld_tot):
+    """Add the h0 term from preceding SP shards (contiguous sharding).
+
+    q: (B, S, H, N); la_full: (B, S, H); h_fin: (B, H, N, P); ld_tot: (B, H).
+    Returns the correction y_corr (B, S, H, P) and this shard's true final
+    state (for serving) -- in local mode both are the trivial values.
+    """
+    if rt.mode == "local":
+        return jnp.zeros(q.shape[:3] + (h_fin.shape[-1],), jnp.float32), h_fin
+    stacked_h = rt.all_gather_sp_stack(h_fin)        # (Psp, B, H, N, P)
+    stacked_ld = rt.all_gather_sp_stack(ld_tot)      # (Psp, B, H)
+    psp = stacked_ld.shape[0]
+    rank = rt.sp_rank()
+    cs = jnp.cumsum(stacked_ld, axis=0)              # inclusive
+    # weight for shard p' (< rank): exp(sum_{p''=p'+1..rank-1} ld[p''])
+    #   = exp(cs[rank-1] - cs[p'])
+    cs_prev = jnp.where(rank > 0, cs[jnp.maximum(rank - 1, 0)], 0.0)
+    idx = jnp.arange(psp)
+    valid = (idx < rank)[:, None, None]
+    # mask BEFORE the exp: entries at/after this shard have positive
+    # exponents that overflow to inf (then inf*0 -> NaN in the vjp)
+    delta = jnp.where(valid, cs_prev[None] - cs, -jnp.inf)
+    w = jnp.exp(delta)                               # (Psp, B, H)
+    h0 = jnp.einsum("pbh,pbhnq->bhnq", w, stacked_h)
+    y_corr = jnp.einsum("bshn,bsh,bhnq->bshq", q.astype(jnp.float32),
+                        jnp.exp(la_full), h0)
+    h_true = h0 * jnp.exp(ld_tot)[..., None, None] + h_fin
+    return y_corr, h_true
+
+
+# ---------------------------------------------------------------------------
+# Mamba (SSD) mixer
+# ---------------------------------------------------------------------------
+
+def mamba_specs(cfg: ModelConfig):
+    m = cfg.mamba or MambaConfig()
+    d = cfg.d_model
+    di = m.expand * d
+    hm = di // m.head_dim
+    n = m.d_state
+    return {
+        "in_proj": PSpec((d, 2 * di + 2 * n + hm), ("embed", "mamba_inner")),
+        "conv_w": PSpec((m.d_conv, di), ("conv", "mamba_inner"),
+                        scale=m.d_conv ** -0.5),
+        "A_log": PSpec((hm,), ("state",), init="zeros"),
+        "dt_bias": PSpec((hm,), ("state",), init="zeros"),
+        "D_skip": PSpec((hm,), ("state",), init="ones"),
+        "norm_in": blocks.rmsnorm_specs(d),
+        "norm": {"scale": PSpec((di,), ("embed_nosplit",), init="ones")},
+        "out_proj": PSpec((di, d), ("mamba_inner", "embed_out")),
+    }
+
+
+def _causal_conv(rt: Runtime, x, w, *, halo_exchange: bool = True):
+    """Depthwise causal conv across shard boundaries. x (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    if halo_exchange:
+        halo = rt.ppermute_prev_shard(x[:, -(K - 1):])
+    else:
+        halo = jnp.zeros_like(x[:, : K - 1])
+    pad = jnp.concatenate([halo, x], axis=1)
+    S = x.shape[1]
+    out = jnp.zeros_like(x, shape=x.shape).astype(jnp.float32)
+    for o in range(K):
+        out = out + pad[:, o:o + S].astype(jnp.float32) * w[o].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _from_last_shard(rt: Runtime, x):
+    """Broadcast the last SP shard's value to all shards (for decode caches)."""
+    if rt.mode == "local":
+        return x
+    is_last = rt.sp_rank() == rt.sp_size() - 1
+    return jax.lax.psum(jnp.where(is_last, x, jnp.zeros_like(x)), rt.sp_axes)
+
+
+def mamba_block(rt: Runtime, params, x, cfg: ModelConfig,
+                return_state: bool = False):
+    """Pre-norm Mamba(SSD) mixer with residual. x: (B, S_local, D)."""
+    m = cfg.mamba or MambaConfig()
+    B, S, D = x.shape
+    di = m.expand * D
+    hm = di // m.head_dim
+    n = m.d_state
+
+    h = blocks.rmsnorm(params["norm_in"], x, cfg.norm_eps)
+    proj = rt.dense(params["in_proj"], ("embed", "mamba_inner"))
+    u = jnp.einsum("bsd,dx->bsx", h, proj)
+    xin, z, Bc, Cc, dt_raw = jnp.split(
+        u, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    xin = _causal_conv(rt, xin, params["conv_w"])
+    xin = jax.nn.silu(xin.astype(jnp.float32))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,Hm)
+    log_decay = -jnp.exp(params["A_log"].astype(jnp.float32)) * dt
+
+    xh = xin.reshape(B, S, hm, m.head_dim)
+    v = xh * dt[..., None]
+    q = jnp.broadcast_to(Cc.astype(jnp.float32)[:, :, None, :], (B, S, hm, n))
+    k = jnp.broadcast_to(Bc.astype(jnp.float32)[:, :, None, :], (B, S, hm, n))
+
+    y, h_fin, ld_tot, la = chunked_gla(q, k, v, log_decay, m.chunk)
+    y_corr, h_true = cross_shard_correction(rt, q, la, h_fin, ld_tot)
+    y = y + y_corr
+    y = y + params["D_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = blocks.rmsnorm(params["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out_proj = rt.dense(params["out_proj"], ("mamba_inner", "embed_out"))
+    out = x + jnp.einsum("bsx,xd->bsd", y, out_proj)
+    if return_state:
+        # cache = (conv tail, final SSM state), both from the LAST SP shard
+        conv_tail = _from_last_shard(rt, xin.astype(x.dtype)[:, -(m.d_conv - 1):])
+        state = _from_last_shard(rt, h_true)
+        return out, {"conv": conv_tail, "state": state}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mLSTM mixer (xLSTM matrix memory)
+# ---------------------------------------------------------------------------
+
+def mlstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    hq = cfg.num_heads
+    dk = d // hq
+    return {
+        "wq": PSpec((d, hq, dk), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, hq, dk), ("embed", "heads", "head_dim")),
+        "wv": PSpec((d, hq, dk), ("embed", "heads", "head_dim")),
+        "wi": PSpec((d, hq), ("embed", "heads"), scale=d ** -0.5),
+        "wf": PSpec((d, hq), ("embed", "heads"), scale=d ** -0.5),
+        "wo": PSpec((hq, dk, d), ("heads", "head_dim", "embed_out")),
+        "norm": blocks.rmsnorm_specs(d),
+    }
+
+
+def mlstm_block(rt: Runtime, params, x, cfg: ModelConfig,
+                return_state: bool = False):
+    xc = cfg.xlstm or XLSTMConfig()
+    B, S, D = x.shape
+    h = blocks.rmsnorm(params["norm"], x, cfg.norm_eps)
+    wq = rt.dense(params["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(params["wk"], ("embed", "heads", "head_dim"))
+    wv = rt.dense(params["wv"], ("embed", "heads", "head_dim"))
+    wi = rt.dense(params["wi"], ("embed", "heads"))
+    wf = rt.dense(params["wf"], ("embed", "heads"))
+    wo = rt.dense(params["wo"], ("heads", "head_dim", "embed_out"))
+
+    dk = wq.shape[-1]
+    q = jnp.einsum("bsd,dhk->bshk", h, wq) * dk ** -0.5
+    k = jnp.einsum("bsd,dhk->bshk", h, wk)
+    v = jnp.einsum("bsd,dhk->bshk", h, wv)
+    ig = jax.nn.sigmoid(jnp.einsum("bsd,dh->bsh", h, wi).astype(jnp.float32))
+    log_decay = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", h, wf).astype(jnp.float32))
+
+    k = k.astype(jnp.float32) * ig[..., None]      # fold input gate into k
+    v_aug = jnp.concatenate(                        # extra channel: normaliser
+        [v.astype(jnp.float32), jnp.ones(v.shape[:3] + (1,), jnp.float32)],
+        axis=-1)
+    y_aug, h_fin, ld_tot, la = chunked_gla(
+        q.astype(jnp.float32), k, v_aug, log_decay, xc.chunk)
+    y_corr, h_true = cross_shard_correction(rt, q.astype(jnp.float32), la,
+                                            h_fin, ld_tot)
+    y_aug = y_aug + y_corr
+    y, ndot = y_aug[..., :-1], y_aug[..., -1]
+    y = y / jnp.maximum(jnp.abs(ndot), 1.0)[..., None]
+    out = jnp.einsum("bshk,hkd->bsd", y.astype(x.dtype), wo)
+    if return_state:
+        return x + out, {"state": _from_last_shard(rt, h_true)}
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# sLSTM mixer (shard-local recurrence; exact at decode time)
+# ---------------------------------------------------------------------------
+
+def slstm_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    hq = cfg.num_heads
+    dh = d // hq
+    return {
+        "wx": PSpec((d, 4 * d), ("embed", "mamba_inner")),
+        "r": PSpec((hq, dh, 4 * dh), ("heads", "head_dim", None),
+                   scale=dh ** -0.5),
+        "norm": blocks.rmsnorm_specs(d),
+        # square (d, d): only the output dim carries the FSDP axis
+        "wo": PSpec((d, d), ("embed_nosplit", "embed_out")),
+    }
+
+
+def slstm_block(rt: Runtime, params, x, cfg: ModelConfig,
+                return_state: bool = False):
+    B, S, D = x.shape
+    hq = cfg.num_heads
+    dh = D // hq
+    h = blocks.rmsnorm(params["norm"], x, cfg.norm_eps)
+    wx = rt.dense(params["wx"], ("embed", "mamba_inner"))
+    r = params["r"].astype(jnp.float32)
+    wo = rt.dense(params["wo"], ("embed_nosplit", "embed_out"))
+
+    gates_x = jnp.einsum("bsd,dg->bsg", h, wx).astype(jnp.float32)
+    gates_x = gates_x.reshape(B, S, hq, 4 * dh)
+
+    def step(carry, gx):
+        hs, cs = carry                                    # (B, hq, dh)
+        gr = jnp.einsum("bhk,hkg->bhg", hs, r)
+        z, i, f, o = jnp.split(gx + gr, 4, axis=-1)
+        cs = jax.nn.sigmoid(f) * cs + jax.nn.sigmoid(i) * jnp.tanh(z)
+        hs = jax.nn.sigmoid(o) * jnp.tanh(cs)
+        return (hs, cs), hs
+
+    init = (jnp.zeros((B, hq, dh), jnp.float32),) * 2
+    (hs, cs), ys = jax.lax.scan(step, init, jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D).astype(x.dtype)
+    out = x + jnp.einsum("bsd,de->bse", y, wo)
+    if return_state:
+        return out, {"h": _from_last_shard(rt, hs),
+                     "c": _from_last_shard(rt, cs)}
+    return out

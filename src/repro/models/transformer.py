@@ -1,0 +1,177 @@
+"""Decoder LM assembly: pattern-based layer stack, scan-over-periods, remat.
+
+Heterogeneous architectures (MoE interleave, Jamba's 1:7 attn:mamba, xLSTM's
+7:1 mLSTM:sLSTM) are expressed as a repeating *period* of sub-layers; the
+stack scans over ``num_layers / period`` period instances with stacked
+params (one lowering of the period body — keeps dry-run HLO small).
+
+Remat policy 'attn_out' is the paper's DistFlashAttn-style placement: the
+attention output is checkpointed so backward never recomputes the ring
+attention forward.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, moe, spec, ssm
+from repro.models.runtime import Runtime
+
+
+# ---------------------------------------------------------------------------
+# layer pattern
+# ---------------------------------------------------------------------------
+
+def layer_pattern(cfg: ModelConfig) -> List[Tuple[str, Optional[str]]]:
+    """The repeating (mixer, mlp) period of the architecture."""
+    period = 1
+    if cfg.moe is not None:
+        period = max(period, cfg.moe.every_n_layers)
+    if cfg.family == "hybrid":
+        period = max(period, cfg.attn_every)
+        if cfg.moe is not None:
+            import math
+
+            period = math.lcm(cfg.attn_every, cfg.moe.every_n_layers)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        period = max(period, cfg.xlstm.slstm_every)
+    if cfg.num_layers % period:
+        raise ValueError(f"{cfg.num_layers=} not divisible by {period=}")
+    pat = []
+    for i in range(period):
+        mixer = cfg.mixer_on_layer(i)
+        if cfg.d_ff == 0 and cfg.moe is None:
+            mlp = None                      # xLSTM blocks have no FFN
+        elif cfg.moe_on_layer(i):
+            mlp = "moe"
+        else:
+            mlp = "mlp"
+        pat.append((mixer, mlp))
+    return pat
+
+
+def _sublayer_specs(cfg: ModelConfig, mixer: str, mlp: Optional[str]):
+    s: Dict[str, object] = {}
+    if mixer == "attn":
+        s["mixer"] = blocks.attention_specs(cfg)
+    elif mixer == "mamba":
+        s["mixer"] = ssm.mamba_specs(cfg)
+    elif mixer == "mlstm":
+        s["mixer"] = ssm.mlstm_specs(cfg)
+    elif mixer == "slstm":
+        s["mixer"] = ssm.slstm_specs(cfg)
+    else:
+        raise ValueError(mixer)
+    if mlp == "mlp":
+        s["mlp"] = blocks.mlp_specs(cfg)
+    elif mlp == "moe":
+        s["mlp"] = moe.moe_specs(cfg)
+    return s
+
+
+def stack_specs(cfg: ModelConfig, num_layers: Optional[int] = None):
+    pat = layer_pattern(cfg)
+    n_layers = num_layers or cfg.num_layers
+    n_periods = n_layers // len(pat)
+    period_specs = {f"sub{i}": _sublayer_specs(cfg, mx, ml)
+                    for i, (mx, ml) in enumerate(pat)}
+    return spec.stack_specs(period_specs, n_periods)
+
+
+def _apply_sublayer(rt: Runtime, p, x, cfg: ModelConfig, mixer: str,
+                    mlp: Optional[str], *, causal: bool, prefix_len):
+    aux = {}
+    if mixer == "attn":
+        x = blocks.attention_block(rt, p["mixer"], x, cfg, causal=causal,
+                                   window=cfg.window, prefix_len=prefix_len)
+        x = checkpoint_name(x, "attn_out")
+    elif mixer == "mamba":
+        x = ssm.mamba_block(rt, p["mixer"], x, cfg)
+    elif mixer == "mlstm":
+        x = ssm.mlstm_block(rt, p["mixer"], x, cfg)
+    elif mixer == "slstm":
+        x = ssm.slstm_block(rt, p["mixer"], x, cfg)
+    if mlp == "mlp":
+        x = blocks.mlp_block(rt, p["mlp"], x, cfg)
+    elif mlp == "moe":
+        x, aux = moe.moe_block(rt, p["mlp"], x, cfg)
+    return x, aux
+
+
+def apply_stack(rt: Runtime, stack_params, x, cfg: ModelConfig, *,
+                causal: bool = True, prefix_len=None, remat: str = "attn_out",
+                num_layers: Optional[int] = None):
+    """x: (B, S_local, D) -> (B, S_local, D). Returns (x, aux_losses)."""
+    pat = layer_pattern(cfg)
+
+    def period_fn(x, p):
+        aux_tot = jnp.zeros((), jnp.float32)
+        for i, (mx, ml) in enumerate(pat):
+            x, aux = _apply_sublayer(rt, p[f"sub{i}"], x, cfg, mx, ml,
+                                     causal=causal, prefix_len=prefix_len)
+            if aux:
+                aux_tot = aux_tot + 0.01 * aux["moe_lb"] + 1e-3 * aux["moe_z"]
+        return x, aux_tot
+
+    if remat == "attn_out":
+        period_fn = jax.checkpoint(
+            period_fn,
+            policy=jax.checkpoint_policies.save_only_these_names("attn_out"))
+    elif remat == "full":
+        period_fn = jax.checkpoint(period_fn)
+
+    def body(carry, p):
+        x, aux = carry
+        x, a = period_fn(x, p)
+        return (x, aux + a), None
+
+    n_periods = jax.tree.leaves(stack_params)[0].shape[0]
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stack_params,
+                               unroll=n_periods if rt.unroll_scans else 1)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# decoder LM
+# ---------------------------------------------------------------------------
+
+def lm_specs(cfg: ModelConfig):
+    s = {
+        "embed": blocks.embedding_specs(cfg),
+        "stack": stack_specs(cfg),
+        "final_norm": blocks.rmsnorm_specs(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = blocks.embedding_specs(cfg)
+    return s
+
+
+def lm_loss(rt: Runtime, params, batch, cfg: ModelConfig, *,
+            remat: str = "attn_out"):
+    """batch: {tokens, labels[, frontend_emb]} (per-shard inside shard_map,
+    global in local mode). Returns scalar mean loss (+ aux)."""
+    tokens = batch["tokens"]
+    x = blocks.embed(rt, params["embed"], tokens, cfg)
+    prefix_len = None
+    loss_mask = None
+    if cfg.frontend_stub is not None and "frontend_emb" in batch:
+        prefix_len = int(cfg.prefix_len_frac * rt.st_cfg.seq_len)
+        pos = rt.positions(tokens.shape[1])
+        is_prefix = (pos < prefix_len)[None, :, None]
+        x = jnp.where(is_prefix, batch["frontend_emb"].astype(x.dtype), x)
+        loss_mask = 1.0 - is_prefix[..., 0].astype(jnp.float32)
+        loss_mask = jnp.broadcast_to(loss_mask, tokens.shape)
+    x, aux = apply_stack(rt, params["stack"], x, cfg, causal=True,
+                         prefix_len=prefix_len, remat=remat)
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    loss = blocks.lm_head_logits_and_loss(rt, head, x, batch["labels"], cfg,
+                                          mask=loss_mask)
+    return loss + aux

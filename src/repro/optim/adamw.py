@@ -1,0 +1,112 @@
+"""AdamW with sharded state (ZeRO-style: moments mirror the param layout).
+
+Pure elementwise given pre-reduced grads, so it runs in GSPMD-land outside
+the train-step island with the same PartitionSpecs as the parameters; XLA
+keeps every moment shard-local (this *is* ZeRO: no replication anywhere).
+State dtype is configurable (fp32 default; bf16 for the >=398B archs so one
+v5e pod fits — see configs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: Optional[float] = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+    decay_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+def init_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(params_abstract, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {
+        "mu": jax.tree.map(sds, params_abstract),
+        "nu": jax.tree.map(sds, params_abstract),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def state_partition(param_partition):
+    from jax.sharding import PartitionSpec as P
+
+    return {
+        "mu": param_partition,
+        "nu": param_partition,
+        "step": P(),
+    }
+
+
+def schedule(step, cfg: AdamWConfig):
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((s - cfg.warmup_steps) /
+                 jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.learning_rate * warm * cos
+
+
+def global_norm(grads):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(step, cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.ones((), jnp.float32)
+    if cfg.grad_clip is not None:
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu32 = mu.astype(jnp.float32) * b1 + (1 - b1) * g
+        nu32 = nu.astype(jnp.float32) * b2 + (1 - b2) * g * g
+        mhat = mu32 / bc1
+        vhat = nu32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                mu32.astype(sdt), nu32.astype(sdt))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,94 @@
+"""HLO collective parsing: per-device collective bytes from compiled text.
+
+``cost_analysis`` has FLOPs and memory-bytes but no collective traffic, so
+we parse the compiled HLO and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (+ their
+-start async forms). Shapes in HLO are the *per-device* (already
+partitioned) shapes, so the sums are per-device bytes moved per step —
+exactly what the roofline's collective term needs.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %ag = bf16[2,512,64]{2,1,0} all-gather(%x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<shape>[a-z0-9]+\[[0-9,]*\]))[^=]*?\s"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    b = _DTYPE_BYTES.get(dtype, 4)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+def _tuple_bytes(line: str) -> int:
+    """Result bytes for the op on this line.
+
+    Async ``-start`` ops return a tuple (input-alias, output[, scratch]):
+    only the *output* buffer is traffic, so for tuple results we subtract
+    the first (input-alias) shape from the tuple total.
+    """
+    lhs = line.split("=", 1)[1]
+    for op in _COLLECTIVES:
+        idx = lhs.find(op)
+        if idx >= 0:
+            lhs = lhs[:idx]
+            break
+    shapes = [_shape_bytes(m.group(0)) for m in _SHAPE_RE.finditer(lhs)]
+    if not shapes:
+        return 0
+    is_tuple = lhs.strip().startswith("(")
+    if is_tuple and len(shapes) >= 2:
+        return sum(shapes) - shapes[0]
+    return sum(shapes)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, object]:
+    """Per-op-kind per-device byte counts + op counts from HLO text."""
+    by_kind_bytes: Dict[str, int] = defaultdict(int)
+    by_kind_count: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if "=" not in stripped:
+            continue
+        # skip -done ops (the -start carries the shapes; avoid double count)
+        if "-done(" in stripped:
+            continue
+        for op in _COLLECTIVES:
+            if f" {op}(" in stripped or f" {op}-start(" in stripped:
+                by_kind_bytes[op] += _tuple_bytes(stripped)
+                by_kind_count[op] += 1
+                break
+    total = sum(by_kind_bytes.values())
+    return {
+        "total_bytes": total,
+        "bytes_by_kind": dict(by_kind_bytes),
+        "count_by_kind": dict(by_kind_count),
+    }

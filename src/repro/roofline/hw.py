@@ -1,0 +1,8 @@
+"""TPU v5e hardware constants (the target platform for this build)."""
+
+PEAK_FLOPS_BF16 = 197e12       # per chip, bf16
+HBM_BW = 819e9                 # bytes/s per chip
+ICI_BW_PER_LINK = 50e9         # bytes/s per ICI link (given constant)
+CHIPS_PER_POD = 256
+VMEM_BYTES = 128 * 2**20       # ~128 MiB VMEM per chip
+HBM_BYTES = 16 * 2**30         # 16 GiB HBM per chip

@@ -1,0 +1,122 @@
+"""Serving caches: SP-sharded KV cache + SSM layer states.
+
+Layouts (global shapes; shardings in brackets):
+  attention : k, v (B, S_cache, Hkv, D)      [batch over data, S over SP]
+  mamba     : conv (B, K-1, di)              [batch over data]
+              state (B, Hm, N, P)            [batch over data]
+  mlstm     : state (B, H, dk, dv+1)         [batch over data]
+  slstm     : h, c (B, H, dh)                [batch over data]
+
+SSM states are small (no sequence dim) and stay batch-sharded only; the KV
+cache carries the sequence dim and shards over the SP axes (contiguous
+layout). For global_batch=1 long-context decode the batch axes are empty
+(replicated) — all parallelism comes from the SP-sharded cache.
+
+Cache arrays are sized at *capacity* (a multiple of the SP degree, e.g.
+``seq_len``); the decode step treats slots [0, cache_len) as filled
+(cache_len = capacity - 1 for the dry-run shapes) and writes the new token
+at slot ``cache_len`` on its owning SP shard.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.dist.sharding import SP_AXES
+from repro.models import transformer
+
+
+def _attn_cache_spec(cfg: ModelConfig, b: int, s: int, dtype):
+    hd = cfg.head_dim_
+    return {
+        "k": jax.ShapeDtypeStruct((b, s, cfg.num_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((b, s, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _mamba_cache_spec(cfg: ModelConfig, b: int, dtype):
+    m = cfg.mamba or MambaConfig()
+    di = m.expand * cfg.d_model
+    hm = di // m.head_dim
+    return {
+        "conv": jax.ShapeDtypeStruct((b, m.d_conv - 1, di), dtype),
+        "state": jax.ShapeDtypeStruct((b, hm, m.d_state, m.head_dim),
+                                      jnp.float32),
+    }
+
+
+def _mlstm_cache_spec(cfg: ModelConfig, b: int):
+    dk = cfg.d_model // cfg.num_heads
+    return {"state": jax.ShapeDtypeStruct(
+        (b, cfg.num_heads, dk, dk + 1), jnp.float32)}
+
+
+def _slstm_cache_spec(cfg: ModelConfig, b: int):
+    dh = cfg.d_model // cfg.num_heads
+    return {
+        "h": jax.ShapeDtypeStruct((b, cfg.num_heads, dh), jnp.float32),
+        "c": jax.ShapeDtypeStruct((b, cfg.num_heads, dh), jnp.float32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, batch: int, capacity: int):
+    """Abstract cache tree: {'stack': {subN: ...} period-stacked[, 'enc_out']}."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat = transformer.layer_pattern(cfg)
+    n_periods = cfg.num_layers // len(pat)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_periods,) + s.shape, s.dtype),
+            tree)
+
+    subs = {}
+    for i, (mixer, _) in enumerate(pat):
+        if mixer == "attn":
+            sub = _attn_cache_spec(cfg, batch, capacity, dtype)
+        elif mixer == "mamba":
+            sub = _mamba_cache_spec(cfg, batch, dtype)
+        elif mixer == "mlstm":
+            sub = _mlstm_cache_spec(cfg, batch)
+        else:
+            sub = _slstm_cache_spec(cfg, batch)
+        subs[f"sub{i}"] = stack(sub)
+    out = {"stack": subs}
+    if cfg.encdec:
+        out["enc_out"] = jax.ShapeDtypeStruct(
+            (batch, capacity, cfg.d_model), dtype)
+    return out
+
+
+def cache_partition_for(cfg: ModelConfig, batch_axes: Tuple[str, ...]):
+    """PartitionSpec tree matching cache_spec (leading dim = period stack)."""
+    b = tuple(batch_axes) if batch_axes else None
+    pat = transformer.layer_pattern(cfg)
+    subs = {}
+    for i, (mixer, _) in enumerate(pat):
+        if mixer == "attn":
+            sub = {"k": P(None, b, SP_AXES, None, None),
+                   "v": P(None, b, SP_AXES, None, None)}
+        elif mixer == "mamba":
+            sub = {"conv": P(None, b, None, None),
+                   "state": P(None, b, None, None, None)}
+        elif mixer == "mlstm":
+            sub = {"state": P(None, b, None, None, None)}
+        else:
+            sub = {"h": P(None, b, None, None), "c": P(None, b, None, None)}
+        subs[f"sub{i}"] = sub
+    out = {"stack": subs}
+    if cfg.encdec:
+        out["enc_out"] = P(b, SP_AXES, None)
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    """Concrete zero cache (smoke tests / examples)."""
+    spec = cache_spec(cfg, batch, capacity)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)

@@ -1,0 +1,447 @@
+"""Serving: prefill and decode steps (manual SPMD, same island style as
+training).
+
+decode: one new token per sequence against the SP-sharded KV cache.
+  * attention -> per-shard partial attention + global lse-combine psum
+    (``core.startrail.decode_attention``): for M=1 queries the concentric
+    ring degenerates to a reduction, which is the communication-optimal
+    configuration.
+  * mamba/mlstm/slstm -> single-step recurrences on the cached state.
+  * vocab-parallel greedy sampling (local top-1 + global argmax combine;
+    full logits are never gathered).
+
+prefill: the full forward pass with cache write-out per layer (attention
+K/V sharded in place; SSM states via the cross-shard-corrected final state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MambaConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.core import startrail as st
+from repro.dist import sharding as shard_rules
+from repro.models import blocks, moe as moe_lib, ssm, transformer
+from repro.models.factory import Model
+from repro.models.runtime import Runtime
+from repro.serve import kv_cache
+from repro.train import step as train_step
+
+
+# ---------------------------------------------------------------------------
+# per-mixer decode updates
+# ---------------------------------------------------------------------------
+
+def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len: int):
+    """x: (B, 1, D) replicated over SP; cache k/v (B, S_loc, Hkv, hd)."""
+    h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
+    wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(p["wk"], ("embed", "kv_heads", "head_dim"))
+    wv = rt.dense(p["wv"], ("embed", "kv_heads", "head_dim"))
+    wo = rt.dense(p["wo"], ("heads", "head_dim", "embed_out"))
+
+    pos_new = jnp.array([cache_len], jnp.int32)
+    q = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wq), pos_new, cfg.rope_theta)
+    k_new = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wk), pos_new, cfg.rope_theta)
+    v_new = jnp.einsum("bsd,dhk->bshk", h, wv)
+
+    s_loc = cache["k"].shape[1]
+    pos_k = rt.positions_contig(s_loc)
+    # append the new K/V into its owning shard's slot
+    slot = cache_len  # global slot index == position
+    local_slot = slot - (rt.sp_rank() if rt.mode == "spmd" else 0) * s_loc
+    write = (jnp.arange(s_loc) == local_slot)[None, :, None, None]
+    k_cache = jnp.where(write, k_new.astype(cache["k"].dtype), cache["k"])
+    v_cache = jnp.where(write, v_new.astype(cache["v"].dtype), cache["v"])
+
+    cfg_st = dataclasses.replace(
+        rt.st_cfg, causal=True, window=cfg.window, prefix_len=None)
+    valid = (pos_k <= cache_len)[None, :]
+    # hide unfilled slots by pushing their positions beyond the query
+    pos_k_masked = jnp.where(pos_k <= cache_len, pos_k, cache_len + 1)
+    if rt.mode == "local":
+        from repro.kernels import ref as ref_kernels
+
+        o, _ = ref_kernels.block_attention(
+            q, k_cache, v_cache, pos_new, pos_k_masked,
+            causal=True, window=cfg.window)
+        o = o.astype(x.dtype)
+    else:
+        o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k_masked,
+                                valid, cfg_st)
+    out = jnp.einsum("bshk,hkd->bsd", o, wo)
+    return x + out, {"k": k_cache, "v": v_cache}
+
+
+def _mamba_decode(rt: Runtime, p, x, cache, cfg: ModelConfig):
+    m = cfg.mamba or MambaConfig()
+    B = x.shape[0]
+    D = cfg.d_model
+    di = m.expand * D
+    hm = di // m.head_dim
+    n = m.d_state
+
+    h = blocks.rmsnorm(p["norm_in"], x, cfg.norm_eps)
+    proj = rt.dense(p["in_proj"], ("embed", "mamba_inner"))
+    u = jnp.einsum("bsd,dx->bsx", h, proj)
+    xin, z, Bc, Cc, dt_raw = jnp.split(
+        u, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv = cache["conv"]                       # (B, K-1, di)
+    window = jnp.concatenate([conv, xin], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    xc = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)[:, None]
+    xc = jax.nn.silu(xc)
+    conv_new = window[:, 1:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,1,Hm)
+    decay = jnp.exp(-jnp.exp(p["A_log"].astype(jnp.float32)) * dt)[:, 0]
+    xh = xc.reshape(B, hm, m.head_dim)
+    v = xh * dt[:, 0, :, None]
+    state = cache["state"]                     # (B, Hm, N, P)
+    state = state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bc[:, 0].astype(jnp.float32), v)
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), state)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = blocks.rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    out_proj = rt.dense(p["out_proj"], ("mamba_inner", "embed_out"))
+    return x + jnp.einsum("bsx,xd->bsd", y, out_proj), {
+        "conv": conv_new, "state": state}
+
+
+def _mlstm_decode(rt: Runtime, p, x, cache, cfg: ModelConfig):
+    B = x.shape[0]
+    h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
+    wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(p["wk"], ("embed", "heads", "head_dim"))
+    wv = rt.dense(p["wv"], ("embed", "heads", "head_dim"))
+    wi = rt.dense(p["wi"], ("embed", "heads"))
+    wf = rt.dense(p["wf"], ("embed", "heads"))
+    wo = rt.dense(p["wo"], ("heads", "head_dim", "embed_out"))
+    dk = wq.shape[-1]
+
+    q = jnp.einsum("bsd,dhk->bhk", h[:, :1], wq)[:, None][:, 0] * dk ** -0.5
+    k = jnp.einsum("bsd,dhk->bhk", h[:, :1], wk)
+    v = jnp.einsum("bsd,dhk->bhk", h[:, :1], wv)
+    ig = jax.nn.sigmoid(jnp.einsum("bsd,dh->bh", h[:, :1], wi).astype(jnp.float32))
+    f = jax.nn.sigmoid(jnp.einsum("bsd,dh->bh", h[:, :1], wf).astype(jnp.float32))
+
+    k = k.astype(jnp.float32) * ig[..., None]
+    v_aug = jnp.concatenate(
+        [v.astype(jnp.float32), jnp.ones((B, v.shape[1], 1), jnp.float32)], -1)
+    state = cache["state"]                      # (B, H, dk, dv+1)
+    state = state * f[..., None, None] + k[..., :, None] * v_aug[..., None, :]
+    y_aug = jnp.einsum("bhk,bhkp->bhp", q.astype(jnp.float32), state)
+    y, ndot = y_aug[..., :-1], y_aug[..., -1]
+    y = y / jnp.maximum(jnp.abs(ndot), 1.0)[..., None]
+    out = jnp.einsum("bhk,hkd->bd", y.astype(x.dtype), wo)[:, None]
+    return x + out, {"state": state}
+
+
+def _slstm_decode(rt: Runtime, p, x, cache, cfg: ModelConfig):
+    B = x.shape[0]
+    hq = cfg.num_heads
+    dh = cfg.d_model // hq
+    h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
+    wx = rt.dense(p["wx"], ("embed", "mamba_inner"))
+    r = p["r"].astype(jnp.float32)
+    wo = rt.dense(p["wo"], ("embed_nosplit", "embed_out"))
+
+    gx = jnp.einsum("bsd,dg->bg", h[:, :1], wx).astype(jnp.float32)
+    gx = gx.reshape(B, hq, 4 * dh)
+    hs, cs = cache["h"], cache["c"]
+    gr = jnp.einsum("bhk,hkg->bhg", hs, r)
+    z, i, f, o = jnp.split(gx + gr, 4, axis=-1)
+    cs = jax.nn.sigmoid(f) * cs + jax.nn.sigmoid(i) * jnp.tanh(z)
+    hs = jax.nn.sigmoid(o) * jnp.tanh(cs)
+    y = hs.reshape(B, 1, cfg.d_model).astype(x.dtype)
+    return x + jnp.einsum("bsd,de->bse", y, wo), {"h": hs, "c": cs}
+
+
+def _cross_decode(rt: Runtime, p, x, enc_out, cfg: ModelConfig):
+    """Cross-attention for one decoder token vs the full encoder output."""
+    from repro.kernels import ref as ref_kernels
+
+    h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
+    wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(p["wk"], ("embed", "kv_heads", "head_dim"))
+    wv = rt.dense(p["wv"], ("embed", "kv_heads", "head_dim"))
+    wo = rt.dense(p["wo"], ("heads", "head_dim", "embed_out"))
+    q = jnp.einsum("bsd,dhk->bshk", h, wq)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, wk)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, wv)
+    s_loc = k.shape[1]
+    pos_k = rt.positions_contig(s_loc)
+    pos_q = jnp.array([0], jnp.int32)
+    if rt.mode == "local":
+        o, _ = ref_kernels.block_attention(q, k, v, pos_q, pos_k, causal=False)
+        o = o.astype(x.dtype)
+    else:
+        cfg_st = dataclasses.replace(rt.st_cfg, causal=False, window=None)
+        valid = jnp.ones(k.shape[:2], bool)
+        o = st.decode_attention(q, k, v, pos_q, pos_k, valid, cfg_st)
+    return x + jnp.einsum("bshk,hkd->bsd", o, wo)
+
+
+# ---------------------------------------------------------------------------
+# full decode step
+# ---------------------------------------------------------------------------
+
+def lm_decode_step(rt: Runtime, params, cache, tokens, cfg: ModelConfig,
+                   cache_len: int):
+    """tokens: (B, 1) int32 (replicated across SP). Returns (next_token,
+    new_cache). Greedy vocab-parallel sampling."""
+    pat = transformer.layer_pattern(cfg)
+    x = blocks.embed(rt, params["embed"], tokens, cfg, tokens_replicated=True)
+
+    def period_fn(x, p_and_cache):
+        p, c = p_and_cache
+        new_c = {}
+        for i, (mixer, mlp) in enumerate(pat):
+            sub_p, sub_c = p[f"sub{i}"], c[f"sub{i}"]
+            if mixer == "attn":
+                x, nc = _attn_decode(rt, sub_p["mixer"], x, sub_c, cfg,
+                                     cache_len)
+            elif mixer == "mamba":
+                x, nc = _mamba_decode(rt, sub_p["mixer"], x, sub_c, cfg)
+            elif mixer == "mlstm":
+                x, nc = _mlstm_decode(rt, sub_p["mixer"], x, sub_c, cfg)
+            else:
+                x, nc = _slstm_decode(rt, sub_p["mixer"], x, sub_c, cfg)
+            new_c[f"sub{i}"] = nc
+            if mlp == "mlp":
+                x = blocks.mlp_block(rt, sub_p["mlp"], x, cfg)
+            elif mlp == "moe":
+                x, _ = moe_lib.moe_block(rt, sub_p["mlp"], x, cfg)
+        return x, new_c
+
+    n_p = jax.tree.leaves(params["stack"])[0].shape[0]
+    x, new_subs = jax.lax.scan(period_fn, x, (params["stack"], cache["stack"]),
+                               unroll=n_p if rt.unroll_scans else 1)
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    next_tok = vocab_parallel_greedy(rt, head, x, cfg)
+    return next_tok, {"stack": new_subs}
+
+
+def vocab_parallel_greedy(rt: Runtime, head_params, x, cfg: ModelConfig):
+    """Greedy next token without gathering full logits: local top-1 over this
+    shard's vocab slice, then a global argmax via psum of one-hot winners."""
+    table = rt.dense(head_params["table"], ("vocab", "embed"))
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))[:, 0]       # (B, v_loc)
+    v_local = table.shape[0]
+    lo0 = (rt.sp_rank() * v_local) if rt.mode == "spmd" else 0
+    logits = jnp.where((lo0 + jnp.arange(v_local)) < cfg.vocab_size,
+                       logits, -1e30)                          # padded rows
+    loc_max = jnp.max(logits, axis=-1)
+    loc_arg = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if rt.mode == "local":
+        return loc_arg[:, None]
+    lo = lo0
+    g_max = jax.lax.pmax(loc_max, rt.sp_axes)
+    winner = (loc_max >= g_max).astype(jnp.int32)
+    # ties broken toward the lowest shard: keep first winner
+    tok = jax.lax.psum(jnp.where(winner > 0, loc_arg + lo, 0), rt.sp_axes)
+    cnt = jax.lax.psum(winner, rt.sp_axes)
+    tok = tok // jnp.maximum(cnt, 1)
+    return tok[:, None]
+
+
+def encdec_decode_step(rt: Runtime, params, cache, tokens,
+                       cfg: ModelConfig, cache_len: int):
+    """Decoder-side decode step with static encoder output in the cache."""
+    enc_out = cache["enc_out"]
+    x = blocks.embed(rt, params["embed"], tokens, cfg, tokens_replicated=True)
+
+    def period_fn(x, pc):
+        p, c = pc
+        x, nc = _attn_decode(rt, p["attn"], x, c, cfg, cache_len)
+        x = _cross_decode(rt, p["cross"], x, enc_out, cfg)
+        x = blocks.mlp_block(rt, p["mlp"], x, cfg)
+        return x, nc
+
+    n_p = jax.tree.leaves(params["decoder"])[0].shape[0]
+    x, new_sub = jax.lax.scan(period_fn, x,
+                              (params["decoder"], cache["stack"]["sub0"]),
+                              unroll=n_p if rt.unroll_scans else 1)
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    next_tok = vocab_parallel_greedy(rt, params["lm_head"], x, cfg)
+    return next_tok, {"stack": {"sub0": new_sub}, "enc_out": enc_out}
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+
+def batch_axes_for(shape: ShapeConfig, mesh, multi_pod: bool):
+    """Shard batch over (pod, data) when divisible, else replicate (B=1
+    long-context decode gets all its parallelism from the SP axes)."""
+    axes = ("pod", "data") if multi_pod else ("data",)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return axes if shape.global_batch % n == 0 else ()
+
+
+def build_decode_step(model: Model, mesh, run_cfg: RunConfig,
+                      shape: ShapeConfig):
+    """Jitted decode step over the production mesh + input/cache specs."""
+    cfg = model.cfg
+    cache_len = shape.seq_len - 1
+    b_axes = batch_axes_for(shape, mesh, run_cfg.multi_pod)
+    rt = dataclasses.replace(
+        train_step.make_runtime(model, run_cfg, shape, mode="spmd"),
+        batch_axes=b_axes)
+    # decode caches are contiguous-sharded
+    rt = dataclasses.replace(
+        rt, st_cfg=dataclasses.replace(rt.st_cfg, seq_scheme="contiguous"))
+
+    param_specs = model.partition(run_cfg.sharding_rules)
+    cache_specs_tree = kv_cache.cache_partition_for(cfg, b_axes)
+    tok_spec = P(tuple(b_axes) if b_axes else None, None)
+
+    if cfg.encdec:
+        def island(params, cache, tokens):
+            return encdec_decode_step(rt, params, cache, tokens, cfg,
+                                      cache_len)
+    else:
+        def island(params, cache, tokens):
+            return lm_decode_step(rt, params, cache, tokens, cfg, cache_len)
+
+    fn = jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(param_specs, cache_specs_tree, tok_spec),
+        out_specs=(tok_spec, cache_specs_tree),
+        check_vma=False)
+    return jax.jit(fn), dict(rt=rt, cache_len=cache_len,
+                             cache_specs=cache_specs_tree,
+                             param_specs=param_specs, tok_spec=tok_spec)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def lm_prefill(rt: Runtime, params, batch, cfg: ModelConfig):
+    """Full forward pass over the prompt, collecting the serving cache.
+
+    batch: {tokens (B, S)[, frontend_emb]}. Returns (next_token, cache).
+    Attention K/V stay SP-sharded in place (contiguous layout); SSM states
+    come from the cross-shard-corrected final state of the last shard.
+    """
+    pat = transformer.layer_pattern(cfg)
+    tokens = batch["tokens"]
+    x = blocks.embed(rt, params["embed"], tokens, cfg)
+    prefix_len = None
+    if cfg.frontend_stub is not None and "frontend_emb" in batch:
+        prefix_len = int(cfg.prefix_len_frac * rt.st_cfg.seq_len)
+        pos = rt.positions(tokens.shape[1])
+        is_prefix = (pos < prefix_len)[None, :, None]
+        x = jnp.where(is_prefix, batch["frontend_emb"].astype(x.dtype), x)
+
+    def period_fn(x, p):
+        caches = {}
+        for i, (mixer, mlp) in enumerate(pat):
+            sub = p[f"sub{i}"]
+            if mixer == "attn":
+                x, (k, v) = blocks.attention_block(
+                    rt, sub["mixer"], x, cfg, causal=True, window=cfg.window,
+                    prefix_len=prefix_len, return_kv=True)
+                caches[f"sub{i}"] = {"k": k, "v": v}
+            elif mixer == "mamba":
+                x, st_c = ssm.mamba_block(rt, sub["mixer"], x, cfg,
+                                          return_state=True)
+                caches[f"sub{i}"] = st_c
+            elif mixer == "mlstm":
+                x, st_c = ssm.mlstm_block(rt, sub["mixer"], x, cfg,
+                                          return_state=True)
+                caches[f"sub{i}"] = st_c
+            else:
+                x, st_c = ssm.slstm_block(rt, sub["mixer"], x, cfg,
+                                          return_state=True)
+                caches[f"sub{i}"] = st_c
+            if mlp == "mlp":
+                x = blocks.mlp_block(rt, sub["mlp"], x, cfg)
+            elif mlp == "moe":
+                x, _ = moe_lib.moe_block(rt, sub["mlp"], x, cfg)
+        return x, caches
+
+    n_p = jax.tree.leaves(params["stack"])[0].shape[0]
+    x, cache = jax.lax.scan(period_fn, x, params["stack"],
+                            unroll=n_p if rt.unroll_scans else 1)
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params.get("lm_head", params["embed"])
+    # next token from the LAST position: the last SP shard's final slot
+    # (contiguous layout); broadcast its hidden state then sample.
+    last = x[:, -1:, :]
+    if rt.mode == "spmd":
+        is_last = rt.sp_rank() == rt.sp_size() - 1
+        last = jax.lax.psum(
+            jnp.where(is_last, last, jnp.zeros_like(last)), rt.sp_axes)
+    next_tok = vocab_parallel_greedy(rt, head, last, cfg)
+    return next_tok, {"stack": cache}
+
+
+def encdec_prefill(rt: Runtime, params, batch, cfg: ModelConfig):
+    """Encoder forward + empty decoder cache (seamless serving entry)."""
+    from repro.models import encdec as encdec_lib
+    from jax.ad_checkpoint import checkpoint_name
+
+    fp = rt.dense(params["frontend_proj"], ("embed_nosplit", "embed_out"))
+    x = jnp.einsum("bsd,de->bse", batch["frontend_emb"].astype(fp.dtype), fp)
+
+    def enc_body(x, p):
+        x = blocks.attention_block(rt, p["attn"], x, cfg, causal=False)
+        x = blocks.mlp_block(rt, p["mlp"], x, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(enc_body, x, params["encoder"])
+    enc_out = blocks.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+    return enc_out
+
+
+def build_prefill_step(model: Model, mesh, run_cfg: RunConfig,
+                       shape: ShapeConfig):
+    """Jitted prefill over the production mesh."""
+    cfg = model.cfg
+    b_axes = batch_axes_for(shape, mesh, run_cfg.multi_pod)
+    rt = dataclasses.replace(
+        train_step.make_runtime(model, run_cfg, shape, mode="spmd"),
+        batch_axes=b_axes)
+    rt = dataclasses.replace(
+        rt, st_cfg=dataclasses.replace(rt.st_cfg, seq_scheme="contiguous"))
+
+    param_specs = model.partition(run_cfg.sharding_rules)
+    seq = shard_rules.SP_AXES
+    b = tuple(b_axes) if b_axes else None
+    batch_specs = {"tokens": P(b, seq)}
+    if cfg.frontend_stub is not None:
+        batch_specs["frontend_emb"] = P(b, seq, None)
+    tok_spec = P(b, None)
+
+    if cfg.encdec:
+        def island(params, batch):
+            return encdec_prefill(rt, params, batch, cfg)
+
+        out_specs = P(b, seq, None)
+    else:
+        def island(params, batch):
+            return lm_prefill(rt, params, batch, cfg)
+
+        cache_part = kv_cache.cache_partition_for(cfg, b_axes)
+        out_specs = (tok_spec, {"stack": cache_part["stack"]})
+
+    fn = jax.shard_map(island, mesh=mesh, in_specs=(param_specs, batch_specs),
+                       out_specs=out_specs, check_vma=False)
+    return jax.jit(fn), dict(rt=rt, batch_specs=batch_specs,
+                             param_specs=param_specs)

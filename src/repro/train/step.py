@@ -1,0 +1,120 @@
+"""Train-step builder: one shard_map island for loss+grads, AdamW outside.
+
+The island is the whole model forward/backward (manual SPMD: StarTrail
+attention rings, FSDP gathers, vocab-parallel CE, MoE all-to-alls — every
+collective explicit). Gradients leave the island fully reduced (all_gather
+transposes reduce-scatter over ``data``; replicated params psum over the
+batch axes, including ``pod`` — so only the gradient reduction crosses the
+DCI boundary, overlapped by XLA with backward compute). The optimizer is
+pure elementwise on identically-sharded trees (ZeRO: every moment stays
+shard-local).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core.startrail import StarTrailConfig
+from repro.dist import sharding as shard_rules
+from repro.models.factory import Model
+from repro.models.runtime import Runtime
+from repro.optim import adamw
+from repro.optim import grad as grad_lib
+
+
+def make_runtime(model: Model, run_cfg: RunConfig, shape: ShapeConfig,
+                 mode: str = "spmd") -> Runtime:
+    cfg = model.cfg
+    scheme = run_cfg.seq_scheme
+    if cfg.family in ("ssm", "hybrid"):
+        scheme = "contiguous"   # SSM state passing needs contiguity
+    st = StarTrailConfig(
+        seq_len=shape.seq_len,
+        seq_scheme=scheme,
+        causal=True,
+        window=cfg.window,
+        block_impl=run_cfg.block_impl,
+        block_skip=run_cfg.block_skip or (cfg.window is not None
+                                          and scheme == "contiguous"),
+        unroll=run_cfg.unroll_scans,
+    )
+    batch_axes = ("pod", "data") if run_cfg.multi_pod else ("data",)
+    return Runtime(mode=mode, st_cfg=st, batch_axes=batch_axes,
+                   rules=run_cfg.sharding_rules,
+                   unroll_scans=run_cfg.unroll_scans)
+
+
+def batch_partition(model: Model, rt: Runtime):
+    seq = shard_rules.SP_AXES
+    b = tuple(rt.batch_axes)
+    specs = {
+        "tokens": P(b, seq),
+        "labels": P(b, seq),
+    }
+    if model.cfg.frontend_stub is not None:
+        specs["frontend_emb"] = P(b, seq, None)
+    return specs
+
+
+def build_train_step(model: Model, mesh, run_cfg: RunConfig,
+                     shape: ShapeConfig, adam_cfg: adamw.AdamWConfig):
+    """Returns (jitted_step, shardings) with
+    step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+    rt = make_runtime(model, run_cfg, shape)
+    param_specs = model.partition(run_cfg.sharding_rules)
+    batch_specs = batch_partition(model, rt)
+
+    def island(params, batch):
+        return model.loss(rt, params, batch, remat=run_cfg.remat)
+
+    loss_fn = jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(param_specs, batch_specs),
+        out_specs=P(),
+        check_vma=False,
+    )
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if run_cfg.grad_compression == "int8":
+            grads = grad_lib.int8_roundtrip(grads)
+        params, opt_state, metrics = adamw.apply(params, grads, opt_state,
+                                                 adam_cfg)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    params_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs)
+    opt_sh = adamw.state_partition(params_sh)
+    opt_sh["step"] = NamedSharding(mesh, P())
+    batch_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), batch_specs)
+    metrics_sh = None  # replicated scalars
+
+    jstep = jax.jit(
+        step,
+        in_shardings=(params_sh, opt_sh, batch_sh),
+        out_shardings=(params_sh, opt_sh, metrics_sh),
+        donate_argnums=(0, 1),
+    )
+    return jstep, dict(params=params_sh, opt=opt_sh, batch=batch_sh, rt=rt)
+
+
+def build_loss_fn(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig):
+    """Loss-only island (used by eval and the dry-run)."""
+    rt = make_runtime(model, run_cfg, shape)
+    param_specs = model.partition(run_cfg.sharding_rules)
+    batch_specs = batch_partition(model, rt)
+
+    def island(params, batch):
+        return model.loss(rt, params, batch, remat=run_cfg.remat)
+
+    return jax.shard_map(
+        island, mesh=mesh, in_specs=(param_specs, batch_specs),
+        out_specs=P(), check_vma=False), rt

@@ -1,0 +1,110 @@
+"""Training loop: checkpoint/restart, straggler detection, metrics.
+
+The loop is deliberately thin — all heavy lifting is in the jitted step —
+but carries the production concerns: restore-on-start, periodic async
+checkpoints, deterministic data resume, straggler watermark, and a jsonl
+metrics stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.dist import checkpoint, elastic
+from repro.models.factory import Model
+from repro.optim import adamw
+from repro.train import step as train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    num_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    metrics_path: Optional[str] = None
+    seed: int = 0
+
+
+def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
+          adam_cfg: adamw.AdamWConfig, tcfg: TrainerConfig,
+          data_source=None, params=None) -> Dict:
+    """Run the loop; returns final metrics. Restores from ckpt_dir if a
+    checkpoint exists (fault-tolerant restart)."""
+    jstep, sh = train_step.build_train_step(model, mesh, run_cfg, shape,
+                                            adam_cfg)
+    rt = sh["rt"]
+    sp_size = 1
+    for a in rt.sp_axes:
+        sp_size *= mesh.shape[a]
+
+    if data_source is None:
+        data_source = SyntheticLM(model.cfg, shape, seed=tcfg.seed,
+                                  seq_scheme=rt.st_cfg.seq_scheme,
+                                  sp_size=sp_size)
+
+    start = 0
+    if params is None:
+        params = model.init(jax.random.PRNGKey(tcfg.seed))
+    opt = adamw.init_state(params, adam_cfg)
+    if tcfg.ckpt_dir:
+        last = checkpoint.latest_step(tcfg.ckpt_dir)
+        if last is not None:
+            params = checkpoint.restore(tcfg.ckpt_dir, last, params,
+                                        sh["params"])
+            opt = checkpoint.restore(
+                pathlib.Path(tcfg.ckpt_dir) / "opt", last, opt, sh["opt"])
+            start = last
+            print(f"[trainer] restored step {last}")
+
+    params = jax.device_put(params, sh["params"])
+    opt = jax.device_put(opt, sh["opt"])
+
+    prefetch = Prefetcher(data_source, start_step=start)
+    detector = elastic.StragglerDetector()
+    metrics_f = open(tcfg.metrics_path, "a") if tcfg.metrics_path else None
+    pending_ckpt = None
+    last_metrics: Dict = {}
+
+    try:
+        for step_i in range(start, tcfg.num_steps):
+            detector.step_start()
+            _, batch_np = prefetch.next()
+            batch = jax.device_put(batch_np, sh["batch"])
+            params, opt, metrics = jstep(params, opt, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            straggling = detector.step_end()
+            if straggling:
+                metrics["straggler_flag"] = 1.0
+            last_metrics = {"step": step_i + 1, **metrics}
+            if (step_i + 1) % tcfg.log_every == 0 or step_i == start:
+                print(f"[trainer] step {step_i + 1} "
+                      f"loss={metrics['loss']:.4f} "
+                      f"gnorm={metrics['grad_norm']:.3f}", flush=True)
+            if metrics_f:
+                metrics_f.write(json.dumps(last_metrics) + "\n")
+                metrics_f.flush()
+            if tcfg.ckpt_dir and (step_i + 1) % tcfg.ckpt_every == 0:
+                if pending_ckpt is not None:
+                    pending_ckpt.join()
+                checkpoint.save(tcfg.ckpt_dir, step_i + 1, params,
+                                blocking=True)
+                pending_ckpt = checkpoint.save(
+                    pathlib.Path(tcfg.ckpt_dir) / "opt", step_i + 1, opt,
+                    blocking=False)
+    finally:
+        prefetch.stop()
+        if pending_ckpt is not None:
+            pending_ckpt.join()
+        if metrics_f:
+            metrics_f.close()
+    return last_metrics

@@ -1,0 +1,116 @@
+"""SSM recurrence + roofline/HLO-parser tests (single device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.ssm import chunked_gla
+from repro.roofline import hlo as hlo_lib
+
+
+def naive_gla(q, k, v, ld):
+    B, S, H, N = q.shape
+    P = v.shape[-1]
+
+    def step(h, inp):
+        qt, kt, vt, lt = inp
+        h = h * jnp.exp(lt)[..., None, None] + kt[..., :, None] * vt[..., None, :]
+        return h, jnp.einsum("bhn,bhnp->bhp", qt, h)
+
+    h0 = jnp.zeros((B, H, N, P))
+    hf, ys = jax.lax.scan(step, h0,
+                          tuple(jnp.moveaxis(a, 1, 0) for a in (q, k, v, ld)))
+    return jnp.moveaxis(ys, 0, 1), hf
+
+
+@given(st.integers(0, 100), st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_property_chunked_gla_exact(seed, chunk):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    B, S, H, N, P = 1, 16, 2, 3, 4
+    q = jax.random.normal(ks[0], (B, S, H, N))
+    k = jax.random.normal(ks[1], (B, S, H, N))
+    v = jax.random.normal(ks[2], (B, S, H, P))
+    ld = -jnp.abs(jax.random.normal(ks[3], (B, S, H))) * 0.5
+    y_ref, h_ref = naive_gla(q, k, v, ld)
+    y, h_fin, ld_tot, la = chunked_gla(q, k, v, ld, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(h_fin), np.asarray(h_ref),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(ld_tot),
+                               np.asarray(ld.sum(axis=1)), atol=1e-5)
+
+
+def test_gla_zero_decay_is_cumulative_sum():
+    """With decay == 1 (log 0) and q=k=1-dim ones, y_t = sum_{j<=t} v_j."""
+    B, S, H = 1, 8, 1
+    q = jnp.ones((B, S, H, 1))
+    k = jnp.ones((B, S, H, 1))
+    v = jnp.arange(1.0, S + 1).reshape(1, S, 1, 1)
+    ld = jnp.zeros((B, S, H))
+    y, _, _, _ = chunked_gla(q, k, v, ld, 4)
+    np.testing.assert_allclose(np.asarray(y[0, :, 0, 0]),
+                               np.cumsum(np.arange(1.0, S + 1)))
+
+
+# ---- HLO collective parser ---------------------------------------------------
+
+def test_hlo_parser_counts_real_collectives():
+    import os
+
+    # build a tiny module with known collectives on 1 device? No — parse a
+    # handcrafted HLO snippet with known shapes instead.
+    text = """
+  %ag = bf16[2,512,64]{2,1,0} all-gather(bf16[2,256,64]{2,1,0} %x), replica_groups={}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %y), to_apply=%add
+  %rs = f32[2,128]{1,0} reduce-scatter(f32[2,256]{1,0} %z), dimensions={1}
+  %cp = (bf16[64]{0}, bf16[64]{0}) collective-permute-start(bf16[64]{0} %w), source_target_pairs={{0,1}}
+  %cpd = bf16[64]{0} collective-permute-done((bf16[64]{0}, bf16[64]{0}) %cp)
+  %a2a = f32[4,32]{1,0} all-to-all(f32[4,32]{1,0} %v), dimensions={0}
+"""
+    out = hlo_lib.collective_bytes(text)
+    assert out["count_by_kind"] == {
+        "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+        "collective-permute": 1, "all-to-all": 1}
+    assert out["bytes_by_kind"]["all-gather"] == 2 * 512 * 64 * 2
+    assert out["bytes_by_kind"]["all-reduce"] == 128 * 4
+    assert out["bytes_by_kind"]["reduce-scatter"] == 2 * 128 * 4
+    # permute-start result is a (in, out) tuple: only the output is traffic
+    assert out["bytes_by_kind"]["collective-permute"] == 64 * 2
+    assert out["bytes_by_kind"]["all-to-all"] == 4 * 32 * 4
+
+
+def test_hlo_parser_on_compiled_module():
+    """Parse a real compiled psum and find its all-reduce."""
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("x",))
+    from jax.sharding import PartitionSpec as P
+
+    f = jax.jit(jax.shard_map(
+        lambda a: jax.lax.psum(a, "x"), mesh=mesh, in_specs=P("x"),
+        out_specs=P()))
+    txt = f.lower(jnp.ones(8)).compile().as_text()
+    out = hlo_lib.collective_bytes(txt)
+    # single-device psum may be optimised away; just assert no crash and
+    # sane structure
+    assert "total_bytes" in out
+
+
+def test_roofline_from_record():
+    from repro.roofline import model as rl
+
+    rec = {
+        "status": "ok", "arch": "minitron-8b", "shape": "train_4k",
+        "mesh": "16x16", "kind": "train", "devices": 256, "c": 2,
+        "flops_per_device": 2e14, "bytes_accessed_per_device": 1e9,
+        "collectives": {"total_bytes": 1e8},
+        "memory": {"peak_bytes_per_device": 8 * 2**30},
+    }
+    r = rl.from_record(rec)
+    assert r.dominant == "compute"
+    assert 0 < r.roofline_fraction < 2.0
+    assert r.useful_ratio > 0

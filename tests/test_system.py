@@ -1,0 +1,82 @@
+"""End-to-end system tests.
+
+The distributed checks need >1 device, so they run in subprocesses with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 (keeping this pytest
+session on 1 device, as required for the smoke/bench paths). Checks are
+batched per subprocess to amortise startup.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+BATCHES = {
+    "attention_correctness": [
+        "topology", "ring_causal_zigzag", "ring_full_contig",
+        "st2_causal_zigzag", "st2_causal_contig", "st2_full", "st2_window",
+        "st2_window_skip", "st2_mha", "st2_mqa", "st2_bf16", "st2_r1",
+    ],
+    "attention_pallas_and_baselines": ["st2_pallas", "ulysses", "decode"],
+    "spmd_model_equivalence": [
+        "spmd_dense_swa", "spmd_dense_c1", "spmd_moe", "spmd_vlm",
+        "spmd_encdec", "spmd_hybrid", "spmd_xlstm_runs",
+    ],
+    "spmd_train_and_serve": [
+        "spmd_train_step", "serve_dense", "serve_moe", "serve_hybrid",
+        "serve_xlstm", "serve_encdec",
+    ],
+}
+
+
+BATCHES_16DEV = {
+    "c4_and_16dev_rings": ["st4_p16", "st2_p16_r4", "st2_p16_window"],
+}
+BATCHES.update(BATCHES_16DEV)
+
+
+@pytest.mark.parametrize("batch", sorted(BATCHES))
+def test_distributed(batch):
+    env = dict(os.environ)
+    n = 16 if batch in BATCHES_16DEV else 8
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.testing.dist_checks", *BATCHES[batch]],
+        env=env, capture_output=True, text=True, timeout=1800)
+    assert proc.returncode == 0, (
+        f"distributed batch {batch} failed:\n{proc.stdout[-4000:]}\n"
+        f"{proc.stderr[-2000:]}")
+
+
+def test_dryrun_one_cell():
+    """The 512-device dry-run machinery works (fast cell)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)  # dryrun sets its own 512-device flag
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "h2o-danube-1.8b", "--shape", "decode_32k"],
+        env=env, capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stdout[-3000:] + proc.stderr[-2000:]
+    assert "[ok]" in proc.stdout
+
+
+def test_train_driver_end_to_end(tmp_path):
+    """launch.train runs, checkpoints, and restores in a fresh process."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "h2o-danube-1.8b", "--smoke", "--devices", "8", "--data", "2",
+            "--c", "2", "--steps", "6", "--ckpt-dir", str(tmp_path)]
+    p1 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        timeout=1200)
+    assert p1.returncode == 0, p1.stdout[-3000:] + p1.stderr[-2000:]
+    args[args.index("6")] = "8"
+    p2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        timeout=1200)
+    assert p2.returncode == 0, p2.stdout[-3000:] + p2.stderr[-2000:]
+    assert "restored step 6" in p2.stdout

@@ -1,0 +1,124 @@
+"""Topology unit + property tests (pure python, no devices)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import topology as topo
+from repro.core import zigzag as zz
+
+
+def factorizations():
+    out = []
+    for p in (4, 8, 16, 36, 64, 144, 256):
+        for c in topo.valid_c_values(p):
+            out.append((p, c))
+    return out
+
+
+@pytest.mark.parametrize("p,c", factorizations())
+def test_invariants(p, c):
+    tp = topo.StarTrailTopology(p, c)
+    tp.check_invariants()
+
+
+@pytest.mark.parametrize("p,c", factorizations())
+def test_matches_paper_algorithms(p, c):
+    tp = topo.StarTrailTopology(p, c)
+    d_t, d_a = tp.num_teams, c
+    perm = dict(tp.init_placement_permutation())
+    for r_t in range(d_t):
+        for r_a in range(d_a):
+            src = r_t * c + r_a
+            assert perm[src] == topo.paper_get_init_send(r_t, r_a, d_t, d_a)
+    ring = dict(tp.ring_permutation())
+    for r_t in range(d_t):
+        for r_a in range(d_a):
+            src = r_t * c + r_a
+            nxt, last = topo.paper_get_p2p_config(r_t, r_a, d_t, d_a)
+            assert ring[src] in (nxt, last)
+
+
+@pytest.mark.parametrize("p,c", factorizations())
+def test_ring_is_single_cycle_per_ring(p, c):
+    tp = topo.StarTrailTopology(p, c)
+    ring = dict(tp.ring_permutation())
+    for g in range(c):
+        for t in range(c):
+            start = tp.rank(g, 0, t)
+            seen = {start}
+            cur = ring[start]
+            while cur != start:
+                assert cur not in seen
+                seen.add(cur)
+                cur = ring[cur]
+            assert len(seen) == tp.ring_size
+
+
+@given(st.integers(1, 6).map(lambda c: c * c).flatmap(
+    lambda c2: st.tuples(st.just(c2), st.integers(1, 8))))
+@settings(max_examples=40, deadline=None)
+def test_property_placement_bijection(args):
+    c2, r = args
+    c = int(c2 ** 0.5)
+    p = c2 * r
+    tp = topo.StarTrailTopology(p, c)
+    perm = tp.init_placement_permutation()
+    assert sorted(s for s, _ in perm) == list(range(p))
+    assert sorted(d for _, d in perm) == list(range(p))
+    inv = dict(tp.inverse_placement_permutation())
+    for s, d in perm:
+        assert inv[d] == s
+
+
+@given(st.sampled_from(factorizations()))
+@settings(max_examples=30, deadline=None)
+def test_property_coverage_exact(pc):
+    """Every team's members jointly see every K/V chunk exactly once."""
+    p, c = pc
+    tp = topo.StarTrailTopology(p, c)
+    for g in range(c):
+        for j in range(tp.ring_size):
+            seen = []
+            for t in range(c):
+                seen.extend(tp.coverage(g, j, t))
+            assert sorted(seen) == list(range(tp.num_teams))
+
+
+def test_invalid_c_rejected():
+    with pytest.raises(ValueError):
+        topo.StarTrailTopology(16, 3)
+    with pytest.raises(ValueError):
+        topo.StarTrailTopology(16, 8)
+
+
+# ---- zigzag ---------------------------------------------------------------
+
+@given(st.integers(1, 6), st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_property_zigzag_partition(log2p, mult):
+    p = 2 ** log2p
+    seq = 2 * p * mult
+    pos = zz.zigzag_positions(seq, p)
+    flat = sorted(pos.reshape(-1).tolist())
+    assert flat == list(range(seq))
+
+
+@pytest.mark.parametrize("p", [2, 4, 8, 16, 64])
+def test_zigzag_balance(p):
+    seq = 16 * p
+    bal_zz = zz.balance_ratio(zz.zigzag_positions(seq, p), seq)
+    bal_ct = zz.balance_ratio(zz.contiguous_positions(seq, p), seq)
+    assert bal_zz < 1.07          # near-perfect balance
+    assert bal_ct > 1.4           # contiguous is badly unbalanced
+    assert bal_zz < bal_ct
+
+
+def test_shard_unshard_roundtrip():
+    import numpy as np
+
+    pos = zz.zigzag_positions(32, 4)
+    x = np.arange(2 * 32).reshape(2, 32)
+    y = zz.shard_tokens(x, pos, axis=1)
+    z = zz.unshard_tokens(y, pos, axis=1)
+    assert (x == z).all()

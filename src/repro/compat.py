@@ -1,0 +1,44 @@
+"""jax version compatibility shims.
+
+The codebase targets the modern manual-SPMD surface (``jax.shard_map`` with
+``check_vma``, ``jax.lax.axis_size``). On older jax (< 0.6) those names do
+not exist; this module installs equivalents so the same call sites work on
+both:
+
+  * ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., check_vma=...)``
+    -> ``jax.experimental.shard_map.shard_map`` with ``check_vma`` mapped to
+    the legacy ``check_rep`` flag.
+  * ``jax.lax.axis_size(name)`` -> ``jax.lax.psum(1, name)``, which jax
+    special-cases to the static mesh axis size inside shard_map.
+
+Importing :mod:`repro.core` or :mod:`repro.dist` installs the shims; they
+are no-ops when the running jax already provides the real APIs.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=True):
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))
+
+
+def _axis_size_compat(axis_name):
+    # psum of a python constant is special-cased by jax to the (static)
+    # axis size, so this returns a plain int at trace time.
+    return jax.lax.psum(1, axis_name)
+
+
+def install() -> None:
+    """Install the shims onto the jax namespace (idempotent)."""
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _shard_map_compat
+    if not hasattr(jax.lax, "axis_size"):
+        jax.lax.axis_size = _axis_size_compat
+
+
+install()

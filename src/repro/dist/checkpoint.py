@@ -1,0 +1,184 @@
+"""Atomic, optionally async checkpointing of parameter/optimizer trees.
+
+On-disk layout (documented in docs/ARCHITECTURE.md):
+
+    <ckpt_dir>/
+      step_00000007/            # one completed checkpoint per step
+        manifest.json           # {"step": 7, "leaves": [{file, shape, dtype}]}
+        leaf_00000.bin          # raw bytes of each tree leaf, flatten order
+        leaf_00001.bin
+        ...
+
+Writers stage into ``step_XXXXXXXX.tmp`` and ``os.replace`` to the final
+name, so a checkpoint directory exists iff it is complete — a crashed
+writer's ``.tmp`` is invisible to :func:`latest_step` and overwritten by
+the next attempt. Raw bytes + a dtype string in the manifest keep the
+format dtype-faithful for ml_dtypes (bfloat16) without relying on ``.npy``
+support for extension types.
+
+``save(..., blocking=False)`` snapshots the tree to host memory in the
+caller's thread (cheap: device->host copy) and returns a started
+``threading.Thread`` doing the disk I/O; ``join()`` it before the next save
+to the same directory (see ``train/trainer.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import re
+import shutil
+import threading
+from typing import List, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_STEP_RE = re.compile(r"^step_(\d{8,})$")  # 8+: {:08d} grows past 1e8 steps
+
+
+class _Writer(threading.Thread):
+    """Daemon checkpoint writer that re-raises its failure at join() time
+    (a silently-dead writer would let training continue checkpoint-less and
+    a later restart resume from a stale step)."""
+
+    def __init__(self, fn, name: str):
+        super().__init__(name=name, daemon=True)
+        self._fn = fn
+        self.exc: Optional[BaseException] = None
+
+    def run(self):
+        try:
+            self._fn()
+        except BaseException as e:  # noqa: BLE001 — surfaced at join()
+            self.exc = e
+
+    def join(self, timeout=None):
+        super().join(timeout)
+        if self.exc is not None:
+            raise self.exc
+
+
+def _step_dir(root: Union[str, pathlib.Path], step: int) -> pathlib.Path:
+    return pathlib.Path(root) / f"step_{step:08d}"
+
+
+def save(ckpt_dir: Union[str, pathlib.Path], step: int, tree, *,
+         blocking: bool = True) -> Optional[threading.Thread]:
+    """Write ``tree`` as checkpoint ``step``. Returns None (blocking) or the
+    started writer thread (``blocking=False``)."""
+    leaves = jax.tree.leaves(tree)
+    if blocking:
+        arrays = [np.asarray(leaf) for leaf in leaves]  # device->host
+    else:
+        # force real copies: np.asarray is zero-copy on CPU backends, and
+        # the caller's next train step may donate/free the source buffers
+        # while the writer thread is still serializing them
+        arrays = [np.array(leaf, copy=True) for leaf in leaves]
+    root = pathlib.Path(ckpt_dir)
+    root.mkdir(parents=True, exist_ok=True)
+    final = _step_dir(root, step)
+    tmp = final.with_name(final.name + ".tmp")
+
+    def _write():
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: List[dict] = []
+        for i, arr in enumerate(arrays):
+            fname = f"leaf_{i:05d}.bin"
+            (tmp / fname).write_bytes(arr.tobytes())
+            manifest.append({"file": fname, "shape": list(arr.shape),
+                             "dtype": str(arr.dtype)})
+        (tmp / "manifest.json").write_text(
+            json.dumps({"step": step, "leaves": manifest}, indent=1))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+
+    if blocking:
+        _write()
+        return None
+    t = _Writer(_write, name=f"ckpt-save-{step}")
+    t.start()
+    return t
+
+
+def restore(ckpt_dir: Union[str, pathlib.Path], step: int, tree_like,
+            shardings=None):
+    """Read checkpoint ``step`` into the structure of ``tree_like``.
+
+    ``tree_like`` supplies the pytree structure (and is type/shape
+    cross-checked against the manifest). If ``shardings`` (a matching tree
+    of ``jax.sharding.Sharding``) is given, each leaf is ``device_put`` with
+    its sharding; otherwise leaves come back as committed jax arrays.
+    """
+    final = _step_dir(ckpt_dir, step)
+    manifest = json.loads((final / "manifest.json").read_text())
+    ref_leaves, treedef = jax.tree_util.tree_flatten(tree_like)
+    entries = manifest["leaves"]
+    if len(entries) != len(ref_leaves):
+        raise ValueError(
+            f"checkpoint {final} has {len(entries)} leaves but the reference "
+            f"tree has {len(ref_leaves)}")
+    out = []
+    for ref, ent in zip(ref_leaves, entries):
+        dtype = jnp.dtype(ent["dtype"])
+        shape = tuple(ent["shape"])
+        if tuple(np.shape(ref)) != shape:
+            raise ValueError(
+                f"checkpoint leaf {ent['file']} shape {shape} != reference "
+                f"{tuple(np.shape(ref))}")
+        ref_dtype = getattr(ref, "dtype", None)
+        if ref_dtype is not None and jnp.dtype(ref_dtype) != dtype:
+            raise ValueError(
+                f"checkpoint leaf {ent['file']} dtype {dtype} != reference "
+                f"{jnp.dtype(ref_dtype)} (did param_dtype change between "
+                f"runs?)")
+        data = (final / ent["file"]).read_bytes()
+        out.append(np.frombuffer(data, dtype=dtype).reshape(shape))
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        return jax.tree.map(jax.device_put, tree, shardings)
+    return jax.tree.map(jnp.asarray, tree)
+
+
+def completed_steps(ckpt_dir: Union[str, pathlib.Path]) -> set:
+    """All fully-committed checkpoint steps in ``ckpt_dir``.
+
+    Only ``step_XXXXXXXX`` directories count; stale ``.tmp`` staging dirs
+    from crashed writers are ignored.
+    """
+    root = pathlib.Path(ckpt_dir)
+    if not root.is_dir():
+        return set()
+    steps = set()
+    for child in root.iterdir():
+        m = _STEP_RE.match(child.name)
+        if m and child.is_dir():
+            steps.add(int(m.group(1)))
+    return steps
+
+
+def latest_common_step(*ckpt_dirs: Union[str, pathlib.Path]) -> Optional[int]:
+    """Highest step completed in *every* given directory (None if there is
+    none). Restart logic for multi-tree checkpoints (params + optimizer)
+    must use this rather than one tree's ``latest_step``: a crash between
+    the two writes leaves the trees one step apart, and the newest step
+    present in all trees is the restore point (older step dirs are never
+    deleted). The step *sets* are intersected — the trees may have
+    diverged by more than one step across restarts with different
+    checkpoint cadences."""
+    common = None
+    for d in ckpt_dirs:
+        steps = completed_steps(d)
+        common = steps if common is None else common & steps
+    return max(common) if common else None
+
+
+def latest_step(ckpt_dir: Union[str, pathlib.Path]) -> Optional[int]:
+    """Highest completed checkpoint step in ``ckpt_dir`` (None if empty)."""
+    steps = completed_steps(ckpt_dir)
+    return max(steps) if steps else None

@@ -1,0 +1,104 @@
+"""Mesh construction: refine a flat SP degree into the concentric axes.
+
+The production mesh (``launch/mesh.py``) exposes a flat ``model`` axis of P
+devices. StarTrail factors that axis into three:
+
+    (sp_grp = C, sp_ring = R, sp_team = C)      with  P = C^2 * R
+
+matching ``core/topology.py``: device (g, j, t) has team ``tau = g*R + j``
+and global SP rank ``p = g*R*C + j*C + t`` (major-to-minor ``(g, j, t)``,
+i.e. ``PartitionSpec(SP_AXES)`` order).
+
+``placement`` decides which SP axis lands on the physically innermost
+(model-axis-adjacent) devices — the scheduler's two options (paper §3.4):
+
+  * ``"team_inner"``  (Collect_intra): the team collectives get the short
+    hops; the model axis is split ``(g, j, t)`` with ``t`` fastest-varying.
+  * ``"ring_inner"``  (P2P_intra): the ring permutes get the short hops;
+    the model axis is split ``(g, t, j)`` with ``j`` fastest-varying, then
+    reordered so the mesh axes still read ``(sp_grp, sp_ring, sp_team)``.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import numpy as np
+
+from repro.dist.sharding import SP_AXES
+
+PLACEMENTS: Tuple[str, str] = ("team_inner", "ring_inner")
+
+
+def _validate_factorisation(p: int, c: int) -> int:
+    """Returns R; raises if (P, C) is not a valid StarTrail factorisation."""
+    if c < 1:
+        raise ValueError(f"C must be >= 1, got {c}")
+    if c * c > p or p % (c * c) != 0:
+        raise ValueError(
+            f"C={c} invalid for P={p}: need C <= sqrt(P)="
+            f"{math.isqrt(p)} and P % C^2 == 0")
+    return p // (c * c)
+
+
+def refine_grid(grid: np.ndarray, c: int, placement: str = "team_inner"
+                ) -> np.ndarray:
+    """Factor the last (flat SP) dim of ``grid`` into (C, R, C).
+
+    Pure array logic shared by :func:`refine_mesh` and the layout tests:
+    output[..., g, j, t] == input[..., rank] with ``rank`` as defined by
+    ``core.topology.StarTrailTopology.rank(g, j, t)`` for ``team_inner``.
+    """
+    p = grid.shape[-1]
+    r = _validate_factorisation(p, c)
+    lead = grid.shape[:-1]
+    if placement == "team_inner":
+        return grid.reshape(lead + (c, r, c))
+    if placement == "ring_inner":
+        # innermost devices traverse the ring: split (g, t, j), present as
+        # (g, j, t)
+        return np.swapaxes(grid.reshape(lead + (c, c, r)), -1, -2)
+    raise ValueError(f"placement must be one of {PLACEMENTS}, got {placement!r}")
+
+
+def refine_mesh(prod, c: int, *, placement: str = "team_inner"):
+    """Refine a production mesh's trailing ``model`` axis into the SP axes.
+
+    ``prod`` is a ``jax.sharding.Mesh`` whose *last* axis is the flat
+    sequence-parallel axis (named ``model`` by ``make_production_mesh``);
+    leading axes (``pod``, ``data``) are preserved. Returns a new Mesh with
+    axes ``(*leading, sp_grp, sp_ring, sp_team)``.
+    """
+    import jax
+
+    names = tuple(prod.axis_names)
+    if names[-1] != "model":
+        raise ValueError(
+            f"expected the trailing mesh axis to be 'model', got {names}")
+    devices = np.asarray(prod.devices)
+    grid = refine_grid(devices, c, placement)
+    return jax.sharding.Mesh(grid, names[:-1] + SP_AXES)
+
+
+def local_mesh_for_tests(*, c: int, r: int, data: int = 1):
+    """A ``(data, sp_grp, sp_ring, sp_team)`` mesh over forced host devices.
+
+    For CPU runs launched with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` where
+    ``N >= data * c^2 * r`` (the train/serve ``--smoke --devices N`` path
+    and ``testing/dist_checks.py``).
+    """
+    import jax
+
+    if r < 1 or c < 1 or data < 1:
+        raise ValueError(f"need positive sizes, got c={c} r={r} data={data}")
+    need = data * c * c * r
+    devs = jax.devices()
+    if len(devs) < need:
+        raise ValueError(
+            f"need {need} devices for (data={data}, c={c}, r={r}) but only "
+            f"{len(devs)} available; launch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need}")
+    grid = np.array(devs[:need]).reshape(data, c, r, c)
+    return jax.sharding.Mesh(grid, ("data",) + SP_AXES)

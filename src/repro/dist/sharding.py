@@ -1,0 +1,119 @@
+"""Logical-axis -> mesh-axis sharding rules and PartitionSpec trees.
+
+Parameters declare *logical* axis names in their ``PSpec`` (``"embed"``,
+``"ffn"``, ``"vocab"``, ...). A *rule set* maps each logical axis to the
+tuple of mesh axes it is stored sharded over; unnamed axes are replicated.
+``partition_tree`` turns a spec ``axes_tree`` into a
+``jax.sharding.PartitionSpec`` tree under one rule set.
+
+Two kinds of sharded storage coexist (see ``models/runtime.py:dense``):
+
+  * **computation-sharded** axes stay sharded through the matmul and the
+    surrounding code supplies the collectives (``"vocab"`` vocab-parallel
+    loss, ``"ffn"`` TP with activation gather/reduce-scatter in the
+    ``default`` rules, ``"expert_ffn"`` in the MoE block, ``"experts"``
+    expert-parallel over ``data``).
+  * **FSDP** axes (listed by :func:`fsdp_logical`) are storage-only:
+    ``Runtime.dense`` all-gathers them on use and the gather's transpose
+    reduce-scatters the gradient — ZeRO-3 semantics.
+
+Rule sets:
+
+  ``default`` — FSDP over ``data`` for embed dims; tensor-parallel MLP
+      (``ffn`` stays sharded over the SP axes, activations gathered);
+      vocab-parallel embedding/loss over the SP axes; expert-parallel MoE.
+  ``fsdp``    — like ``default`` but the MLP ``ffn`` dim is gathered on use
+      instead of the activations (ZeRO-3 MLP; no activation collectives).
+      The MoE block gathers the expert weights explicitly in this mode.
+  ``tp``      — ``fsdp`` plus attention ``heads`` stored sharded over the
+      innermost team axis (gathered on use). KV heads stay replicated so
+      MQA/GQA archs with few KV heads remain layout-legal.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, FrozenSet, Optional, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# The joint sequence-parallel spec axes, major-to-minor. Sharding one array
+# dimension over this tuple linearises the mesh coordinates (g, j, t) as
+# rank p = (g*R + j)*C + t — exactly `core.topology.StarTrailTopology.rank`
+# and `Runtime.sp_rank()`.
+SP_AXES: Tuple[str, str, str] = ("sp_grp", "sp_ring", "sp_team")
+
+Rules = Dict[str, Tuple[str, ...]]
+
+RULES: Dict[str, Rules] = {
+    "default": {
+        "embed": ("data",),
+        "embed_out": ("data",),
+        "vocab": SP_AXES,
+        "ffn": SP_AXES,
+        "experts": ("data",),
+        "expert_ffn": SP_AXES,
+    },
+    "fsdp": {
+        "embed": ("data",),
+        "embed_out": ("data",),
+        "vocab": SP_AXES,
+        "ffn": SP_AXES,
+        "experts": ("data",),
+        "expert_ffn": SP_AXES,
+    },
+    "tp": {
+        "embed": ("data",),
+        "embed_out": ("data",),
+        "vocab": SP_AXES,
+        "ffn": SP_AXES,
+        "experts": ("data",),
+        "expert_ffn": SP_AXES,
+        "heads": ("sp_team",),
+    },
+}
+
+# Logical axes whose shards are *gathered on use* by ``Runtime.dense`` (the
+# gather transpose reduce-scatters the gradient: ZeRO-3). Everything else in
+# a rule set stays sharded through the computation.
+_FSDP_LOGICAL: Dict[str, FrozenSet[str]] = {
+    "default": frozenset({"embed", "embed_out"}),
+    "fsdp": frozenset({"embed", "embed_out", "ffn"}),
+    "tp": frozenset({"embed", "embed_out", "ffn", "heads"}),
+}
+
+
+def fsdp_logical(rules: str = "default") -> FrozenSet[str]:
+    """The gather-on-use logical axes of a rule set (see module docstring)."""
+    return _FSDP_LOGICAL[rules]
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple)
+
+
+def spec_for_axes(axes: Tuple[Optional[str], ...],
+                  rules: Union[str, Rules] = "default") -> P:
+    """One PartitionSpec from one spec's logical ``axes`` tuple."""
+    table = RULES[rules] if isinstance(rules, str) else rules
+    entries = []
+    used = set()
+    for ax in axes:
+        mesh_axes = table.get(ax) if ax is not None else None
+        if not mesh_axes:
+            entries.append(None)
+            continue
+        dup = used.intersection(mesh_axes)
+        if dup:
+            raise ValueError(
+                f"rule set maps {axes} onto mesh axis {sorted(dup)} twice")
+        used.update(mesh_axes)
+        entries.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+    return P(*entries)
+
+
+def partition_tree(axes_tree, rules: Union[str, Rules] = "default"):
+    """Map a spec ``axes_tree`` (tree of logical-axis tuples, as produced by
+    ``models.spec.axes_tree``) to a PartitionSpec tree under ``rules``."""
+    return jax.tree.map(lambda axes: spec_for_axes(axes, rules), axes_tree,
+                        is_leaf=_is_axes_leaf)

@@ -64,6 +64,74 @@ def batch_partition(model: Model, rt: Runtime):
     return specs
 
 
+def _mentioned_axes(spec) -> set:
+    out = set()
+    for entry in spec:
+        if entry is None:
+            continue
+        if isinstance(entry, (tuple, list)):
+            out.update(entry)
+        else:
+            out.add(entry)
+    return out
+
+
+def _make_vg_island(model: Model, mesh, run_cfg: RunConfig, rt: Runtime,
+                    param_specs, batch_specs):
+    """shard_map island computing (loss, grads) — forward AND backward run
+    inside one manual-SPMD region.
+
+    Differentiating *inside* the island (rather than ``jax.grad`` around the
+    shard_map) keeps every AD residual local to the region, which older jax
+    requires (its shard_map partial-eval rule cannot shard scalar residuals
+    crossing the boundary) and which is the intended design anyway: the
+    compiler sees one fused fwd+bwd program per device.
+
+    Reduction convention (matches shard_map's own transpose): the loss is
+    replicated (every path runs through a psum over all mesh axes), so the
+    per-device cotangent seed is 1/n_devices and each gradient leaf is
+    psum'd over the mesh axes its PartitionSpec does not mention — FSDP
+    leaves already reduce-scattered by the all_gather transposes, replicated
+    leaves (norm scales, routers) summed over batch + SP axes, including
+    ``pod``.
+    """
+    n_dev = mesh.size
+
+    def island(params, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: model.loss(rt, p, batch, remat=run_cfg.remat))(params)
+        inv = 1.0 / n_dev
+
+        def reduce_leaf(g, spec):
+            g32 = g.astype(jnp.float32) * inv
+            unmentioned = tuple(a for a in mesh.axis_names
+                                if a not in _mentioned_axes(spec))
+            if unmentioned:  # reduce in f32, downcast once at the end
+                g32 = jax.lax.psum(g32, unmentioned)
+            return g32.astype(g.dtype)
+
+        grads = jax.tree.map(reduce_leaf, grads, param_specs)
+        return loss, grads
+
+    return jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(param_specs, batch_specs),
+        out_specs=(P(), param_specs),
+        check_vma=False,
+    )
+
+
+def build_value_and_grad_fn(model: Model, mesh, run_cfg: RunConfig,
+                            shape: ShapeConfig):
+    """Returns (vg_fn, rt) with vg_fn(params, batch) -> (loss, grads), the
+    fwd+bwd island of `_make_vg_island` (used standalone by dist_checks)."""
+    rt = make_runtime(model, run_cfg, shape)
+    param_specs = model.partition(run_cfg.sharding_rules)
+    batch_specs = batch_partition(model, rt)
+    return _make_vg_island(model, mesh, run_cfg, rt, param_specs,
+                           batch_specs), rt
+
+
 def build_train_step(model: Model, mesh, run_cfg: RunConfig,
                      shape: ShapeConfig, adam_cfg: adamw.AdamWConfig):
     """Returns (jitted_step, shardings) with
@@ -71,19 +139,11 @@ def build_train_step(model: Model, mesh, run_cfg: RunConfig,
     rt = make_runtime(model, run_cfg, shape)
     param_specs = model.partition(run_cfg.sharding_rules)
     batch_specs = batch_partition(model, rt)
-
-    def island(params, batch):
-        return model.loss(rt, params, batch, remat=run_cfg.remat)
-
-    loss_fn = jax.shard_map(
-        island, mesh=mesh,
-        in_specs=(param_specs, batch_specs),
-        out_specs=P(),
-        check_vma=False,
-    )
+    vg_fn = _make_vg_island(model, mesh, run_cfg, rt, param_specs,
+                            batch_specs)
 
     def step(params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss, grads = vg_fn(params, batch)
         if run_cfg.grad_compression == "int8":
             grads = grad_lib.int8_roundtrip(grads)
         params, opt_state, metrics = adamw.apply(params, grads, opt_state,

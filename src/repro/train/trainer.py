@@ -57,7 +57,11 @@ def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
         params = model.init(jax.random.PRNGKey(tcfg.seed))
     opt = adamw.init_state(params, adam_cfg)
     if tcfg.ckpt_dir:
-        last = checkpoint.latest_step(tcfg.ckpt_dir)
+        # common step across params + opt trees: a crash between the two
+        # writes leaves them one step apart, and only a step present in
+        # both is a consistent restore point
+        last = checkpoint.latest_common_step(
+            tcfg.ckpt_dir, pathlib.Path(tcfg.ckpt_dir) / "opt")
         if last is not None:
             params = checkpoint.restore(tcfg.ckpt_dir, last, params,
                                         sh["params"])
@@ -94,17 +98,22 @@ def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
                 metrics_f.write(json.dumps(last_metrics) + "\n")
                 metrics_f.flush()
             if tcfg.ckpt_dir and (step_i + 1) % tcfg.ckpt_every == 0:
-                if pending_ckpt is not None:
-                    pending_ckpt.join()
-                checkpoint.save(tcfg.ckpt_dir, step_i + 1, params,
-                                blocking=True)
-                pending_ckpt = checkpoint.save(
-                    pathlib.Path(tcfg.ckpt_dir) / "opt", step_i + 1, opt,
-                    blocking=False)
+                for t in pending_ckpt or ():
+                    t.join()
+                # both writes async: save() snapshots to host in this
+                # thread before returning, and restore takes the latest
+                # step common to both trees, so a crash mid-write only
+                # costs the torn step, never consistency
+                pending_ckpt = [
+                    checkpoint.save(tcfg.ckpt_dir, step_i + 1, params,
+                                    blocking=False),
+                    checkpoint.save(pathlib.Path(tcfg.ckpt_dir) / "opt",
+                                    step_i + 1, opt, blocking=False),
+                ]
     finally:
         prefetch.stop()
-        if pending_ckpt is not None:
-            pending_ckpt.join()
+        for t in pending_ckpt or ():
+            t.join()
         if metrics_f:
             metrics_f.close()
     return last_metrics

@@ -1,0 +1,211 @@
+"""Substrate tests beyond test_substrate.py: sharding rules over real model
+trees, and mesh refinement vs the paper topology's rank layout."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import topology as topo_lib
+from repro.dist import elastic, meshes, sharding
+from repro.models.factory import build_model
+
+# the axis sizes the CPU test meshes actually use (see dist_checks /
+# launch --smoke) and the production 16x16 pod refined at C=2
+MESH_SIZES = {
+    "smoke_c2": {"data": 2, "sp_grp": 2, "sp_ring": 1, "sp_team": 2},
+    "smoke_c1": {"data": 2, "sp_grp": 1, "sp_ring": 4, "sp_team": 1},
+    "prod_c2": {"data": 16, "sp_grp": 2, "sp_ring": 4, "sp_team": 2},
+}
+
+RULE_ARCHS = ["h2o-danube-1.8b", "phi3.5-moe-42b-a6.6b",
+              "jamba-1.5-large-398b", "xlstm-1.3b", "seamless-m4t-large-v2"]
+
+
+def _spec_entries(spec):
+    """Normalise a PartitionSpec into a per-dim tuple of mesh-axis tuples."""
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(())
+        elif isinstance(entry, (tuple, list)):
+            out.append(tuple(entry))
+        else:
+            out.append((entry,))
+    return out
+
+
+# ---- partition_tree round-trip over real models -----------------------------
+
+@pytest.mark.parametrize("rules", sorted(sharding.RULES))
+@pytest.mark.parametrize("arch", RULE_ARCHS)
+def test_partition_tree_roundtrip(arch, rules):
+    """Every leaf's PartitionSpec matches its logical axes mapped through the
+    rule table, with no mesh axis used twice within one spec."""
+    import jax
+
+    model = build_model(registry.get_smoke(arch))
+    axes_tree = model.axes()
+    ptree = model.partition(rules)
+    is_axes = lambda x: isinstance(x, tuple)
+    axes_leaves = jax.tree.leaves(axes_tree, is_leaf=is_axes)
+    spec_leaves = jax.tree.leaves(ptree, is_leaf=lambda x: isinstance(x, P))
+    assert len(axes_leaves) == len(spec_leaves) > 0
+    table = sharding.RULES[rules]
+    for axes, spec in zip(axes_leaves, spec_leaves):
+        entries = _spec_entries(spec)
+        assert len(entries) == len(axes)
+        used = []
+        for ax, got in zip(axes, entries):
+            expect = tuple(table.get(ax) or ()) if ax is not None else ()
+            assert got == expect, (arch, rules, axes, ax, got, expect)
+            used.extend(got)
+        assert len(used) == len(set(used)), (arch, rules, axes, used)
+
+
+@pytest.mark.parametrize("rules", sorted(sharding.RULES))
+@pytest.mark.parametrize("mesh_name", sorted(MESH_SIZES))
+@pytest.mark.parametrize("arch", RULE_ARCHS)
+def test_partition_layout_divisible(arch, rules, mesh_name):
+    """Sharded dims divide evenly on the meshes we actually run (smoke CPU
+    meshes with the full arch set; the production pod with full configs)."""
+    import jax
+
+    sizes = MESH_SIZES[mesh_name]
+    cfg = (registry.get(arch) if mesh_name.startswith("prod")
+           else registry.get_smoke(arch))
+    model = build_model(cfg)
+    abstract = jax.tree.leaves(model.abstract())
+    specs = jax.tree.leaves(model.partition(rules),
+                            is_leaf=lambda x: isinstance(x, P))
+    for aval, spec in zip(abstract, specs):
+        for dim, axes in zip(aval.shape, _spec_entries(spec)):
+            shards = int(np.prod([sizes[a] for a in axes], initial=1))
+            assert dim % shards == 0, (arch, rules, mesh_name, aval.shape,
+                                       spec, dim, shards)
+
+
+def test_fsdp_logical_subset_of_rules():
+    """Gather-on-use axes must be mapped by their rule set (otherwise
+    Runtime.dense would silently skip the gather)."""
+    for name, table in sharding.RULES.items():
+        for ax in sharding.fsdp_logical(name):
+            assert table.get(ax), (name, ax)
+
+
+def test_partition_tree_rejects_axis_reuse():
+    with pytest.raises(ValueError):
+        sharding.spec_for_axes(("embed", "embed_out"),
+                               {"embed": ("data",), "embed_out": ("data",)})
+
+
+# ---- refine_mesh vs core/topology rank layout -------------------------------
+
+@pytest.mark.parametrize("p,c", [(4, 1), (4, 2), (8, 2), (16, 2), (16, 4),
+                                 (64, 4), (256, 2), (256, 4)])
+def test_refine_grid_matches_topology_ranks(p, c):
+    """Device (g, j, t) in the refined grid is the flat-model-axis device at
+    rank ``(g*R + j)*C + t`` — i.e. exactly ``StarTrailTopology.rank`` and
+    the ``PartitionSpec(SP_AXES)`` linearisation."""
+    topo = topo_lib.StarTrailTopology(p, c)
+    grid = meshes.refine_grid(np.arange(p), c, "team_inner")
+    assert grid.shape == (c, topo.ring_size, c)
+    for g in range(c):
+        for j in range(topo.ring_size):
+            for t in range(c):
+                assert grid[g, j, t] == topo.rank(g, j, t)
+                tau = topo.team_of(g, j)
+                assert tau == g * topo.ring_size + j
+
+
+@pytest.mark.parametrize("p,c", [(8, 2), (16, 2), (64, 4)])
+def test_refine_grid_ring_inner_adjacency(p, c):
+    """ring_inner puts consecutive flat-axis devices along the ring: walking
+    j at fixed (g, t) visits adjacent devices (the P2P_intra placement)."""
+    r = p // (c * c)
+    grid = meshes.refine_grid(np.arange(p), c, "ring_inner")
+    assert grid.shape == (c, r, c)
+    for g in range(c):
+        for t in range(c):
+            ring = [int(grid[g, j, t]) for j in range(r)]
+            assert all(b - a == 1 for a, b in zip(ring, ring[1:])), ring
+    # still a bijection of the flat axis
+    assert sorted(grid.reshape(-1).tolist()) == list(range(p))
+
+
+def test_refine_grid_preserves_leading_axes():
+    grid = np.arange(2 * 16).reshape(2, 16)
+    out = meshes.refine_grid(grid, 2, "team_inner")
+    assert out.shape == (2, 2, 4, 2)
+    np.testing.assert_array_equal(out[1].reshape(-1), grid[1])
+
+
+def test_refine_grid_validates_factorisation():
+    with pytest.raises(ValueError):
+        meshes.refine_grid(np.arange(8), 3, "team_inner")
+    with pytest.raises(ValueError):
+        meshes.refine_grid(np.arange(16), 2, "diagonal")
+
+
+# ---- checkpoint: multi-tree consistency -------------------------------------
+
+def test_latest_common_step_skips_torn_checkpoint(tmp_path):
+    """A crash between the params save and the opt save leaves the trees one
+    step apart; the restart point must be the newest step present in BOTH."""
+    import jax.numpy as jnp
+
+    from repro.dist import checkpoint
+
+    params, opt = {"w": jnp.ones(3)}, {"mu": jnp.zeros(3)}
+    opt_dir = tmp_path / "opt"
+    checkpoint.save(tmp_path, 1, params)
+    checkpoint.save(opt_dir, 1, opt)
+    checkpoint.save(tmp_path, 2, params)   # "crash" before opt step 2
+    assert checkpoint.latest_step(tmp_path) == 2
+    assert checkpoint.latest_common_step(tmp_path, opt_dir) == 1
+    # both trees restorable at the common step
+    checkpoint.restore(tmp_path, 1, params)
+    checkpoint.restore(opt_dir, 1, opt)
+    # empty opt tree -> no consistent restore point at all
+    assert checkpoint.latest_common_step(tmp_path, tmp_path / "nope") is None
+    # diverged step SETS (different cadences across restarts): params
+    # {1,2,10}, opt {1,6} -> common step is 1, not min(latest) = 6
+    checkpoint.save(tmp_path, 10, params)
+    checkpoint.save(opt_dir, 6, opt)
+    assert checkpoint.latest_common_step(tmp_path, opt_dir) == 1
+
+
+def test_async_save_failure_surfaces_at_join(tmp_path):
+    """A writer-thread failure must re-raise at join(), not die silently
+    (training would otherwise continue checkpoint-less and exit 0)."""
+    import jax.numpy as jnp
+
+    from repro.dist import checkpoint
+
+    # a regular file squatting on the staging path makes the writer fail
+    (tmp_path / "step_00000005.tmp").write_text("not a dir")
+    t = checkpoint.save(tmp_path, 5, {"a": jnp.ones(2)}, blocking=False)
+    with pytest.raises(NotADirectoryError):
+        t.join()
+    assert checkpoint.latest_step(tmp_path) is None
+
+
+# ---- elastic plan feeds a valid refinement ----------------------------------
+
+@pytest.mark.parametrize("world,target", [
+    (512, 16), (511, 16), (509, 16), (256, 16), (48, 16), (12, 16), (8, 16),
+    (4, 16),
+    (8, 12),    # non-power-of-two target on a small pool -> 8
+    (100, 12), (64, 24), (9, 5),
+    (5, 12), (4, 12),   # pool below target must still yield model=4, not raise
+])
+def test_plan_mesh_model_axis_refinable(world, target):
+    """Whatever plan_mesh returns for the model axis must admit at least the
+    C=2 StarTrail refinement (that is the point of min_model=4)."""
+    plan = elastic.plan_mesh(world, model_axis_target=target)
+    assert plan.devices <= world
+    assert plan.model * plan.data == plan.devices
+    assert 2 in topo_lib.valid_c_values(plan.model)
+    # and the refined grid is constructible
+    grid = meshes.refine_grid(np.arange(plan.model), 2, "team_inner")
+    assert grid.size == plan.model

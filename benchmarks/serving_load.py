@@ -1,0 +1,202 @@
+"""Serving load benchmark: Poisson arrivals through the continuous-batching
+engine vs. sequential single-request serving of the same workload.
+
+Arrivals are Poisson in *engine-step* time (deterministic given --seed):
+request i becomes visible to the scheduler once ``step >= arrival[i]``.
+Both modes run on the same ``Engine`` instance (reset between phases) so
+the compiled prefill/decode buckets are shared; a full untimed warmup pass
+populates every bucket first, making the timed phases compile-free — the
+numbers compare *steady-state serving*, not jit time.
+
+Reports aggregate tokens/s, per-request latency (steps and seconds), batch
+occupancy and page utilization, and writes the result JSON (default
+``results/BENCH_serving.json``).
+
+  PYTHONPATH=src python benchmarks/serving_load.py --smoke
+  PYTHONPATH=src python benchmarks/serving_load.py --smoke --check  # CI gate
+"""
+
+import argparse
+import json
+import os
+import time
+
+
+def build_workload(engine, args):
+    import numpy as np
+
+    from repro.engine import Request
+
+    rng = np.random.default_rng(args.seed)
+    inter = rng.exponential(1.0 / args.rate, args.requests)
+    arrivals = np.floor(np.cumsum(inter)).astype(int)
+    vocab = engine.cfg.vocab_size
+    reqs = []
+    for i in range(args.requests):
+        plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
+        gen = int(rng.integers(args.min_gen, args.max_gen + 1))
+        temperature, top_k, top_p = 0.0, 0, 1.0
+        if args.sampled and i % 2 == 1:
+            temperature, top_k, top_p = 0.8, 32, 0.95
+        reqs.append(Request(
+            uid=f"req{i}", tokens=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=gen, temperature=temperature, top_k=top_k,
+            top_p=top_p, seed=args.seed + i))
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def run_continuous(engine, workload, max_steps=100_000):
+    """Feed requests at their arrival steps; drain with continuous batching."""
+    pending = sorted(workload, key=lambda p: p[0])
+    arrived_at = {}
+    t0 = time.monotonic()
+    i = 0
+    while pending or not engine.idle():
+        step = engine.metrics.steps
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            arrived_at[req.uid] = step
+            engine.add_request(req)
+        engine.step()
+        i += 1
+        if i > max_steps:
+            raise RuntimeError("continuous phase did not drain")
+    wall = time.monotonic() - t0
+    out = engine.collect()
+    lat_steps = [st.done_step - arrived_at[uid]
+                 for uid, st in engine.scheduler.finished.items()] or [0]
+    return {
+        "wall_s": wall,
+        "tokens": engine.metrics.tokens_out,
+        "tokens_per_s": engine.metrics.tokens_out / wall,
+        "steps": engine.metrics.steps,
+        "occupancy": engine.metrics.to_dict()["occupancy"],
+        "page_utilization": engine.metrics.to_dict()["page_utilization"],
+        "latency_steps_mean": sum(lat_steps) / len(lat_steps),
+        "latency_steps_max": max(lat_steps),
+        "decode_compiles": engine.metrics.decode_compiles,
+        "prefill_compiles": engine.metrics.prefill_compiles,
+    }, out
+
+
+def run_sequential(engine, workload):
+    """Serve each request alone, back-to-back. Only serving time is summed
+    — the engine reset between requests (pool reallocation) is bookkeeping
+    the continuous phase doesn't pay either, so it stays untimed."""
+    out = {}
+    wall = 0.0
+    tokens = steps = 0
+    for _, req in sorted(workload, key=lambda p: p[0]):
+        engine.reset()
+        engine.add_request(req)
+        t0 = time.monotonic()
+        out.update(engine.run())
+        wall += time.monotonic() - t0
+        tokens += engine.metrics.tokens_out
+        steps += engine.metrics.steps
+    return {
+        "wall_s": wall,
+        "tokens": tokens,
+        "tokens_per_s": tokens / wall,
+        "steps": steps,
+    }, out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=8)
+    ap.add_argument("--c", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--rate", type=float, default=1.0,
+                    help="Poisson arrival rate (requests per engine step)")
+    ap.add_argument("--min-prompt", type=int, default=3)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--min-gen", type=int, default=4)
+    ap.add_argument("--max-gen", type=int, default=12)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages-per-shard", type=int, default=64)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--sampled", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="every other request samples (T=0.8, k=32, p=0.95); "
+                         "--no-sampled for a pure-greedy workload")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="results/BENCH_serving.json")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero unless continuous beats sequential "
+                         "and batched == solo outputs")
+    args = ap.parse_args(argv)
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+
+    os.environ.setdefault(
+        "XLA_FLAGS",
+        f"--xla_force_host_platform_device_count={args.devices}")
+
+    from repro.engine import EngineConfig, build_engine
+
+    engine = build_engine(
+        args.arch, smoke=args.smoke, c=args.c,
+        eng=EngineConfig(max_slots=args.max_slots, page_size=args.page_size,
+                         pages_per_shard=args.pages_per_shard,
+                         max_len=args.max_len))
+    workload = build_workload(engine, args)
+
+    # untimed warmup pass: populates every prefill/decode bucket
+    warm, _ = run_continuous(engine, workload)
+    engine.reset()
+    compiles0 = (engine.metrics.prefill_compiles,
+                 engine.metrics.decode_compiles)
+
+    cont, cont_out = run_continuous(engine, workload)
+    engine.reset()
+    seq, seq_out = run_sequential(engine, workload)
+    compiles1 = (engine.metrics.prefill_compiles,
+                 engine.metrics.decode_compiles)
+
+    identical = cont_out == seq_out
+    result = {
+        "bench": "serving_load",
+        "arch": args.arch,
+        "smoke": args.smoke,
+        "devices": args.devices,
+        "c": args.c,
+        "workload": {
+            "requests": args.requests, "rate": args.rate,
+            "prompt_len": [args.min_prompt, args.max_prompt],
+            "gen": [args.min_gen, args.max_gen],
+            "sampled": args.sampled, "seed": args.seed,
+        },
+        "engine": {"max_slots": args.max_slots, "page_size": args.page_size,
+                   "pages_per_shard": args.pages_per_shard,
+                   "max_len": args.max_len},
+        "continuous": cont,
+        "sequential": seq,
+        "speedup": cont["tokens_per_s"] / seq["tokens_per_s"],
+        "outputs_identical_to_solo": identical,
+        "compiles_after_warmup": compiles1 == compiles0,
+    }
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(json.dumps(result, indent=2, sort_keys=True))
+    print(f"[serving_load] continuous {cont['tokens_per_s']:.2f} tok/s vs "
+          f"sequential {seq['tokens_per_s']:.2f} tok/s "
+          f"(speedup {result['speedup']:.2f}x), outputs identical: "
+          f"{identical}, wrote {args.out}")
+    if args.check:
+        assert identical, "batched outputs diverged from solo serving"
+        assert result["compiles_after_warmup"], "recompiled after warmup"
+        assert result["speedup"] > 1.0, (
+            f"continuous batching slower than sequential: "
+            f"{result['speedup']:.2f}x")
+    return result
+
+
+if __name__ == "__main__":
+    main()

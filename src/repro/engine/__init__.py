@@ -1,0 +1,21 @@
+"""repro.engine — continuous-batching serving engine with a paged,
+SP-sharded KV cache (see docs/SERVING.md).
+
+Public surface:
+  Request                — one serving request (prompt, budget, sampling)
+  Engine / EngineConfig  — add_request / step / collect / run driver
+  build_engine           — convenience constructor over the local mesh
+  paged_cache            — SP-sharded page-pool layout + island helpers
+  sampling               — vocab-parallel greedy/temperature/top-k/top-p
+  scheduler              — FIFO continuous-batching slot/page bookkeeping
+"""
+
+from repro import compat as _compat  # noqa: F401  (jax shims)
+from repro.engine.engine import (Engine, EngineConfig, EngineMetrics,
+                                 build_engine)
+from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
+
+__all__ = [
+    "Engine", "EngineConfig", "EngineMetrics", "build_engine",
+    "Request", "Scheduler", "SlotState", "bucket_pow2",
+]

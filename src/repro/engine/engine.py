@@ -1,0 +1,390 @@
+"""The serving engine: continuous batching over the paged, SP-sharded KV
+cache, compiled once per length bucket.
+
+The engine owns three kinds of state:
+
+  * **device** — the page pools (``paged_cache.init_pools``) and the model
+    params, both living in the refined ``(data, sp_grp, sp_ring, sp_team)``
+    mesh's shardings;
+  * **host** — the ``Scheduler`` (slots, page free lists, page table,
+    FIFO queue);
+  * **compiled** — two jit caches: prefill keyed by the padded prompt
+    length bucket, decode keyed by the per-shard page-table width bucket
+    ``W`` (powers of two). Per-sequence ``cache_len`` is a *traced operand*
+    of the decode step, so generation never recompiles: a decode fn only
+    recompiles when the longest active sequence crosses a power-of-two
+    block-count boundary. ``metrics.decode_compiles`` counts exactly these
+    cache misses — the "compiles at most once per bucket" guarantee is
+    testable.
+
+``step()`` is one driver iteration in the JetStream style: admit queued
+requests into free slots (each admission = one prefill + paged insert +
+first sampled token), then run a single decode step for every active slot,
+then evict finished requests. Outputs are **bit-identical to serving each
+request alone** (for batch-decoupled archs — MoE capacity couples tokens
+across the batch): attention/MLP/sampling are all row-independent, page
+content is per-slot, and sampling noise is keyed by (request seed, token
+position), never by slot or step index.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.dist.sharding import SP_AXES
+from repro.engine import paged_cache, sampling as sampling_lib
+from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
+from repro.models import transformer
+from repro.models.factory import Model
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 4          # decode batch width (slots)
+    page_size: int = 8          # tokens per KV page
+    pages_per_shard: int = 128  # pool capacity per SP shard
+    max_len: int = 512          # max prompt_len + max_new_tokens
+    max_top_k: int = 64         # static top-k candidate bound
+    max_steps: int = 100_000    # runaway guard for run()
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    steps: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    finished: int = 0
+    tokens_out: int = 0
+    prefill_compiles: int = 0
+    decode_compiles: int = 0
+    occupancy_sum: float = 0.0
+    peak_pages: int = 0
+    pages_total: int = 0
+    wall_s: float = 0.0
+
+    def reset(self, keep_compiles: bool = True) -> None:
+        pc, dc = self.prefill_compiles, self.decode_compiles
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, type(getattr(self, f.name))())
+        if keep_compiles:
+            self.prefill_compiles, self.decode_compiles = pc, dc
+
+    def to_dict(self) -> Dict[str, float]:
+        d = dataclasses.asdict(self)
+        d["occupancy"] = (self.occupancy_sum / self.decode_steps
+                          if self.decode_steps else 0.0)
+        d["page_utilization"] = (self.peak_pages / self.pages_total
+                                 if self.pages_total else 0.0)
+        d["tokens_per_s"] = (self.tokens_out / self.wall_s
+                             if self.wall_s > 0 else 0.0)
+        return d
+
+
+class Engine:
+    """Continuous-batching serving engine (add_request / step / collect)."""
+
+    def __init__(self, model: Model, mesh, run_cfg: RunConfig,
+                 eng: EngineConfig = EngineConfig(), params=None):
+        import jax
+        import jax.numpy as jnp
+        import dataclasses as dc
+
+        from repro.train import step as train_step
+
+        cfg = model.cfg
+        ok, why = paged_cache.supported(cfg)
+        if not ok:
+            raise NotImplementedError(f"repro.engine: {cfg.name}: {why}")
+        self.model, self.mesh, self.run_cfg, self.eng = model, mesh, run_cfg, eng
+        self.cfg = cfg
+        self.sp = 1
+        for a in SP_AXES:
+            self.sp *= mesh.shape[a]
+        shape = ShapeConfig("engine", seq_len=eng.max_len,
+                            global_batch=eng.max_slots, kind="decode")
+        rt = train_step.make_runtime(model, run_cfg, shape, mode="spmd")
+        rt = dc.replace(rt, batch_axes=(),
+                        st_cfg=dc.replace(rt.st_cfg, seq_scheme="contiguous"))
+        self.rt = rt
+        self.params = model.init(jax.random.PRNGKey(0)) if params is None \
+            else params
+        self._param_specs = model.partition(run_cfg.sharding_rules)
+        self._pool_part = paged_cache.pool_partition(cfg)
+        self._sc = sampling_lib.SamplingConfig(max_top_k=eng.max_top_k)
+        self._prefill_base = math.lcm(self.sp, eng.page_size)
+        # all pool (re)initialisation goes through one jitted zeroing fn so
+        # every pool entering a step fn is a jit output — device_put arrays
+        # carry a differently-typed sharding and would retrace the first
+        # call after each reset()
+        self._zero_pools = jax.jit(jax.shard_map(
+            lambda pools: jax.tree.map(jnp.zeros_like, pools),
+            mesh=mesh, in_specs=(self._pool_part,),
+            out_specs=self._pool_part, check_vma=False),
+            donate_argnums=(0,))
+        self.pools = self._zero_pools(paged_cache.init_pools(
+            cfg, mesh, self.sp * eng.pages_per_shard, eng.page_size))
+        self.scheduler = Scheduler(
+            max_slots=eng.max_slots, page_size=eng.page_size, sp=self.sp,
+            pages_per_shard=eng.pages_per_shard, max_len=eng.max_len)
+        self._prefill_fns: Dict[int, object] = {}
+        self._decode_fns: Dict[int, object] = {}
+        self._base_keys: Dict[int, np.ndarray] = {}
+        self.metrics = EngineMetrics(
+            pages_total=self.scheduler.pages_total())
+
+    # ---- request lifecycle ---------------------------------------------
+    def add_request(self, req: Request) -> None:
+        self.scheduler.enqueue(req)
+
+    def collect(self) -> Dict[str, List[int]]:
+        """uid -> generated tokens, for every finished request."""
+        return {uid: list(st.out)
+                for uid, st in self.scheduler.finished.items()}
+
+    def reset(self) -> None:
+        """Drop all requests and cache contents; keep compiled fns."""
+        self.pools = self._zero_pools(self.pools)
+        self.scheduler = Scheduler(
+            max_slots=self.eng.max_slots, page_size=self.eng.page_size,
+            sp=self.sp, pages_per_shard=self.eng.pages_per_shard,
+            max_len=self.eng.max_len)
+        self.metrics.reset(keep_compiles=True)
+        self.metrics.pages_total = self.scheduler.pages_total()
+
+    # ---- compiled-step caches ------------------------------------------
+    def _prefill_bucket(self, prompt_len: int) -> int:
+        return bucket_pow2(prompt_len, self._prefill_base)
+
+    def _prefill_fn(self, bucket_len: int, sampled: bool):
+        """One jit per (padded prompt length, any-sampling). All-greedy
+        requests skip the top-k/top-p/gumbel kernel entirely; the sampled
+        variant's greedy branch produces the identical token for T<=0 rows,
+        so the split never changes outputs."""
+        import jax
+        import dataclasses as dc
+        from jax.sharding import PartitionSpec as P
+
+        from repro.serve import step as serve_step
+
+        fn = self._prefill_fns.get((bucket_len, sampled))
+        if fn is not None:
+            return fn
+        cfg, eng, sc = self.cfg, self.eng, self._sc
+        rt = dc.replace(self.rt, st_cfg=dc.replace(self.rt.st_cfg,
+                                                   seq_len=bucket_len))
+        pat = transformer.layer_pattern(cfg)
+
+        def island(params, tokens, prompt_len, pools, table_row,
+                   temp, top_k, top_p, key):
+            last, cache = serve_step.lm_prefill(
+                rt, params, {"tokens": tokens}, cfg,
+                prompt_len=prompt_len, return_hidden=True)
+            subs = {}
+            for i in range(len(pat)):
+                subs[f"sub{i}"] = paged_cache.insert_prompt(
+                    rt, pools["stack"][f"sub{i}"],
+                    cache["stack"][f"sub{i}"]["k"],
+                    cache["stack"][f"sub{i}"]["v"],
+                    table_row, prompt_len[0], eng.page_size)
+            head = params.get("lm_head", params["embed"])
+            if sampled:
+                k1 = jax.random.fold_in(key, prompt_len[0])
+                tok = sampling_lib.sample(
+                    rt, head, last, cfg, temperature=temp, top_k=top_k,
+                    top_p=top_p, keys=k1[None], sc=sc)
+            else:
+                tok = sampling_lib.greedy(rt, head, last, cfg)
+            return tok, {"stack": subs}
+
+        fn = jax.jit(jax.shard_map(
+            island, mesh=self.mesh,
+            in_specs=(self._param_specs, P(None, SP_AXES), P(),
+                      self._pool_part, P(), P(), P(), P(), P()),
+            out_specs=(P(), self._pool_part), check_vma=False),
+            donate_argnums=(3,))
+        self._prefill_fns[(bucket_len, sampled)] = fn
+        self.metrics.prefill_compiles += 1
+        return fn
+
+    def _decode_fn(self, width: int, sampled: bool):
+        """One jit per (table-width bucket, any-active-request-samples)."""
+        import jax
+        from jax.sharding import PartitionSpec as P
+
+        from repro.serve import step as serve_step
+
+        fn = self._decode_fns.get((width, sampled))
+        if fn is not None:
+            return fn
+        cfg, eng, rt, sc = self.cfg, self.eng, self.rt, self._sc
+
+        def island(params, pools, tokens, cache_len, table,
+                   temp, top_k, top_p, keys, active):
+            paged = paged_cache.PagedTables(table=table,
+                                            page_size=eng.page_size)
+            sampling = {"temperature": temp, "top_k": top_k, "top_p": top_p,
+                        "keys": keys, "sc": sc} if sampled else None
+            return serve_step.lm_decode_step(
+                rt, params, pools, tokens, cfg, cache_len, paged=paged,
+                active=active, sampling=sampling)
+
+        fn = jax.jit(jax.shard_map(
+            island, mesh=self.mesh,
+            in_specs=(self._param_specs, self._pool_part, P(), P(), P(),
+                      P(), P(), P(), P(), P()),
+            out_specs=(P(), self._pool_part), check_vma=False),
+            donate_argnums=(1,))
+        self._decode_fns[(width, sampled)] = fn
+        self.metrics.decode_compiles += 1
+        return fn
+
+    def xla_compiles(self) -> Tuple[int, int]:
+        """(prefill, decode) XLA-level trace counts summed over the bucket
+        fns. Unlike the bucket-miss counters this catches *silent*
+        retracing (dtype/weak-type drift in the host-assembled operands):
+        every bucket fn should hold exactly one cache entry."""
+        def total(fns):
+            n = 0
+            for fn in fns.values():
+                size = getattr(fn, "_cache_size", None)
+                n += size() if callable(size) else 1
+            return n
+        return total(self._prefill_fns), total(self._decode_fns)
+
+    def _base_key(self, seed: int) -> np.ndarray:
+        key = self._base_keys.get(seed)
+        if key is None:
+            import jax
+
+            key = np.asarray(jax.random.PRNGKey(seed))
+            self._base_keys[seed] = key
+        return key
+
+    # ---- driver ---------------------------------------------------------
+    def step(self) -> List[Tuple[str, int]]:
+        """One driver iteration: admit (prefill-insert) + one decode step.
+
+        Returns the (uid, token) pairs emitted this step.
+        """
+        t0 = time.monotonic()
+        emitted: List[Tuple[str, int]] = []
+        m = self.metrics
+
+        for st in self.scheduler.admit(m.steps):
+            req = st.req
+            bucket = self._prefill_bucket(req.prompt_len)
+            fn = self._prefill_fn(bucket, req.temperature > 0.0)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :req.prompt_len] = req.tokens
+            tok, self.pools = fn(
+                self.params, tokens,
+                np.asarray([req.prompt_len], np.int32), self.pools,
+                self.scheduler.table[st.slot].copy(),
+                np.asarray([req.temperature], np.float32),
+                np.asarray([req.top_k], np.int32),
+                np.asarray([req.top_p], np.float32),
+                self._base_key(req.seed))
+            st.cache_len = req.prompt_len
+            st.out.append(int(np.asarray(tok)[0, 0]))
+            st.first_token_step = m.steps
+            emitted.append((req.uid, st.out[-1]))
+            m.prefills += 1
+            m.tokens_out += 1
+            if st.done:
+                self.scheduler.finish(st.slot, m.steps)
+                m.finished += 1
+
+        active = self.scheduler.active()
+        if active:
+            width = self.scheduler.decode_width()
+            sampled = any(st.req.temperature > 0.0 for st in active)
+            fn = self._decode_fn(width, sampled)
+            B = self.eng.max_slots
+            tokens = np.zeros((B, 1), np.int32)
+            cache_len = np.zeros((B,), np.int32)
+            temp = np.zeros((B,), np.float32)
+            top_k = np.zeros((B,), np.int32)
+            top_p = np.ones((B,), np.float32)
+            keys = np.zeros((B, 2), np.uint32)
+            act = np.zeros((B,), bool)
+            for st in active:
+                i = st.slot
+                tokens[i, 0] = st.out[-1]
+                cache_len[i] = st.cache_len
+                temp[i] = st.req.temperature
+                top_k[i] = st.req.top_k
+                top_p[i] = st.req.top_p
+                keys[i] = self._base_key(st.req.seed)
+                act[i] = True
+            table = np.ascontiguousarray(self.scheduler.table[:, :, :width])
+            tok, self.pools = fn(self.params, self.pools, tokens, cache_len,
+                                 table, temp, top_k, top_p, keys, act)
+            tok = np.asarray(tok)
+            for st in active:
+                t = int(tok[st.slot, 0])
+                st.out.append(t)
+                st.cache_len += 1
+                emitted.append((st.req.uid, t))
+                m.tokens_out += 1
+                if st.done:
+                    self.scheduler.finish(st.slot, m.steps)
+                    m.finished += 1
+            m.decode_steps += 1
+            m.occupancy_sum += len(active) / self.eng.max_slots
+
+        m.peak_pages = max(m.peak_pages, self.scheduler.pages_in_use())
+        m.steps += 1
+        m.wall_s += time.monotonic() - t0
+        return emitted
+
+    def idle(self) -> bool:
+        return not self.scheduler.queue and not self.scheduler.active()
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[str, List[int]]:
+        """Drive until every queued/running request finishes."""
+        limit = max_steps or self.eng.max_steps
+        n = 0
+        while not self.idle():
+            emitted = self.step()
+            if not emitted and not self.scheduler.active():
+                # queue non-empty but nothing admitted and nothing decoding:
+                # the head request cannot make progress (enqueue validation
+                # makes this unreachable, but fail loud rather than spin)
+                raise RuntimeError(
+                    f"engine stalled with {len(self.scheduler.queue)} queued "
+                    "requests and no admissible slot/pages")
+            n += 1
+            if n > limit:
+                raise RuntimeError(f"engine did not drain in {limit} steps")
+        return self.collect()
+
+
+def build_engine(arch: str, *, smoke: bool = True, c: int = 1, data: int = 1,
+                 eng: EngineConfig = EngineConfig(), params=None,
+                 init_seed: int = 0) -> Engine:
+    """Convenience constructor over the local forced-host-device mesh.
+
+    Uses every available device: r = n_devices // (data * c^2), the same
+    refinement rule as the train/serve launchers.
+    """
+    import jax
+
+    from repro.configs import registry
+    from repro.dist import meshes
+    from repro.models.factory import build_model
+
+    cfg = registry.get_smoke(arch) if smoke else registry.get(arch)
+    model = build_model(cfg)
+    run_cfg = RunConfig(c=c, seq_scheme="contiguous")
+    n = len(jax.devices())
+    r = n // (data * c * c)
+    mesh = meshes.local_mesh_for_tests(c=c, r=r, data=data)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(init_seed))
+    return Engine(model, mesh, run_cfg, eng, params)

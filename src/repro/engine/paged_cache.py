@@ -1,0 +1,210 @@
+"""Block-paged KV cache with an SP-sharded page pool.
+
+Layout
+------
+Each attention sub-layer owns a pool of fixed-size pages
+
+    k, v : (n_periods, P_sp * pages_per_shard, page_size, Hkv, hd)
+
+sharded on the *page* dimension over the concentric SP axes
+``(sp_grp, sp_ring, sp_team)`` — the same axes (and the same linear rank
+order, ``rank = (g*R + r)*C + t``) that ``serve.kv_cache.cache_partition_for``
+uses for the contiguous decode cache. Inside the decode island every shard
+therefore holds a ``(n_periods, pages_per_shard, page_size, Hkv, hd)`` slice.
+
+A sequence's logical KV blocks (block ``b`` covers token positions
+``[b*page_size, (b+1)*page_size)``) are distributed **round-robin** over the
+SP shards: block ``b`` lives on shard ``b % P_sp`` as that shard's ``b //
+P_sp``-th block of the sequence. The page table is a replicated
+
+    table : (max_slots, P_sp, W) int32     # local page id, -1 = unallocated
+
+so each shard reads its own row (``dynamic_index`` at the traced rank) and
+touches only ``ceil(blocks / P_sp)`` pages per sequence — per-device decode
+compute and memory stay flat in the SP degree, exactly the Ring-Attention
+degenerate configuration of ``core.startrail.decode_attention`` (partial
+attention per shard + global lse-combine ``psum``).
+
+Validity is encoded through *positions*, as everywhere else in this repo:
+unallocated/unfilled slots get ``pos = cache_len + 1`` so the causal mask
+kills them — no extra mask plumbing through the attention kernels.
+
+Device-side helpers in this module are pure functions meant to run inside a
+``shard_map`` island; host-side page accounting lives in
+``repro.engine.scheduler``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import SP_AXES
+from repro.models import transformer
+from repro.models.runtime import Runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedTables:
+    """Traced page-table view threaded through the decode step.
+
+    table: (B, P_sp, W) int32, replicated — local page ids per (slot, shard,
+      local block); -1 marks unallocated entries.
+    page_size: static tokens per page.
+    """
+
+    table: jax.Array
+    page_size: int
+
+
+def supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Engine v1 serves decoder-only stacks whose mixers are all attention
+    (paged KV is meaningless for recurrent per-slot states; those archs
+    keep the contiguous serving path)."""
+    if cfg.encdec:
+        return False, "encoder-decoder archs use the contiguous serve path"
+    if cfg.frontend_stub is not None:
+        return False, "frontend (VLM/audio) archs use the contiguous serve path"
+    for mixer, _ in transformer.layer_pattern(cfg):
+        if mixer != "attn":
+            return False, (f"mixer {mixer!r} keeps per-slot recurrent state; "
+                           "paged engine v1 covers attention mixers only")
+    return True, ""
+
+
+def pool_spec(cfg: ModelConfig, pages_global: int, page_size: int):
+    """Abstract pool tree {'stack': {subN: {'k','v'}}} (period-stacked)."""
+    dtype = jnp.dtype(cfg.param_dtype)
+    pat = transformer.layer_pattern(cfg)
+    n_periods = cfg.num_layers // len(pat)
+    hd = cfg.head_dim_
+    leaf = jax.ShapeDtypeStruct(
+        (n_periods, pages_global, page_size, cfg.num_kv_heads, hd), dtype)
+    return {"stack": {f"sub{i}": {"k": leaf, "v": leaf}
+                      for i in range(len(pat))}}
+
+
+def pool_partition(cfg: ModelConfig):
+    """PartitionSpec tree matching pool_spec: pages sharded over SP."""
+    pat = transformer.layer_pattern(cfg)
+    spec = P(None, SP_AXES, None, None, None)
+    return {"stack": {f"sub{i}": {"k": spec, "v": spec}
+                      for i in range(len(pat))}}
+
+
+def init_pools(cfg: ModelConfig, mesh, pages_global: int, page_size: int):
+    """Concrete zeroed pools, placed with the SP-sharded layout."""
+    spec = pool_spec(cfg, pages_global, page_size)
+    part = pool_partition(cfg)
+    return jax.tree.map(
+        lambda s, p: jax.device_put(jnp.zeros(s.shape, s.dtype),
+                                    NamedSharding(mesh, p)),
+        spec, part)
+
+
+# ---------------------------------------------------------------------------
+# device-side read/write (call inside shard_map; pools are local slices)
+# ---------------------------------------------------------------------------
+
+def write_and_read(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
+                   paged: PagedTables, cache_len, active):
+    """Append one token per slot, then materialise this shard's key view.
+
+    cache: {'k','v'} local pool slices (pages_loc, page_size, Hkv, hd).
+    k_new/v_new: (B, 1, Hkv, hd) — post-RoPE K and V of the new token.
+    cache_len: (B,) int32 — the new token's global position.
+    active: (B,) bool or None — inactive slots write nothing.
+
+    Returns (k_r, v_r, new_cache, pos_k, valid) with k_r/v_r of shape
+    (B, W*page_size, Hkv, hd) and pos_k (B, W*page_size) already masked to
+    ``cache_len + 1`` on invalid slots.
+    """
+    pool_k, pool_v = cache["k"], cache["v"]
+    pages_loc, ps = pool_k.shape[0], paged.page_size
+    rank = rt.sp_rank()
+    sp = rt.sp_size()
+    tbl = jax.lax.dynamic_index_in_dim(paged.table, rank, axis=1,
+                                       keepdims=False)        # (B, W)
+    B, W = tbl.shape
+
+    # -- write the new token into its owning shard's page ----------------
+    g = cache_len // ps                                       # global block
+    j = g // sp                                               # local block
+    page = jnp.take_along_axis(tbl, jnp.clip(j, 0, W - 1)[:, None],
+                               axis=1)[:, 0]
+    ok = ((g % sp) == rank) & (j < W) & (page >= 0)
+    if active is not None:
+        ok &= active
+    page = jnp.where(ok, page, pages_loc)                     # OOB -> drop
+    off = cache_len % ps
+    pool_k = pool_k.at[page, off].set(
+        k_new[:, 0].astype(pool_k.dtype), mode="drop")
+    pool_v = pool_v.at[page, off].set(
+        v_new[:, 0].astype(pool_v.dtype), mode="drop")
+
+    # -- gather this shard's pages of every slot -------------------------
+    safe = jnp.clip(tbl, 0, pages_loc - 1)
+    k_r = pool_k[safe]                                        # (B,W,ps,H,hd)
+    v_r = pool_v[safe]
+    k_r = k_r.reshape(B, W * ps, *pool_k.shape[2:])
+    v_r = v_r.reshape(B, W * ps, *pool_v.shape[2:])
+    pos = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * ps)[:, None] \
+        + jnp.arange(ps, dtype=jnp.int32)[None]
+    pos = pos.reshape(W * ps)                                 # (S,)
+    valid = jnp.repeat(tbl >= 0, ps, axis=1)                  # (B, S)
+    valid &= pos[None] <= cache_len[:, None]
+    pos_k = jnp.where(valid, pos[None], (cache_len + 1)[:, None])
+    return k_r, v_r, {"k": pool_k, "v": pool_v}, pos_k, valid
+
+
+def insert_prompt(rt: Runtime, pools_sub: Dict[str, jax.Array],
+                  k_stack, v_stack, table_row, prompt_len, page_size: int):
+    """Scatter a prefilled sequence's K/V into this shard's pool pages.
+
+    pools_sub: {'k','v'} local slices (n_periods, pages_loc, ps, Hkv, hd).
+    k_stack/v_stack: (n_periods, 1, S_loc, Hkv, hd) — the prefill cache of
+      one sequence, SP-sharded contiguously (post-RoPE, as written by
+      ``serve.step.lm_prefill``).
+    table_row: (P_sp, W) int32 — the target slot's page-table row.
+    prompt_len: traced scalar int32 — tokens beyond it are padding; their
+      blocks are never written (and padding *within* a prompt's last block
+      is written but unreadable: its positions exceed every cache_len until
+      decode overwrites them).
+
+    The prompt arrives sequence-sharded but pages are owned round-robin, so
+    one tiled all_gather over the SP axes (O(L) — same order as the prefill
+    itself) re-materialises the full prompt before each shard scatters the
+    blocks it owns.
+    """
+    rank = rt.sp_rank()
+    sp = rt.sp_size()
+    ps = page_size
+    kg = rt.all_gather_model(k_stack, axis=2)[:, 0]     # (n_per, L, Hkv, hd)
+    vg = rt.all_gather_model(v_stack, axis=2)[:, 0]
+    n_per, L = kg.shape[0], kg.shape[1]
+    G = L // ps
+    kb = kg.reshape(n_per, G, ps, *kg.shape[2:])
+    vb = vg.reshape(n_per, G, ps, *vg.shape[2:])
+
+    tbl = jax.lax.dynamic_index_in_dim(table_row, rank, axis=0,
+                                       keepdims=False)  # (W,)
+    W = tbl.shape[0]
+    pages_loc = pools_sub["k"].shape[1]
+    gidx = jnp.arange(G, dtype=jnp.int32)
+    j = gidx // sp
+    page = tbl[jnp.clip(j, 0, W - 1)]
+    mine = ((gidx % sp) == rank) & (gidx * ps < prompt_len) \
+        & (j < W) & (page >= 0)
+    page = jnp.where(mine, page, pages_loc)             # OOB -> drop
+    pool_k = pools_sub["k"].at[:, page].set(
+        kb.astype(pools_sub["k"].dtype), mode="drop")
+    pool_v = pools_sub["v"].at[:, page].set(
+        vb.astype(pools_sub["v"].dtype), mode="drop")
+    return {"k": pool_k, "v": pool_v}

@@ -1,0 +1,167 @@
+"""Vocab-parallel sampling: greedy / temperature / top-k / top-p without
+ever gathering the full logits.
+
+The vocabulary is sharded over the SP axes (Megatron-style, same layout as
+``blocks.lm_head_logits_and_loss``), so every primitive here works on the
+local ``(B, V/P)`` logits slice plus O(1)-sized collectives:
+
+  * **greedy / argmax** — local top-1, then a lexicographic global combine:
+    ``pmax`` of the values, ``pmin`` of the winning shard rank, ``psum`` of
+    the winner's token id. Ties break toward the lowest shard and, within a
+    shard, toward the lowest local index — i.e. deterministically toward the
+    *smallest global token id* among tied maxima.
+  * **temperature** — pure local scaling (sampling itself is gumbel-max:
+    ``argmax(logits/T + gumbel)`` is an exact categorical sample, and argmax
+    distributes over shards exactly like greedy).
+  * **top-k** — each shard contributes its local top-``K_MAX`` values
+    (``K_MAX`` a static bound, default 64); the k-th largest of the gathered
+    ``P * K_MAX`` candidates is the global threshold. Only ``K_MAX`` scalars
+    per shard are communicated, never the logits.
+  * **top-p** — the nucleus is found as a *probability threshold*: global
+    softmax normalisation via the flash-style ``pmax``/``psum`` pair, then a
+    fixed-iteration bisection on the threshold ``t`` with the monotone mass
+    function ``mass(t) = psum(sum(probs[probs >= t]))``. Keeps the smallest
+    set of highest-probability tokens whose mass reaches ``p`` (ties at the
+    threshold are all kept, matching conventional implementations).
+
+Per-sequence parameters are traced ``(B,)`` arrays so one compiled decode
+step serves a continuously-batched mix of greedy and stochastic requests.
+Gumbel noise is keyed per ``(request, position)`` (the engine folds the
+token position into the key) plus the shard rank, which makes every
+request's sample stream independent of batch composition — the property
+behind the engine's "batched == solo" bit-exactness guarantee.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.runtime import Runtime
+
+NEG = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    """Static bounds of the sampling kernels (part of the compile key)."""
+
+    max_top_k: int = 64      # static candidate count gathered per shard
+    nucleus_iters: int = 30  # bisection steps for the top-p threshold
+
+
+def shard_logits(rt: Runtime, head_params, x, cfg: ModelConfig):
+    """This shard's vocab-slice logits for the newest position.
+
+    x: (B, 1, D) replicated over SP. Returns (logits (B, V_local) float32
+    with padded vocab rows at NEG, lo = first global token id of the slice).
+    """
+    table = rt.dense(head_params["table"], ("vocab", "embed"))
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
+                        table.astype(jnp.float32))[:, 0]
+    v_local = table.shape[0]
+    lo = rt.sp_rank() * v_local
+    logits = jnp.where((lo + jnp.arange(v_local)) < cfg.vocab_size,
+                       logits, NEG)
+    return logits, lo
+
+
+def lowest_shard_argmax(rt: Runtime, vals, lo):
+    """Global argmax of shard-sliced (B, V_local) values -> (B,) token ids.
+
+    Deterministic tie-break: the lowest shard wins (pmin over the winning
+    ranks), and jnp.argmax picks the lowest local index — so ties resolve
+    to the smallest global token id.
+    """
+    loc_max = jnp.max(vals, axis=-1)
+    loc_arg = jnp.argmax(vals, axis=-1).astype(jnp.int32)
+    if rt.mode == "local":
+        return loc_arg
+    axes = rt.sp_axes
+    rank = rt.sp_rank()
+    g_max = jax.lax.pmax(loc_max, axes)
+    win = loc_max >= g_max
+    win_rank = jax.lax.pmin(
+        jnp.where(win, rank, jnp.int32(2 ** 30)), axes)
+    mine = win & (rank == win_rank)
+    return jax.lax.psum(jnp.where(mine, loc_arg + lo, 0), axes)
+
+
+def greedy(rt: Runtime, head_params, x, cfg: ModelConfig):
+    """Greedy next token, vocab-parallel. x: (B, 1, D) -> (B, 1) int32."""
+    logits, lo = shard_logits(rt, head_params, x, cfg)
+    return lowest_shard_argmax(rt, logits, lo)[:, None]
+
+
+def _psum(rt: Runtime, x):
+    return x if rt.mode == "local" else jax.lax.psum(x, rt.sp_axes)
+
+
+def _pmax(rt: Runtime, x):
+    return x if rt.mode == "local" else jax.lax.pmax(x, rt.sp_axes)
+
+
+def sample(rt: Runtime, head_params, x, cfg: ModelConfig, *,
+           temperature, top_k, top_p, keys,
+           sc: SamplingConfig = SamplingConfig()):
+    """Sample next tokens with per-sequence parameters. Returns (B, 1) int32.
+
+    temperature: (B,) float32 — rows with temperature <= 0 decode greedily.
+    top_k: (B,) int32 — 0 disables; effective values are capped at
+      ``sc.max_top_k * P_sp`` (the static candidate pool).
+    top_p: (B,) float32 — 1.0 disables.
+    keys: (B, 2) uint32 PRNG keys already folded with the token *position*;
+      the shard rank is folded in here so noise is shard-local.
+    """
+    logits, lo = shard_logits(rt, head_params, x, cfg)
+    B, v_local = logits.shape
+    greedy_tok = lowest_shard_argmax(rt, logits, lo)
+
+    t = jnp.maximum(temperature, 1e-6)[:, None]
+    z = logits / t
+
+    # ---- top-k: global threshold from each shard's local top-K_MAX ----
+    kk = min(sc.max_top_k, v_local)
+    loc_top = jax.lax.top_k(z, kk)[0]                       # (B, kk)
+    all_top = rt.all_gather_sp_stack(loc_top)               # (P, B, kk)
+    all_top = jnp.moveaxis(all_top, 0, 1).reshape(B, -1)    # (B, P*kk)
+    all_top = -jnp.sort(-all_top, axis=-1)
+    idx = jnp.clip(top_k - 1, 0, all_top.shape[-1] - 1)
+    thr_k = jnp.take_along_axis(all_top, idx[:, None], axis=-1)
+    z = jnp.where((top_k[:, None] > 0) & (z < thr_k), NEG, z)
+
+    # ---- global softmax over the surviving tokens ----
+    m = _pmax(rt, jnp.max(z, axis=-1))                      # (B,)
+    ez = jnp.exp(z - m[:, None])
+    se = _psum(rt, jnp.sum(ez, axis=-1))                    # (B,)
+    probs = ez / se[:, None]
+
+    # ---- top-p: bisect the largest threshold with mass(t) >= p ----
+    lo_t = jnp.zeros_like(top_p)
+    hi_t = jnp.ones_like(top_p)
+    for _ in range(sc.nucleus_iters):
+        mid = 0.5 * (lo_t + hi_t)
+        mass = _psum(rt, jnp.sum(
+            jnp.where(probs >= mid[:, None], probs, 0.0), axis=-1))
+        ge = mass >= top_p
+        lo_t = jnp.where(ge, mid, lo_t)
+        hi_t = jnp.where(ge, hi_t, mid)
+    z = jnp.where((top_p[:, None] < 1.0) & (probs < lo_t[:, None]), NEG, z)
+
+    # ---- gumbel-max: argmax(z + g) is an exact categorical sample ----
+    rank = rt.sp_rank()
+
+    def noise_row(key):
+        return jax.random.gumbel(jax.random.fold_in(key, rank),
+                                 (v_local,), jnp.float32)
+
+    g = jax.vmap(noise_row)(keys)
+    pert = jnp.where(z <= NEG / 2, NEG, z + g)
+    samp_tok = lowest_shard_argmax(rt, pert, lo)
+
+    tok = jnp.where(temperature <= 0.0, greedy_tok, samp_tok)
+    return tok[:, None]

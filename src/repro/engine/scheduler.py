@@ -1,0 +1,176 @@
+"""Continuous-batching scheduler: FIFO admission, slot reuse, paged
+allocation, eviction on completion (JetStream-style driver state, adapted
+to the round-robin SP page layout of ``engine.paged_cache``).
+
+All state here is host-side numpy/python; the device sees only the page
+*table* and per-slot scalars the engine assembles each step.
+
+Policy
+------
+* **FIFO admission with head-of-line blocking**: requests are admitted in
+  arrival order; if the head request does not fit (no free slot, or a shard
+  lacks free pages) nothing behind it is admitted. Simple and starvation-free.
+* **Worst-case reservation**: a request's pages for ``prompt_len +
+  max_new_tokens`` positions are allocated at admission, so decode can never
+  stall mid-generation. (Lazy growth + preemption à la vLLM is a possible
+  refinement; the page-table plumbing already supports it.)
+* **Round-robin block placement**: logical block ``b`` goes to SP shard
+  ``b % P_sp`` — per-shard load for any single sequence is balanced to
+  within one page, keeping per-device decode compute flat in ``P_sp``.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+from typing import Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request (sampling follows ``engine.sampling``)."""
+
+    uid: str
+    tokens: List[int]                  # prompt token ids
+    max_new_tokens: int
+    temperature: float = 0.0           # <= 0 -> greedy
+    top_k: int = 0                     # 0 disables
+    top_p: float = 1.0                 # 1.0 disables
+    seed: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.tokens)
+
+
+@dataclasses.dataclass
+class SlotState:
+    req: Request
+    slot: int
+    arrived_step: int
+    cache_len: int = 0                 # filled KV positions
+    out: List[int] = dataclasses.field(default_factory=list)
+    pages: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    first_token_step: Optional[int] = None
+    done_step: Optional[int] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.req.max_new_tokens
+
+
+def bucket_pow2(n: int, lo: int = 1) -> int:
+    """Smallest lo * 2^i >= n (length-bucketed compilation)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Scheduler:
+    def __init__(self, *, max_slots: int, page_size: int, sp: int,
+                 pages_per_shard: int, max_len: int):
+        if max_len % page_size:
+            max_len = (max_len // page_size + 1) * page_size
+        self.max_slots = max_slots
+        self.page_size = page_size
+        self.sp = sp
+        self.pages_per_shard = pages_per_shard
+        self.max_len = max_len
+        self.max_blocks = math.ceil(max_len / page_size)
+        self.table_width = math.ceil(self.max_blocks / sp)
+        self.queue: Deque[Request] = collections.deque()
+        self.slots: List[Optional[SlotState]] = [None] * max_slots
+        self.free_pages: List[List[int]] = [
+            list(range(pages_per_shard - 1, -1, -1)) for _ in range(sp)]
+        self.table = np.full((max_slots, sp, self.table_width), -1, np.int32)
+        self.finished: Dict[str, SlotState] = {}
+
+    # ---- queue ----------------------------------------------------------
+    def enqueue(self, req: Request) -> None:
+        if req.prompt_len < 1:
+            raise ValueError(f"{req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"{req.uid}: max_new_tokens must be >= 1")
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"{req.uid}: prompt {req.prompt_len} + budget "
+                f"{req.max_new_tokens} exceeds engine max_len {self.max_len}")
+        worst = max(self._per_shard_need(self._blocks_for(req)))
+        if worst > self.pages_per_shard:
+            raise ValueError(
+                f"{req.uid}: needs {worst} pages on a shard but the pool "
+                f"holds {self.pages_per_shard}/shard — raise pages_per_shard "
+                f"or shrink the request")
+        self.queue.append(req)
+
+    # ---- paging ---------------------------------------------------------
+    def _blocks_for(self, req: Request) -> int:
+        return math.ceil((req.prompt_len + req.max_new_tokens)
+                         / self.page_size)
+
+    def _per_shard_need(self, nb: int) -> List[int]:
+        """Pages shard s must supply for blocks 0..nb-1 (round-robin)."""
+        return [nb // self.sp + (1 if s < nb % self.sp else 0)
+                for s in range(self.sp)]
+
+    def pages_in_use(self) -> int:
+        return self.sp * self.pages_per_shard - sum(
+            len(f) for f in self.free_pages)
+
+    def pages_total(self) -> int:
+        return self.sp * self.pages_per_shard
+
+    # ---- admission / eviction ------------------------------------------
+    def admit(self, step: int) -> List[SlotState]:
+        """FIFO-admit queued requests into free slots while pages last."""
+        admitted = []
+        while self.queue:
+            free_slot = next(
+                (i for i, s in enumerate(self.slots) if s is None), None)
+            if free_slot is None:
+                break
+            req = self.queue[0]
+            nb = self._blocks_for(req)
+            need = self._per_shard_need(nb)
+            if any(len(self.free_pages[s]) < need[s] for s in range(self.sp)):
+                break                               # head-of-line blocks
+            self.queue.popleft()
+            st = SlotState(req=req, slot=free_slot, arrived_step=step)
+            for b in range(nb):
+                shard = b % self.sp
+                page = self.free_pages[shard].pop()
+                self.table[free_slot, shard, b // self.sp] = page
+                st.pages.append((shard, page))
+            self.slots[free_slot] = st
+            admitted.append(st)
+        return admitted
+
+    def finish(self, slot: int, step: int) -> SlotState:
+        st = self.slots[slot]
+        assert st is not None
+        for shard, page in st.pages:
+            self.free_pages[shard].append(page)
+        st.pages = []
+        st.done_step = step
+        self.table[slot] = -1
+        self.slots[slot] = None
+        self.finished[st.req.uid] = st
+        return st
+
+    # ---- decode batch shape --------------------------------------------
+    def active(self) -> List[SlotState]:
+        return [s for s in self.slots if s is not None]
+
+    def decode_width(self) -> int:
+        """Bucketed per-shard table width for the current decode batch: the
+        write at position cache_len needs blocks 0..cache_len//ps, i.e.
+        ceil((cache_len//ps + 1) / sp) local blocks."""
+        need = 1
+        for st in self.active():
+            blocks = st.cache_len // self.page_size + 1
+            need = max(need, math.ceil(blocks / self.sp))
+        return min(bucket_pow2(need), self.table_width)

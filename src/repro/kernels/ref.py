@@ -37,28 +37,30 @@ def make_mask(
     window: Optional[int] = None,
     prefix_len: Optional[int] = None,
 ) -> Optional[jax.Array]:
-    """(Sq, Sk) boolean mask; None means fully visible.
+    """(Sq, Sk) boolean mask — or (B, Sq, Sk) when either position array
+    carries a leading batch dim (per-sequence cache lengths in the paged
+    decode path). None means fully visible.
 
     prefix_len: prefix-LM (PaliGemma): keys with pos < prefix_len are
     visible to every query (bidirectional prefix), the rest is causal.
     """
     if not causal and window is None:
         return None
-    pq = pos_q[:, None]
-    pk = pos_k[None, :]
-    mask = jnp.ones((pos_q.shape[0], pos_k.shape[0]), dtype=bool)
+    pq = pos_q[..., :, None]
+    pk = pos_k[..., None, :]
+    mask = None
     if causal:
         cm = pk <= pq
         if prefix_len is not None:
             cm |= pk < prefix_len
-        mask &= cm
+        mask = cm
     if window is not None:
         wm = (pq - pk) < window
         if not causal:
             wm &= (pk - pq) < window
         if prefix_len is not None:
             wm |= pk < prefix_len
-        mask &= wm
+        mask = wm if mask is None else (mask & wm)
     return mask
 
 
@@ -96,14 +98,16 @@ def block_attention(
     mask = make_mask(pos_q, pos_k, causal=causal, window=window,
                      prefix_len=prefix_len)
     if mask is not None:
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        # (Sq, Sk) shared mask, or (B, Sq, Sk) per-sequence (paged decode)
+        mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
 
     m = jnp.max(s, axis=-1)  # (B, Hkv, G, Sq)
     dead = m <= NEG_INF / 2
     m_safe = jnp.where(dead, 0.0, m)
     p = jnp.exp(s - m_safe[..., None])
     if mask is not None:
-        p = p * mask[None, None, None]
+        p = p * mask
     l = jnp.sum(p, axis=-1)  # (B, Hkv, G, Sq)
     l_safe = jnp.where(l == 0.0, 1.0, l)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", p, vf) / jnp.moveaxis(l_safe, (1, 2, 3), (2, 3, 1))[..., None]
@@ -162,7 +166,8 @@ def block_attention_bwd(
     if mask is not None:
         # mask BEFORE the exp: masked raw scores can exceed lse (which only
         # covers unmasked entries), and exp would overflow to inf -> NaN
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
+        s = jnp.where(mask, s, NEG_INF)
     dead = lsef <= NEG_INF / 2
     lse_safe = jnp.where(dead, 0.0, lsef)
     p = jnp.exp(s - lse_safe[..., None])

@@ -1,31 +1,24 @@
-"""Serving driver: prefill a batch of prompts, then decode greedily.
+"""Serving driver on top of ``repro.engine``: continuous batching with a
+paged, SP-sharded KV cache, compiled once per length bucket.
 
-CPU-runnable reduced mode:
+CPU-runnable reduced mode (the default serves a mixed workload of
+``--requests`` requests with staggered prompt lengths / budgets through the
+engine and prints per-request generations + engine metrics):
 
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
-      --smoke --devices 8 --c 1 --prompt-len 16 --gen 8
+      --smoke --devices 8 --c 1 --requests 8 --prompt-len 16 --gen 8
+
+``--legacy`` keeps the pre-engine static-batch greedy path (one fixed batch,
+capacity-sized contiguous cache) — with the decode step compiled ONCE before
+the token loop, not per token.
 """
 
 import argparse
 import os
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--devices", type=int, default=0)
-    ap.add_argument("--data", type=int, default=2)
-    ap.add_argument("--c", type=int, default=1)
-    ap.add_argument("--batch", type=int, default=2)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
-    args = ap.parse_args(argv)
-
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (
-            f"--xla_force_host_platform_device_count={args.devices}")
-
+def _legacy_main(args):
+    """Static-batch greedy decode (pre-engine path, compile hoisted)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -79,19 +72,87 @@ def main(argv=None):
         return out
     cache = {"stack": merge(cache["stack"], cache_p["stack"])}
 
+    # compile ONCE (static capacity-1 cache_len), then loop the executable
+    shape_d = ShapeConfig("serve", seq_len=capacity,
+                          global_batch=args.batch, kind="decode")
+    jdecode, _ = serve_step.build_decode_step(model, mesh, run_cfg, shape_d)
     generated = [np.asarray(tok)]
-    for i in range(args.gen - 1):
-        shape_d = ShapeConfig("serve", seq_len=capacity,
-                              global_batch=args.batch, kind="decode")
-        jdecode, _ = serve_step.build_decode_step(model, mesh, run_cfg, shape_d)
-        # NOTE example-scale: cache_len is static per compile; production
-        # serving buckets cache lengths. Here we decode at fixed capacity-1.
+    for _ in range(args.gen - 1):
+        # NOTE example-scale: cache_len is static per compile; the engine
+        # path passes per-sequence lengths as traced operands instead.
         tok, cache = jdecode(params, cache, tok)
         generated.append(np.asarray(tok))
     out = np.concatenate(generated, axis=1)
-    print(f"[serve] prompt {tokens.shape} -> generated {out.shape}:")
+    print(f"[serve --legacy] prompt {tokens.shape} -> generated {out.shape}:")
     print(out)
     return out
+
+
+def _engine_main(args):
+    import numpy as np
+
+    from repro.engine import EngineConfig, Request, build_engine
+
+    engine = build_engine(
+        args.arch, smoke=args.smoke, c=args.c, data=args.data,
+        eng=EngineConfig(max_slots=args.max_slots, page_size=args.page_size,
+                         pages_per_shard=args.pages_per_shard,
+                         max_len=args.max_len))
+    rng = np.random.default_rng(args.seed)
+    vocab = engine.cfg.vocab_size
+    reqs = []
+    for i in range(args.requests):
+        # staggered mixed workload: prompts and budgets vary per request
+        plen = max(1, args.prompt_len // 2 + (i * 3) % (args.prompt_len + 1))
+        gen = max(1, args.gen // 2 + i % (args.gen + 1))
+        reqs.append(Request(
+            uid=f"req{i}", tokens=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=gen, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed + i))
+    for r in reqs:
+        engine.add_request(r)
+    out = engine.run()
+    for r in reqs:
+        print(f"[serve] {r.uid}: prompt_len={r.prompt_len} "
+              f"-> {out[r.uid]}")
+    stats = engine.metrics.to_dict()
+    print("[serve] metrics: " + ", ".join(
+        f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in sorted(stats.items())))
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--c", type=int, default=1)
+    ap.add_argument("--legacy", action="store_true",
+                    help="pre-engine static-batch greedy path")
+    ap.add_argument("--batch", type=int, default=2, help="legacy batch size")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    # engine knobs
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages-per-shard", type=int, default=128)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    if args.legacy:
+        return _legacy_main(args)
+    return _engine_main(args)
 
 
 if __name__ == "__main__":

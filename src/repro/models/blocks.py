@@ -37,13 +37,16 @@ def rmsnorm(params, x, eps: float = 1e-5):
 # ---------------------------------------------------------------------------
 
 def rope(x, positions, theta: float = 10000.0):
-    """x: (B, S, H, D); positions: (S,) global token positions."""
+    """x: (B, S, H, D); positions: (S,) global token positions, or (B, S)
+    per-sequence positions (continuous-batching decode)."""
     B, S, H, D = x.shape
     half = D // 2
     freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = positions.astype(jnp.float32)[..., :, None] * freqs  # (..., S, half)
+    if ang.ndim == 2:
+        ang = ang[None]                                        # (1|B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
     x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
     return jnp.concatenate(
         [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)

@@ -38,45 +38,69 @@ from repro.train import step as train_step
 # per-mixer decode updates
 # ---------------------------------------------------------------------------
 
-def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len: int):
-    """x: (B, 1, D) replicated over SP; cache k/v (B, S_loc, Hkv, hd)."""
+def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len,
+                 paged=None, active=None):
+    """x: (B, 1, D) replicated over SP.
+
+    cache_len: static int (whole batch at one length — the classic decode
+      path) or a traced (B,) int32 array of per-sequence lengths (the
+      engine's continuously-batched path).
+    cache: contiguous k/v slices (B, S_loc, Hkv, hd), or — when ``paged``
+      is an ``engine.paged_cache.PagedTables`` — this shard's page-pool
+      slices (pages_loc, page_size, Hkv, hd).
+    active: optional (B,) bool; inactive slots write nothing (engine slots
+      between requests).
+    """
+    B = x.shape[0]
     h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
     wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
     wk = rt.dense(p["wk"], ("embed", "kv_heads", "head_dim"))
     wv = rt.dense(p["wv"], ("embed", "kv_heads", "head_dim"))
     wo = rt.dense(p["wo"], ("heads", "head_dim", "embed_out"))
 
-    pos_new = jnp.array([cache_len], jnp.int32)
+    cl = jnp.asarray(cache_len, jnp.int32)
+    if cl.ndim == 0:
+        cl = jnp.broadcast_to(cl, (B,))
+    pos_new = cl[:, None]                                       # (B, 1)
     q = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wq), pos_new, cfg.rope_theta)
     k_new = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wk), pos_new, cfg.rope_theta)
     v_new = jnp.einsum("bsd,dhk->bshk", h, wv)
 
-    s_loc = cache["k"].shape[1]
-    pos_k = rt.positions_contig(s_loc)
-    # append the new K/V into its owning shard's slot
-    slot = cache_len  # global slot index == position
-    local_slot = slot - (rt.sp_rank() if rt.mode == "spmd" else 0) * s_loc
-    write = (jnp.arange(s_loc) == local_slot)[None, :, None, None]
-    k_cache = jnp.where(write, k_new.astype(cache["k"].dtype), cache["k"])
-    v_cache = jnp.where(write, v_new.astype(cache["v"].dtype), cache["v"])
+    if paged is not None:
+        from repro.engine import paged_cache as paged_lib
+
+        k_cache, v_cache, new_cache, pos_k, valid = paged_lib.write_and_read(
+            rt, cache, k_new, v_new, paged, cl, active)
+    else:
+        s_loc = cache["k"].shape[1]
+        pos_k = rt.positions_contig(s_loc)
+        # append the new K/V into its owning shard's slot
+        local_slot = cl - (rt.sp_rank() if rt.mode == "spmd" else 0) * s_loc
+        write = jnp.arange(s_loc)[None] == local_slot[:, None]  # (B, S_loc)
+        if active is not None:
+            write &= active[:, None]
+        write = write[..., None, None]
+        k_cache = jnp.where(write, k_new.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(write, v_new.astype(cache["v"].dtype), cache["v"])
+        new_cache = {"k": k_cache, "v": v_cache}
+        valid = pos_k[None] <= cl[:, None]                      # (B, S_loc)
+        # hide unfilled slots by pushing their positions beyond the query
+        pos_k = jnp.where(valid, pos_k[None], (cl + 1)[:, None])
 
     cfg_st = dataclasses.replace(
         rt.st_cfg, causal=True, window=cfg.window, prefix_len=None)
-    valid = (pos_k <= cache_len)[None, :]
-    # hide unfilled slots by pushing their positions beyond the query
-    pos_k_masked = jnp.where(pos_k <= cache_len, pos_k, cache_len + 1)
     if rt.mode == "local":
         from repro.kernels import ref as ref_kernels
 
         o, _ = ref_kernels.block_attention(
-            q, k_cache, v_cache, pos_new, pos_k_masked,
+            q, k_cache, v_cache, pos_new, pos_k,
             causal=True, window=cfg.window)
         o = o.astype(x.dtype)
     else:
-        o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k_masked,
+        o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k,
                                 valid, cfg_st)
     out = jnp.einsum("bshk,hkd->bsd", o, wo)
-    return x + out, {"k": k_cache, "v": v_cache}
+    return x + out, new_cache
 
 
 def _mamba_decode(rt: Runtime, p, x, cache, cfg: ModelConfig):
@@ -197,9 +221,19 @@ def _cross_decode(rt: Runtime, p, x, enc_out, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def lm_decode_step(rt: Runtime, params, cache, tokens, cfg: ModelConfig,
-                   cache_len: int):
+                   cache_len, paged=None, active=None, sampling=None):
     """tokens: (B, 1) int32 (replicated across SP). Returns (next_token,
-    new_cache). Greedy vocab-parallel sampling."""
+    new_cache).
+
+    cache_len: static int, or (B,) traced per-sequence lengths (engine).
+    paged: ``engine.paged_cache.PagedTables`` — attention caches are page
+      pools instead of contiguous slices (SSM states stay slot-batched).
+    active: (B,) bool — engine slots currently serving a request.
+    sampling: None for greedy, or a dict {temperature, top_k, top_p, keys}
+      of per-sequence (B,)-shaped arrays ((B, 2) for keys — PRNG keys *not*
+      yet folded with the position; the fold happens here so solo and
+      batched serving draw identical noise).
+    """
     pat = transformer.layer_pattern(cfg)
     x = blocks.embed(rt, params["embed"], tokens, cfg, tokens_replicated=True)
 
@@ -210,7 +244,7 @@ def lm_decode_step(rt: Runtime, params, cache, tokens, cfg: ModelConfig,
             sub_p, sub_c = p[f"sub{i}"], c[f"sub{i}"]
             if mixer == "attn":
                 x, nc = _attn_decode(rt, sub_p["mixer"], x, sub_c, cfg,
-                                     cache_len)
+                                     cache_len, paged=paged, active=active)
             elif mixer == "mamba":
                 x, nc = _mamba_decode(rt, sub_p["mixer"], x, sub_c, cfg)
             elif mixer == "mlstm":
@@ -229,32 +263,33 @@ def lm_decode_step(rt: Runtime, params, cache, tokens, cfg: ModelConfig,
                                unroll=n_p if rt.unroll_scans else 1)
     x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
-    next_tok = vocab_parallel_greedy(rt, head, x, cfg)
+    if sampling is None:
+        next_tok = vocab_parallel_greedy(rt, head, x, cfg)
+    else:
+        from repro.engine import sampling as sampling_lib
+
+        cl = jnp.asarray(cache_len, jnp.int32)
+        if cl.ndim == 0:
+            cl = jnp.broadcast_to(cl, (x.shape[0],))
+        # key the noise by the sampled token's *position* so a request's
+        # sample stream is independent of slot/step placement
+        keys = jax.vmap(jax.random.fold_in)(sampling["keys"], cl + 1)
+        next_tok = sampling_lib.sample(
+            rt, head, x, cfg, temperature=sampling["temperature"],
+            top_k=sampling["top_k"], top_p=sampling["top_p"], keys=keys,
+            sc=sampling.get("sc", sampling_lib.SamplingConfig()))
     return next_tok, {"stack": new_subs}
 
 
 def vocab_parallel_greedy(rt: Runtime, head_params, x, cfg: ModelConfig):
     """Greedy next token without gathering full logits: local top-1 over this
-    shard's vocab slice, then a global argmax via psum of one-hot winners."""
-    table = rt.dense(head_params["table"], ("vocab", "embed"))
-    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32),
-                        table.astype(jnp.float32))[:, 0]       # (B, v_loc)
-    v_local = table.shape[0]
-    lo0 = (rt.sp_rank() * v_local) if rt.mode == "spmd" else 0
-    logits = jnp.where((lo0 + jnp.arange(v_local)) < cfg.vocab_size,
-                       logits, -1e30)                          # padded rows
-    loc_max = jnp.max(logits, axis=-1)
-    loc_arg = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    if rt.mode == "local":
-        return loc_arg[:, None]
-    lo = lo0
-    g_max = jax.lax.pmax(loc_max, rt.sp_axes)
-    winner = (loc_max >= g_max).astype(jnp.int32)
-    # ties broken toward the lowest shard: keep first winner
-    tok = jax.lax.psum(jnp.where(winner > 0, loc_arg + lo, 0), rt.sp_axes)
-    cnt = jax.lax.psum(winner, rt.sp_axes)
-    tok = tok // jnp.maximum(cnt, 1)
-    return tok[:, None]
+    shard's vocab slice, then a lexicographic global combine. Ties break
+    toward the lowest shard (pmin over winning ranks) and the lowest local
+    index — deterministically the smallest global token id among the tied
+    maxima (see ``engine.sampling.lowest_shard_argmax``)."""
+    from repro.engine import sampling as sampling_lib
+
+    return sampling_lib.greedy(rt, head_params, x, cfg)
 
 
 def encdec_decode_step(rt: Runtime, params, cache, tokens,
@@ -332,12 +367,22 @@ def build_decode_step(model: Model, mesh, run_cfg: RunConfig,
 # prefill
 # ---------------------------------------------------------------------------
 
-def lm_prefill(rt: Runtime, params, batch, cfg: ModelConfig):
+def lm_prefill(rt: Runtime, params, batch, cfg: ModelConfig,
+               prompt_len=None, return_hidden=False):
     """Full forward pass over the prompt, collecting the serving cache.
 
     batch: {tokens (B, S)[, frontend_emb]}. Returns (next_token, cache).
     Attention K/V stay SP-sharded in place (contiguous layout); SSM states
     come from the cross-shard-corrected final state of the last shard.
+
+    prompt_len: optional traced (B,) int32 — real prompt lengths when the
+      sequence is right-padded to a compile bucket (engine path); the
+      next-token hidden state is taken from position ``prompt_len - 1``
+      instead of the last slot. Causal attention makes right-padding
+      harmless to every position before it.
+    return_hidden: return the (B, 1, D) pre-head hidden state (replicated
+      across SP) instead of a greedily sampled token, so callers can apply
+      their own sampling.
     """
     pat = transformer.layer_pattern(cfg)
     tokens = batch["tokens"]
@@ -381,13 +426,27 @@ def lm_prefill(rt: Runtime, params, batch, cfg: ModelConfig):
                             unroll=n_p if rt.unroll_scans else 1)
     x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params.get("lm_head", params["embed"])
-    # next token from the LAST position: the last SP shard's final slot
-    # (contiguous layout); broadcast its hidden state then sample.
-    last = x[:, -1:, :]
-    if rt.mode == "spmd":
-        is_last = rt.sp_rank() == rt.sp_size() - 1
-        last = jax.lax.psum(
-            jnp.where(is_last, last, jnp.zeros_like(last)), rt.sp_axes)
+    if prompt_len is None:
+        # next token from the LAST position: the last SP shard's final slot
+        # (contiguous layout); broadcast its hidden state then sample.
+        last = x[:, -1:, :]
+        if rt.mode == "spmd":
+            is_last = rt.sp_rank() == rt.sp_size() - 1
+            last = jax.lax.psum(
+                jnp.where(is_last, last, jnp.zeros_like(last)), rt.sp_axes)
+    else:
+        # per-sequence last position prompt_len-1: exactly one (shard, slot)
+        # matches, so a one-hot contraction + psum broadcasts it everywhere
+        target = jnp.asarray(prompt_len, jnp.int32) - 1          # (B,)
+        pos = rt.positions_contig(x.shape[1])                    # (S_loc,)
+        onehot = (pos[None] == target[:, None]).astype(jnp.float32)
+        last = jnp.einsum("bs,bsd->bd", onehot,
+                          x.astype(jnp.float32))[:, None]
+        if rt.mode == "spmd":
+            last = jax.lax.psum(last, rt.sp_axes)
+        last = last.astype(x.dtype)
+    if return_hidden:
+        return last, {"stack": cache}
     next_tok = vocab_parallel_greedy(rt, head, last, cfg)
     return next_tok, {"stack": cache}
 

@@ -29,6 +29,9 @@ BATCHES = {
         "spmd_train_step", "serve_dense", "serve_moe", "serve_hybrid",
         "serve_xlstm", "serve_encdec",
     ],
+    "engine_serving": [
+        "greedy_tie", "engine_sampling", "engine_mixed", "engine_moe",
+    ],
 }
 
 

@@ -1,32 +1,46 @@
 """Paper Fig. 1: P2P communication volume, Ring vs StarTrail-2/-4.
 
 Two parts:
-  (theory)   closed forms, eqs. (2)-(4): per-device P2P volume
+  (theory)   closed forms, eqs. (2)-(4), via the plan layer's cost model
+             (`repro.plan.cost.comm_volumes`): per-device P2P volume
              Ring = 2BNH_kv bytes; StarTrail = 2BNH_kv/C + collective
              4BN(H_q+H_kv)(C-1)/P.
   (measured) compile the attention island at each C on 16 SP host devices
-             and parse the HLO collective bytes — the measured permute
-             volume must match the closed form and show the ~(C-1)/C
-             saving the paper claims (~50% for C=2, ~75% for C=4).
+             (mesh built from an ExecutionPlan) and parse the HLO
+             collective bytes — the measured permute volume must match the
+             closed form and show the ~(C-1)/C saving the paper claims
+             (~50% for C=2, ~75% for C=4).
 """
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import startrail as st
-from repro.dist import meshes
+from repro.plan import ExecutionPlan, cost
 from repro.roofline import hlo as hlo_lib
 
 
 def theory_volumes(B, N, Hq_dim, Hkv_dim, p, c, bytes_per=4):
     """Implementation-exact per-device volumes (paper eqs. 3-4 with this
-    system's R ring steps). bytes_per=4: the CPU backend legalises bf16 to
-    f32 (documented in EXPERIMENTS.md); on TPU the wire dtype is bf16 (/2).
+    system's R ring permutes) via the plan layer's cost model
+    (`repro.plan.cost.comm_volumes` — tests/test_plan.py asserts its
+    rankings reproduce this benchmark's (C-1)/C saving claims). bytes_per=4:
+    the CPU backend legalises bf16 to f32 (documented in EXPERIMENTS.md);
+    on TPU the wire dtype is bf16 (/2).
     """
-    r = p // (c * c)
-    per_dev_p2p = r * 2 * B * (c * N / p) * Hkv_dim * bytes_per
+    cfg = ModelConfig(name="fig1", family="dense", num_layers=1,
+                      d_model=Hq_dim, num_heads=Hq_dim, num_kv_heads=Hkv_dim,
+                      d_ff=0, vocab_size=1, head_dim=1)
+    shape = ShapeConfig("fig1", seq_len=N, global_batch=B, kind="train")
+    arr = cost.Arrangement("ring" if c == 1 else "startrail", c,
+                           p // (c * c))
+    vols = cost.comm_volumes(cfg, shape, p, arr, batch=B,
+                             dtype_bytes=bytes_per)
+    # the permute line matches the original closed form r * 2B(cN/p)Hkv;
+    # the collective line keeps eq. 3's (Hq+Hkv)/2 convention
+    per_dev_p2p = vols["ring_p2p"]
     coll = 4 * B * N / p * (c - 1) * (Hq_dim + Hkv_dim) / 2 * bytes_per
     return per_dev_p2p, coll
 
@@ -34,9 +48,10 @@ def theory_volumes(B, N, Hq_dim, Hkv_dim, p, c, bytes_per=4):
 def measured_volumes(B, S, hq, hkv, d, c, p=16):
     cfg = st.StarTrailConfig(seq_len=S, seq_scheme="zigzag", causal=True,
                          unroll=True)  # while-loop bodies count once
-    r = p // (c * c)
-    devs = np.array(jax.devices()[:p]).reshape(c, r, c)
-    mesh = jax.sharding.Mesh(devs, cfg.axes)
+    plan = ExecutionPlan(
+        arch="fig1", shape="bench", seq_len=S, global_batch=B, n_devices=p,
+        scheme="ring" if c == 1 else "startrail", c=c, mesh_kind="local")
+    mesh = plan.build_mesh()
     spec = P(None, cfg.axes, None, None)
 
     def local(q, k, v):

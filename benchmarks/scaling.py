@@ -1,16 +1,33 @@
 """Paper Figs. 9-10: strong and weak scaling, Ring vs StarTrail.
 
-Evaluated with the analytic cluster model (CPU container; v5e target):
+Evaluated with the plan layer's analytic arrangement ranking (CPU
+container; v5e target):
   strong: fixed 128k sequence, devices 8 -> 64;
   weak:   sequence and devices scale together (128k@8 .. 512k@32).
 Reports projected throughput (tokens/s) for Ring (C=1) and the best
-StarTrail config at each point; the paper's qualitative claims to verify:
+arrangement at each point; the paper's qualitative claims to verify:
 StarTrail's advantage grows with device count (strong) and stays constant
 or grows with sequence (weak).
 """
 
 from repro.configs import paper_models
+from repro.configs.base import ShapeConfig
 from repro.core import scheduler as sch
+from repro.plan import cost
+
+
+def _point(cfg, seq, p, link_bw):
+    shape = ShapeConfig("scaling", seq_len=seq, global_batch=1, kind="train")
+    cl = sch.ClusterModel(sp_size=p, link_bw=link_bw)
+    # figs. 9-10 compare Ring vs StarTrail only (Ulysses is Fig. 1 turf)
+    arrs = [a for a in cost.enumerate_arrangements(cfg, p)
+            if a.scheme != "ulysses"]
+    ranking = cost.rank_arrangements(cfg, shape, p, batch=1, cluster=cl,
+                                     arrangements=arrs)
+    ring = next(e["total_s"] for e in ranking
+                if e["arrangement"].scheme == "ring")
+    best = ranking[0]
+    return ring, best
 
 
 def run(emit):
@@ -18,29 +35,19 @@ def run(emit):
     # strong scaling: N fixed, P grows
     seq = 128 * 1024
     for p in (8, 16, 32, 64):
-        w = sch.AttnWorkload(batch=1, seq_len=seq, num_heads=cfg.num_heads,
-                             num_kv_heads=cfg.num_kv_heads,
-                             head_dim=cfg.head_dim_)
-        cl = sch.ClusterModel(sp_size=p, link_bw=25e9)
-        out = sch.schedule(w, cl)
-        ring = min(g["total_s"] for g in out["grid"] if g["c"] == 1)
-        best = out["best"]
+        ring, best = _point(cfg, seq, p, 25e9)
         emit(f"fig9_strong_p{p}", seq / best["total_s"],
-             f"ring_tok_s={seq/ring:.0f},best_c={best['c']},"
+             f"ring_tok_s={seq/ring:.0f},best_c={best['arrangement'].c},"
+             f"best_scheme={best['arrangement'].scheme},"
              f"advantage={ring/best['total_s']-1:.2%}")
     # weak scaling: N and P grow together
     # paper Fig. 10a runs on the A100/Ethernet clusters -> slow links
     for k, p in ((1, 8), (2, 16), (4, 32)):
         seq = 128 * 1024 * k
-        w = sch.AttnWorkload(batch=1, seq_len=seq, num_heads=cfg.num_heads,
-                             num_kv_heads=cfg.num_kv_heads,
-                             head_dim=cfg.head_dim_)
-        cl = sch.ClusterModel(sp_size=p, link_bw=3e9)
-        out = sch.schedule(w, cl)
-        ring = min(g["total_s"] for g in out["grid"] if g["c"] == 1)
-        best = out["best"]
+        ring, best = _point(cfg, seq, p, 3e9)
         emit(f"fig10_weak_{seq//1024}k_p{p}", seq / best["total_s"],
-             f"ring_tok_s={seq/ring:.0f},best_c={best['c']},"
+             f"ring_tok_s={seq/ring:.0f},best_c={best['arrangement'].c},"
+             f"best_scheme={best['arrangement'].scheme},"
              f"advantage={ring/best['total_s']-1:.2%}")
 
 

@@ -3,12 +3,26 @@
 Grid-searches (C, placement) for three cluster profiles and prints the
 chosen config — reproducing the paper's observation that the best C
 depends on the interconnect (their A100-16/node cluster preferred C=2,
-the 8/node one C=4).
+the 8/node one C=4) — then resolves a full ExecutionPlan through the
+plan layer's arrangement ranking (docs/TUNING.md).
 
     PYTHONPATH=src python examples/topology_tuning.py
 """
 
 from repro.core import scheduler as sch
+
+
+def plan_part():
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    from repro.plan import make_plan
+
+    for arch in ("minitron-8b", "paligemma-3b"):
+        plan = make_plan(registry.get(arch), SHAPES["train_4k"], arch=arch,
+                         n_devices=256, data=16, mesh_kind="production")
+        print(f"plan[{arch:13s}] -> scheme={plan.scheme} C={plan.c} "
+              f"R={plan.r} placement={plan.placement} "
+              f"microbatches={plan.microbatches}")
 
 
 def main():
@@ -28,6 +42,7 @@ def main():
         for g in sorted(out["grid"], key=lambda g: g["total_s"])[:3]:
             print(f"    C={g['c']} {g['placement']:11s} "
                   f"t={g['total_s'] * 1e3:.2f} ms")
+    plan_part()
 
 
 if __name__ == "__main__":

@@ -104,8 +104,18 @@ SHAPES = {
 
 @dataclasses.dataclass(frozen=True)
 class RunConfig:
-    """Parallelism + training hyper-config for one run."""
+    """Parallelism + training hyper-config for one run.
+
+    Normally produced by ``repro.plan.ExecutionPlan.run_config()`` — the
+    plan layer is the single source of truth for (C, R), scheme and
+    microbatch selection; hand-built RunConfigs remain for unit tests.
+    """
     c: int = 1                           # StarTrail attention-parallel size
+    # 'startrail' | 'ring' (C=1 startrail) | 'ulysses' (all-to-all baseline,
+    # dispatched per-layer where head counts allow)
+    attention_scheme: str = "startrail"
+    # gradient-accumulation microbatches per optimizer step (train only)
+    microbatches: int = 1
     seq_scheme: str = "zigzag"
     block_impl: str = "ref"
     block_skip: bool = False

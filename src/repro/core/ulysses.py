@@ -48,7 +48,8 @@ def ulysses_attention(q, k, v, cfg: StarTrailConfig):
     pos = jax.vmap(lambda r: shard_positions(r, cfg.seq_len, sp, cfg.seq_scheme))(ranks).reshape(-1)
 
     o, _ = ref_kernels.block_attention(
-        qh, kh, vh, pos, pos, causal=cfg.causal, window=cfg.window, scale=cfg.scale
+        qh, kh, vh, pos, pos, causal=cfg.causal, window=cfg.window,
+        scale=cfg.scale, prefix_len=cfg.prefix_len
     )
     o = o.astype(q.dtype)
     # head-sharded -> seq-sharded

@@ -1,5 +1,12 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+if "--autotune" in sys.argv:
+    # the autotune path measures real steps on the CPU smoke mesh
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+else:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
@@ -8,14 +15,24 @@ the full production step (train: fwd+bwd+AdamW; prefill / decode: serve
 step) is lowered with ShapeDtypeStruct stand-ins (zero allocation) onto the
 16x16 single-pod mesh and the 2x16x16 multi-pod mesh, compiled, and the
 compiled artifact's memory/cost analyses + collective schedule are recorded
-for the roofline analysis (results/dryrun/*.json).
+for the roofline analysis (results/dryrun/*.json). Each cell is described
+by an ``repro.plan.ExecutionPlan`` (``--plan FILE`` replays a persisted
+one).
+
+``--autotune`` instead runs the measured arrangement search on the 8-device
+CPU smoke mesh (short jitted steps over the analytical top-k plus the
+analytical worst), persists the winner to ``results/PLAN_<arch>_smoke.json``
+and fails if the chosen plan does not beat the worst candidate — the CI
+`plan-smoke` job runs exactly this.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch minitron-8b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--c 2]
+  PYTHONPATH=src python -m repro.launch.dryrun --autotune [--arch ...]
 """
 
 import argparse
+import dataclasses as dc
 import json
 import pathlib
 import time
@@ -25,11 +42,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import registry
-from repro.configs.base import SHAPES, RunConfig
-from repro.dist import meshes
-from repro.launch.mesh import make_production_mesh
+from repro.configs.base import SHAPES
 from repro.models.factory import build_model
 from repro.optim import adamw
+from repro.plan import ExecutionPlan, make_plan
 from repro.roofline import hlo as hlo_lib
 
 RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -81,9 +97,22 @@ def _costs(compiled):
     }
 
 
-def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
-               c: int = 2, rules: str = "default", remat: str = "attn_out",
-               placement: str = "team_inner"):
+def plan_for_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  c: int = 2, rules: str = "default",
+                  remat: str = "attn_out",
+                  placement: str = "team_inner") -> ExecutionPlan:
+    """The production ExecutionPlan for one dry-run cell."""
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    pod = 2 if multi_pod else 1
+    # microbatches resolved by the plan (auto for production train shapes:
+    # this is what lets train_4k's global_batch=256 compile honestly)
+    return make_plan(cfg, shape, arch=arch, n_devices=256 * pod, data=16,
+                     pod=pod, c=c, placement=placement, remat=remat,
+                     sharding_rules=rules, mesh_kind="production")
+
+
+def lower_cell(arch: str, shape_name: str, **plan_kw):
     """Lower + compile one cell; exact cost accounting via two-point depth
     extrapolation.
 
@@ -96,20 +125,26 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     which is exact for homogeneous periods (true by construction).
     """
-    import dataclasses as dc
-
     from repro.models import transformer
 
-    cfg = registry.get(arch)
-    shape = SHAPES[shape_name]
+    plan = plan_kw.pop("plan", None)
+    if plan is not None:
+        # replay: the plan carries the shape (incl. non-registry ones like
+        # 'smoke') and whether it was tuned on the reduced config
+        cfg = (registry.get_smoke(arch) if plan.mesh_kind == "local"
+               else registry.get(arch))
+        shape = plan.shape_config()
+    else:
+        cfg = registry.get(arch)
+        shape = SHAPES[shape_name]
     ok, why = registry.shape_supported(cfg, shape)
     if not ok:
         return {"arch": arch, "shape": shape_name, "skipped": why}
 
-    prod = make_production_mesh(multi_pod=multi_pod)
-    mesh = meshes.refine_mesh(prod, c=c, placement=placement)
-    run_cfg = RunConfig(c=c, multi_pod=multi_pod, sharding_rules=rules,
-                        remat=remat)
+    if plan is None:
+        plan = plan_for_cell(arch, shape_name, **plan_kw)
+    mesh = plan.build_mesh()
+    run_cfg = plan.run_config()
 
     # ---- full-depth compile: proves the cell + memory analysis ----
     model = build_model(cfg)
@@ -141,17 +176,17 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         b = c2["coll_by_kind"].get(kind, 0)
         coll_by_kind[kind] = a + (b - a) * (n_periods - 1)
 
-    n_dev = 512 if multi_pod else 256
     rec = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": "2x16x16" if plan.pod > 1 else "16x16",
         "kind": shape.kind,
-        "c": c,
-        "rules": rules,
-        "remat": remat,
-        "placement": placement,
-        "devices": n_dev,
+        "plan": plan.to_dict(),
+        "c": plan.c,
+        "rules": plan.sharding_rules,
+        "remat": plan.remat,
+        "placement": plan.placement,
+        "devices": plan.n_devices,
         "n_periods": n_periods,
         "compile_s": round(t_compile, 1),
         "flops_per_device": extrap("flops"),
@@ -192,9 +227,11 @@ def run_and_save(arch, shape_name, **kw):
         rec = lower_cell(arch, shape_name, **kw)
         rec["status"] = "skipped" if rec.get("skipped") else "ok"
     except Exception as e:  # noqa: BLE001
+        kw_rec = {k: (v.to_dict() if isinstance(v, ExecutionPlan) else v)
+                  for k, v in kw.items()}
         rec = {"arch": arch, "shape": shape_name, "status": "error",
                "error": f"{type(e).__name__}: {e}",
-               "traceback": traceback.format_exc()[-3000:], **kw}
+               "traceback": traceback.format_exc()[-3000:], **kw_rec}
     out.write_text(json.dumps(rec, indent=2))
     status = rec["status"]
     extra = ""
@@ -204,6 +241,43 @@ def run_and_save(arch, shape_name, **kw):
                  f" compile={rec['compile_s']}s")
     print(f"[{status}] {name}{extra}", flush=True)
     return rec
+
+
+def run_autotune(arch: str, *, seq_len: int = 64, batch: int = 4,
+                 data: int = 1, steps: int = 3):
+    """Measured arrangement search on the CPU smoke mesh (CI `plan-smoke`).
+
+    Fails (SystemExit) unless the chosen plan beats the worst measured
+    candidate — i.e. the tuner must never hand back the slowest
+    arrangement of the ones it timed.
+    """
+    from repro.configs.base import ShapeConfig
+    from repro.plan import autotune as autotune_lib
+
+    cfg = registry.get_smoke(arch)
+    n_devices = jax.device_count()
+    shape = ShapeConfig("smoke", seq_len=seq_len, global_batch=batch,
+                        kind="train")
+    out = autotune_lib.autotune(cfg, shape, arch=arch, n_devices=n_devices,
+                                data=data, mesh_kind="local", steps=steps)
+    for e in out["measured"]:
+        print(f"[autotune] {e['arrangement'].key:24s} "
+              f"measured={e['measured_s'] * 1e3:8.2f}ms "
+              f"analytical={e['analytical_s'] * 1e6:8.1f}us", flush=True)
+    best, worst = out["measured"][0], out["measured"][-1]
+    print(f"[autotune] winner={best['arrangement'].key} -> {out['path']}")
+    # the in-memory winner is measured-best by construction, so assert the
+    # things that can actually break: the *persisted* plan must round-trip
+    # to that winner, and it must strictly beat the analytical-worst anchor
+    # (a tie means the timing harness degenerated)
+    if ExecutionPlan.load(out["path"]) != best["plan"]:
+        raise SystemExit("persisted plan is not the measured winner")
+    if len(out["measured"]) > 1 and \
+            not best["measured_s"] < worst["measured_s"]:
+        raise SystemExit(
+            "autotuned pick does not beat the worst measured candidate "
+            f"({best['measured_s']:.6f}s vs {worst['measured_s']:.6f}s)")
+    return out
 
 
 def main():
@@ -217,15 +291,25 @@ def main():
     ap.add_argument("--rules", default="default")
     ap.add_argument("--remat", default="attn_out")
     ap.add_argument("--placement", default="team_inner")
+    ap.add_argument("--plan", default=None,
+                    help="replay a persisted ExecutionPlan json for the cell")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measured arrangement search on the CPU smoke mesh")
     args = ap.parse_args()
 
+    if args.autotune:
+        run_autotune(args.arch or "h2o-danube-1.8b")
+        return
+
+    plan = ExecutionPlan.load(args.plan) if args.plan else None
     cells = []
     if args.all:
         for a in registry.ASSIGNED_ARCHS:
             for sname in SHAPES:
                 cells.append((a, sname))
     else:
-        cells.append((args.arch, args.shape))
+        cells.append((args.arch or (plan and plan.arch),
+                      args.shape or (plan and plan.shape)))
 
     meshes_to_run = [args.multi_pod]
     if args.both_meshes:
@@ -234,9 +318,10 @@ def main():
     n_bad = 0
     for mp in meshes_to_run:
         for a, sname in cells:
-            rec = run_and_save(a, sname, multi_pod=mp, c=args.c,
-                               rules=args.rules, remat=args.remat,
-                               placement=args.placement)
+            kw = dict(plan=plan) if plan else dict(
+                multi_pod=mp, c=args.c, rules=args.rules, remat=args.remat,
+                placement=args.placement)
+            rec = run_and_save(a, sname, **kw)
             if rec.get("status") == "error":
                 n_bad += 1
     if n_bad:

@@ -2,16 +2,54 @@
 
 ``make_production_mesh`` builds the mandated device grid (a function, not a
 module-level constant, so importing this module never touches jax device
-state). The framework refines its 'model' axis into the StarTrail
-(sp_grp, sp_ring, sp_team) structure via ``repro.dist.meshes.refine_mesh``.
+state), derived from ``jax.device_count()`` with the (16, 16) single-pod /
+(2, 16, 16) multi-pod shapes as the default target. The plan layer
+(``repro.plan``) is the only consumer: it refines the trailing 'model' axis
+into the StarTrail (sp_grp, sp_ring, sp_team) structure via
+``repro.dist.meshes.refine_mesh``.
+
+When the available device count cannot host the target grid the error lists
+every legal refinable (data, model) factorisation of the actual count
+instead of letting jax fail with a silent shape mismatch.
 """
 
 from __future__ import annotations
 
-import jax
+from typing import List, Tuple
+
+import numpy as np
+
+DEFAULT_GRID = (16, 16)              # (data, model)
+DEFAULT_GRID_MULTI_POD = (2, 16, 16)  # (pod, data, model)
+
+
+def refinable_grids(n_devices: int) -> List[Tuple[int, int]]:
+    """Legal (data, model) grids for `n_devices`: model must admit a C >= 2
+    StarTrail refinement (model % 4 == 0, so (C=2, R=model/4) exists)."""
+    out = []
+    for model in range(4, n_devices + 1, 4):
+        if n_devices % model == 0:
+            out.append((n_devices // model, model))
+    return out
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+    import jax
+
+    shape = DEFAULT_GRID_MULTI_POD if multi_pod else DEFAULT_GRID
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    n = jax.device_count()
+    if n < need:
+        legal = refinable_grids(n)
+        hint = (f"legal refinable (data, model) grids for {n} device(s): "
+                f"{legal}" if legal else
+                f"{n} device(s) admit no C>=2-refinable grid (need model % 4"
+                f" == 0)")
+        raise ValueError(
+            f"production mesh {'x'.join(map(str, shape))} needs {need} "
+            f"devices but only {n} are available; {hint}. For CPU runs use "
+            f"--smoke with --devices N (forced host devices) instead.")
+    # jax.make_mesh keeps the topology-aware device assignment (axes map
+    # to physically-adjacent devices — the placement tuning depends on it)
     return jax.make_mesh(shape, axes)

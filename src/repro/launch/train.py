@@ -1,5 +1,11 @@
 """End-to-end training driver.
 
+Every run is described by an ``repro.plan.ExecutionPlan``: either loaded
+from a plan file (``--plan results/PLAN_<arch>_<shape>.json``), autotuned
+on the spot (``--autotune``: measure the analytical top-k arrangements,
+persist + use the winner), or resolved from the CLI knobs by the analytical
+cost model (leave ``--c``/``--scheme`` unset to let the model pick).
+
 On real hardware this runs the production mesh; on CPU use --devices to
 force host devices and a reduced config for a real multi-step run:
 
@@ -9,19 +15,31 @@ force host devices and a reduced config for a real multi-step run:
 
 import argparse
 import os
-import sys
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (optional with --plan)")
     ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--smoke", action="store_true",
                     help="reduced config + tiny shape (CPU-runnable)")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU)")
     ap.add_argument("--data", type=int, default=2)
-    ap.add_argument("--c", type=int, default=1)
+    ap.add_argument("--c", type=int, default=None,
+                    help="StarTrail C (default: cost-model pick)")
+    ap.add_argument("--scheme", default=None,
+                    choices=["startrail", "ring", "ulysses"],
+                    help="attention scheme (default: cost-model pick)")
+    ap.add_argument("--placement", default=None,
+                    choices=["team_inner", "ring_inner"])
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="grad-accumulation microbatches (default: plan)")
+    ap.add_argument("--plan", default=None,
+                    help="load a persisted ExecutionPlan json")
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure the analytical top-k and use the winner")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
@@ -31,43 +49,72 @@ def main(argv=None):
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="default")
     args = ap.parse_args(argv)
+    if not args.plan and not args.arch:
+        ap.error("--arch is required (unless --plan carries it)")
 
+    if args.plan and not args.devices:
+        # a local-mesh plan records its forced-host device count; read it
+        # from the raw json (before anything can initialise the backend)
+        import json
+
+        rec = json.loads(open(args.plan).read())
+        rec = rec.get("plan", rec)
+        if rec.get("mesh_kind") == "local":
+            args.devices = int(rec["n_devices"])
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    import jax
-
     from repro.configs import registry
-    from repro.configs.base import SHAPES, RunConfig, ShapeConfig
-    from repro.dist import meshes
-    from repro.launch.mesh import make_production_mesh
+    from repro.configs.base import SHAPES, ShapeConfig
     from repro.models.factory import build_model
     from repro.optim import adamw
+    from repro.plan import ExecutionPlan, autotune as autotune_lib, make_plan
     from repro.train import trainer as trainer_lib
 
-    if args.smoke:
-        cfg = registry.get_smoke(args.arch)
-        shape = ShapeConfig("smoke", seq_len=args.seq_len,
-                            global_batch=args.batch, kind="train")
-        r = args.devices // (args.data * args.c * args.c)
-        mesh = meshes.local_mesh_for_tests(c=args.c, r=r, data=args.data)
+    if args.plan:
+        plan = ExecutionPlan.load(args.plan)
+        cfg = (registry.get_smoke(plan.arch) if plan.mesh_kind == "local"
+               else registry.get(plan.arch))
+        print(f"[train] loaded plan {args.plan}: scheme={plan.scheme} "
+              f"C={plan.c} R={plan.r} microbatches={plan.microbatches}")
     else:
-        cfg = registry.get(args.arch)
-        shape = SHAPES[args.shape]
-        prod = make_production_mesh(multi_pod=args.multi_pod)
-        mesh = meshes.refine_mesh(prod, c=args.c)
+        if args.smoke:
+            cfg = registry.get_smoke(args.arch)
+            shape = ShapeConfig("smoke", seq_len=args.seq_len,
+                                global_batch=args.batch, kind="train")
+            n_devices, data, pod, mesh_kind = (args.devices, args.data, 1,
+                                               "local")
+        else:
+            cfg = registry.get(args.arch)
+            shape = SHAPES[args.shape]
+            pod = 2 if args.multi_pod else 1
+            n_devices, data, mesh_kind = 256 * pod, 16, "production"
+        if args.autotune:
+            tuned = autotune_lib.autotune(
+                cfg, shape, arch=args.arch, n_devices=n_devices, data=data,
+                mesh_kind=mesh_kind, microbatches=args.microbatches)
+            plan = tuned["plan"]
+            print(f"[train] autotuned plan -> {tuned['path']}: "
+                  f"scheme={plan.scheme} C={plan.c} R={plan.r}")
+        else:
+            plan = make_plan(
+                cfg, shape, arch=args.arch, n_devices=n_devices, data=data,
+                pod=pod, scheme=args.scheme, c=args.c,
+                placement=args.placement, microbatches=args.microbatches,
+                mesh_kind=mesh_kind, sharding_rules=args.rules)
+    print(f"[train] plan: P_sp={plan.sp_size} scheme={plan.scheme} "
+          f"C={plan.c} R={plan.r} data={plan.data} "
+          f"microbatches={plan.microbatches}")
 
     model = build_model(cfg)
-    run_cfg = RunConfig(c=args.c, multi_pod=args.multi_pod,
-                        sharding_rules=args.rules)
     adam_cfg = adamw.AdamWConfig(learning_rate=args.lr, warmup_steps=5,
                                  decay_steps=max(args.steps, 10),
                                  state_dtype=cfg.opt_dtype)
     tcfg = trainer_lib.TrainerConfig(
         num_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
         ckpt_dir=args.ckpt_dir, metrics_path=args.metrics, log_every=5)
-    metrics = trainer_lib.train(model, mesh, run_cfg, shape, adam_cfg, tcfg)
+    metrics = trainer_lib.train(model, plan, adam_cfg, tcfg)
     print(f"[train] done: {metrics}")
     return metrics
 

@@ -164,5 +164,11 @@ class Runtime:
                 prefix_len=cfg.prefix_len)
             return o.astype(q.dtype)
         if self.attention_impl == "ulysses":
-            return ulysses_lib.ulysses_attention(q, k, v, cfg)
+            # per-layer dispatch: Ulysses only where this layer's head
+            # counts divide the SP degree (the plan layer rejects configs
+            # where *no* layer qualifies); others fall back to StarTrail
+            sp = self.sp_size()
+            if q.shape[2] % sp == 0 and k.shape[2] % sp == 0:
+                return ulysses_lib.ulysses_attention(q, k, v, cfg)
+            return st.startrail_attention(q, k, v, cfg)
         return st.startrail_attention(q, k, v, cfg)

@@ -1,0 +1,12 @@
+"""Execution-plan layer: resolved run descriptions + arrangement tuning.
+
+``ExecutionPlan`` (plan.py) is the single source of truth every entry point
+builds its mesh + runtime from; ``cost`` ranks the legal (C, R) / scheme
+arrangements analytically (paper eqs. 2-4); ``autotune`` refines the top of
+the ranking with measured steps and persists the winner. See docs/TUNING.md.
+"""
+
+from repro.plan import autotune, cost
+from repro.plan.plan import ExecutionPlan, make_plan, plan_path
+
+__all__ = ["ExecutionPlan", "make_plan", "plan_path", "cost", "autotune"]

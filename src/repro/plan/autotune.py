@@ -1,0 +1,118 @@
+"""Measured refinement of the analytical arrangement ranking.
+
+The cost model ranks every legal (scheme, C, placement) arrangement; this
+module wall-clocks the top-k candidates (plus the analytical worst, as a
+sanity anchor) with short jitted train steps and persists the measured
+winner to ``results/PLAN_<arch>_<shape>.json``. On real hardware the same
+search runs on the production mesh; on CPU it runs on the forced-host smoke
+mesh, which is what the `plan-smoke` CI job and
+``benchmarks/throughput.py --compare-arrangements`` exercise.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.plan import cost
+from repro.plan.plan import ExecutionPlan, make_plan, plan_path
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results"
+
+
+def measure_plan(model, plan: ExecutionPlan, *, steps: int = 3,
+                 warmup: int = 1, adam_cfg=None, mesh=None) -> float:
+    """Median wall-clock seconds of the jitted train step under `plan`."""
+    import jax
+
+    from repro.core import zigzag as zz
+    from repro.optim import adamw
+
+    adam_cfg = adam_cfg or adamw.AdamWConfig(warmup_steps=0)
+    jstep, sh = plan.build_train_step(model, adam_cfg, mesh=mesh)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = adamw.init_state(params, adam_cfg)
+    batch = model.make_batch(jax.random.PRNGKey(1), plan.shape_config())
+    perm = zz.make_positions(plan.seq_len, plan.sp_size,
+                             plan.run_config().seq_scheme).reshape(-1)
+    batch = {k: np.take(np.asarray(v), perm, axis=1)
+             for k, v in batch.items()}
+    params = jax.device_put(params, sh["params"])
+    opt = jax.device_put(opt, sh["opt"])
+    batch = jax.device_put(batch, sh["batch"])
+
+    for _ in range(max(warmup, 1)):
+        params, opt, metrics = jstep(params, opt, batch)
+    jax.block_until_ready(metrics)
+    times = []
+    for _ in range(max(steps, 1)):
+        t0 = time.perf_counter()
+        params, opt, metrics = jstep(params, opt, batch)
+        jax.block_until_ready(metrics)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
+             n_devices: int, data: int = 1, mesh_kind: str = "local",
+             top_k: int = 3, steps: int = 3, microbatches: Optional[int] = 1,
+             out_dir=None, cluster=None,
+             arrangements: Optional[Sequence[cost.Arrangement]] = None,
+             ) -> Dict[str, object]:
+    """Measure the analytical top-k (plus the analytical worst) and persist
+    the winner.
+
+    Returns {"plan": ExecutionPlan, "measured": [...], "analytical": [...],
+    "path": written json path}. The measured list is sorted fastest-first;
+    the winner is by construction never the slowest measured arrangement.
+    """
+    from repro.models.factory import build_model
+
+    model = build_model(cfg)
+    sp = n_devices // data
+    ranking = cost.rank_arrangements(
+        cfg, shape, sp, batch=max(shape.global_batch // data, 1),
+        cluster=cluster, arrangements=arrangements)
+    cands = list(ranking[:top_k])
+    if ranking[-1] not in cands:
+        cands.append(ranking[-1])   # anchor: the analytical worst
+
+    mesh_cache = {}
+    measured: List[Dict[str, object]] = []
+    for entry in cands:
+        arr: cost.Arrangement = entry["arrangement"]
+        plan = make_plan(
+            cfg, shape, arch=arch, n_devices=n_devices, data=data,
+            scheme=arr.scheme, c=arr.c,
+            placement=arr.placement if arr.c > 1 else None,
+            microbatches=microbatches, mesh_kind=mesh_kind, cluster=cluster)
+        key = (plan.c, plan.r, plan.data)
+        if key not in mesh_cache:
+            mesh_cache[key] = plan.build_mesh()
+        t = measure_plan(model, plan, steps=steps, mesh=mesh_cache[key])
+        measured.append({"arrangement": arr, "plan": plan,
+                         "measured_s": t, "analytical_s": entry["total_s"]})
+    measured.sort(key=lambda e: e["measured_s"])
+    winner: ExecutionPlan = measured[0]["plan"]
+
+    out_dir = pathlib.Path(out_dir) if out_dir is not None else RESULTS
+    path = plan_path(out_dir, arch, shape.name)
+    record = {
+        "plan": winner.to_dict(),
+        "measured": [{"arrangement": e["arrangement"].key,
+                      "measured_s": e["measured_s"],
+                      "analytical_s": e["analytical_s"]} for e in measured],
+        "analytical": [{"arrangement": e["arrangement"].key,
+                        "total_s": e["total_s"],
+                        "volumes": e["volumes"]} for e in ranking],
+        "n_devices": n_devices, "data": data, "steps_timed": steps,
+    }
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(record, indent=2))
+    return {"plan": winner, "measured": measured, "analytical": ranking,
+            "path": path}

@@ -1,0 +1,234 @@
+"""Analytical cost model for communication arrangements (paper eqs. 2-4).
+
+For a fixed sequence-parallel degree P there is a whole family of legal
+communication arrangements: the StarTrail (C, R) factorisations with
+P = C^2 * R and either axis placement, the plain ring (C = 1), and the
+DeepSpeed-Ulysses all-to-all scheme (legal only while P <= Hkv — the
+head-count scalability limit `core/ulysses.py` enforces at trace time).
+
+This module enumerates the legal arrangements for a ModelConfig/ShapeConfig
+pair, prices each one with the paper's per-arrangement communication-volume
+formulas (team all-gather, sub-ring ppermute bytes, reduce-scatter combine;
+all-to-all for Ulysses) on top of the `roofline/hw.py` constants, and ranks
+them. `repro.plan.plan` turns the winner into an `ExecutionPlan`;
+`repro.plan.autotune` refines the top of the ranking with measured runs.
+
+Volumes are implementation-exact per device per attention layer (they match
+what `benchmarks/comm_volume.py` parses out of the compiled HLO); times come
+from `core/scheduler.py`'s overlap model so the ranking agrees with the
+paper-§3.4 topology scheduler at C > 1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import scheduler as sch
+from repro.core.topology import valid_c_values
+from repro.roofline import hw
+
+SCHEMES = ("startrail", "ring", "ulysses")
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrangement:
+    """One point of the (scheme, C, placement) tuning space at fixed P."""
+
+    scheme: str                 # 'startrail' | 'ring' (C=1) | 'ulysses'
+    c: int
+    r: int
+    placement: str = "team_inner"
+
+    @property
+    def key(self) -> str:
+        if self.scheme == "startrail":
+            return f"startrail_c{self.c}_{self.placement}"
+        return self.scheme
+
+
+def num_attention_layers(cfg: ModelConfig) -> int:
+    n = sum(1 for i in range(cfg.num_layers) if cfg.mixer_on_layer(i) == "attn")
+    if cfg.encdec:
+        n += cfg.num_encoder_layers + cfg.num_layers  # self + cross attention
+    return n
+
+
+def ulysses_supported(cfg: ModelConfig, sp: int) -> bool:
+    """Ulysses heads-divisibility limit: SP must divide Hq and Hkv."""
+    return cfg.num_heads % sp == 0 and cfg.num_kv_heads % sp == 0
+
+
+def check_scheme(cfg: ModelConfig, sp: int, scheme: str) -> None:
+    """Raise (with the same wording as core/ulysses.py) for illegal schemes."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"scheme must be one of {SCHEMES}, got {scheme!r}")
+    if scheme == "ulysses" and not ulysses_supported(cfg, sp):
+        raise ValueError(
+            f"Ulysses requires head counts divisible by SP degree: "
+            f"Hq={cfg.num_heads}, Hkv={cfg.num_kv_heads}, SP={sp} "
+            f"(the paper's scalability limit)")
+
+
+def enumerate_arrangements(cfg: ModelConfig, sp: int) -> List[Arrangement]:
+    """All legal arrangements at sequence-parallel degree `sp`."""
+    out: List[Arrangement] = []
+    for c in valid_c_values(sp):
+        r = sp // (c * c)
+        if c == 1:
+            out.append(Arrangement("ring", 1, r))
+        else:
+            for placement in ("team_inner", "ring_inner"):
+                out.append(Arrangement("startrail", c, r, placement))
+    if ulysses_supported(cfg, sp):
+        out.append(Arrangement("ulysses", 1, sp))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Per-device communication volumes (bytes, one attention layer, forward)
+# ---------------------------------------------------------------------------
+
+def comm_volumes(cfg: ModelConfig, shape: ShapeConfig, sp: int,
+                 arr: Arrangement, *, batch: Optional[int] = None,
+                 dtype_bytes: int = 2) -> Dict[str, float]:
+    """Implementation-exact per-device bytes for one attention layer.
+
+    StarTrail (paper eqs. 3-4, with this implementation's R ring permutes —
+    the chunks tour the full ring so the backward reuses the placement):
+
+      team all-gather:    (C-1) * B * N/P * (Hq + 2*Hkv) * dh * bytes
+      placement ppermute: 2 * B * (C*N/P) * Hkv * dh * bytes      (Alg. 2)
+      sub-ring ppermute:  R  * [the same chunk]                   (eq. 4)
+      reduce-scatter:     (C-1) * B * N/P * Hq * dh * 4           (f32 combine)
+
+    Ring is the C=1 degenerate point (no team collectives). Ulysses is the
+    two all-to-all pairs: q/k/v seq->head then o head->seq, each moving
+    (P-1)/P of the local tensor.
+    """
+    b = shape.global_batch if batch is None else batch
+    n = shape.seq_len
+    dh = cfg.head_dim_
+    q_h = cfg.num_heads * dh
+    kv_h = cfg.num_kv_heads * dh
+    s_local = n / sp
+    c, r = arr.c, arr.r
+
+    if arr.scheme == "ulysses":
+        a2a = (sp - 1) / sp * b * s_local * (2 * q_h + 2 * kv_h) * dtype_bytes
+        return {"team_allgather": 0.0, "placement_p2p": 0.0,
+                "ring_p2p": 0.0, "combine_rs": 0.0, "all_to_all": a2a,
+                "total": a2a}
+
+    chunk = 2 * b * (c * s_local) * kv_h * dtype_bytes   # one team's K/V
+    vols = {
+        "team_allgather": (c - 1) * b * s_local * (q_h + 2 * kv_h) * dtype_bytes,
+        "placement_p2p": chunk if c > 1 else 0.0,
+        "ring_p2p": r * chunk,
+        "combine_rs": (c - 1) * b * s_local * q_h * 4.0,
+        "all_to_all": 0.0,
+    }
+    vols["total"] = sum(vols.values())
+    return vols
+
+
+# ---------------------------------------------------------------------------
+# Time model (delegates to the §3.4 scheduler for ring/startrail)
+# ---------------------------------------------------------------------------
+
+def _workload(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> sch.AttnWorkload:
+    return sch.AttnWorkload(
+        batch=max(batch, 1), seq_len=shape.seq_len, num_heads=cfg.num_heads,
+        num_kv_heads=cfg.num_kv_heads, head_dim=cfg.head_dim_,
+        causal=(cfg.prefix_len_frac == 0.0))
+
+
+def arrangement_time(cfg: ModelConfig, shape: ShapeConfig, sp: int,
+                     arr: Arrangement, *, batch: Optional[int] = None,
+                     cluster: Optional[sch.ClusterModel] = None) -> float:
+    """Estimated seconds for one attention layer under `arr`."""
+    b = shape.global_batch if batch is None else batch
+    w = _workload(cfg, shape, b)
+    cl = cluster or sch.ClusterModel(sp_size=sp)
+    if arr.scheme in ("ring", "startrail"):
+        return sch.attention_step_cost(w, cl, arr.c, arr.placement)["total_s"]
+    # Ulysses: fully-local attention between two all-to-all pairs; the
+    # all-to-alls cannot overlap with the attention itself.
+    vols = comm_volumes(cfg, shape, sp, arr, batch=b,
+                        dtype_bytes=w.dtype_bytes)
+    causal_frac = 0.5 if w.causal else 1.0
+    flops = 4.0 * w.batch * w.seq_len * w.seq_len * w.num_heads \
+        * w.head_dim * causal_frac / sp
+    return flops / cl.peak_flops + vols["all_to_all"] / cl.link_bw \
+        + 2 * cl.step_latency
+
+
+def rank_arrangements(cfg: ModelConfig, shape: ShapeConfig, sp: int, *,
+                      batch: Optional[int] = None,
+                      cluster: Optional[sch.ClusterModel] = None,
+                      arrangements: Optional[Sequence[Arrangement]] = None,
+                      ) -> List[Dict[str, object]]:
+    """All legal arrangements priced and sorted fastest-first.
+
+    Each entry: {"arrangement": Arrangement, "total_s": float,
+    "volumes": per-layer byte breakdown, "model_s": whole-model estimate}.
+    """
+    cands = list(arrangements) if arrangements is not None \
+        else enumerate_arrangements(cfg, sp)
+    n_attn = max(num_attention_layers(cfg), 1)
+    out = []
+    for arr in cands:
+        t = arrangement_time(cfg, shape, sp, arr, batch=batch,
+                             cluster=cluster)
+        out.append({
+            "arrangement": arr,
+            "total_s": t,
+            "model_s": t * n_attn,
+            "volumes": comm_volumes(cfg, shape, sp, arr, batch=batch),
+        })
+    out.sort(key=lambda e: e["total_s"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Microbatch selection (gradient accumulation)
+# ---------------------------------------------------------------------------
+
+def activation_bytes_per_microbatch(cfg: ModelConfig, shape: ShapeConfig, *,
+                                    dp: int, sp: int, c: int,
+                                    microbatches: int,
+                                    remat: str = "attn_out") -> float:
+    """Rough per-device activation footprint of one microbatch's fwd+bwd.
+
+    Counts the residual-stream activations kept live for the backward
+    (d_model wide, bf16) per decoder layer, scaled by the remat policy, plus
+    the team-gathered attention working set (C * S_local wide). A planning
+    heuristic, not an allocator: the dry-run's memory_analysis is the
+    ground truth for a specific compile.
+    """
+    act_factor = {"none": 12.0, "attn_out": 6.0, "full": 2.0}[remat]
+    b_local = max(shape.global_batch // max(dp, 1), 1) / max(microbatches, 1)
+    tokens = b_local * shape.seq_len / sp
+    resid = tokens * cfg.d_model * 2.0 * cfg.num_layers * act_factor
+    attn_ws = tokens * c * cfg.head_dim_ * (cfg.num_heads
+                                            + 2 * cfg.num_kv_heads) * 4.0
+    return resid + attn_ws
+
+
+def choose_microbatches(cfg: ModelConfig, shape: ShapeConfig, *, dp: int,
+                        sp: int, c: int = 1, remat: str = "attn_out",
+                        hbm_budget: float = 0.4 * hw.HBM_BYTES) -> int:
+    """Smallest microbatch count dividing the per-device batch whose
+    activation estimate fits the HBM budget (rest is params/opt/temp)."""
+    if shape.kind != "train":
+        return 1
+    b_local = max(shape.global_batch // max(dp, 1), 1)
+    for m in range(1, b_local + 1):
+        if b_local % m != 0:
+            continue
+        est = activation_bytes_per_microbatch(
+            cfg, shape, dp=dp, sp=sp, c=c, microbatches=m, remat=remat)
+        if est <= hbm_budget:
+            return m
+    return b_local

@@ -1,0 +1,244 @@
+"""ExecutionPlan: the single resolved description of one run.
+
+A frozen, JSON-serialisable record of everything the entry points used to
+assemble by hand: the mesh grid and its (C, R) refinement, the attention
+scheme (`startrail` | `ulysses` | `ring`), the sequence layout, block
+implementation knobs, the remat policy, and the microbatch count for
+gradient accumulation. `launch.train`, `launch.dryrun`, the trainer and the
+benchmarks all build their mesh + runtime from a plan — nothing else
+hand-assembles `make_production_mesh` / `RunConfig.c` plumbing.
+
+Construction paths:
+  * `make_plan(cfg, shape, ...)` — explicit knobs, validated; unspecified
+    knobs resolved by the analytical cost model (`repro.plan.cost`).
+  * `repro.plan.autotune.autotune(...)` — measured refinement of the
+    analytical top-k; persists the winner to `results/PLAN_<arch>_<shape>.json`.
+  * `ExecutionPlan.load(path)` — reuse a persisted plan (`--plan` flag).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.dist.meshes import PLACEMENTS
+from repro.plan import cost
+
+MESH_KINDS = ("local", "production")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Fully-resolved run description. P_sp = n_devices / (pod * data)."""
+
+    arch: str
+    shape: str                     # shape name ('train_4k', 'smoke', ...)
+    seq_len: int
+    global_batch: int
+    n_devices: int
+    kind: str = "train"            # 'train' | 'prefill' | 'decode'
+    data: int = 1
+    pod: int = 1
+    scheme: str = "startrail"      # 'startrail' | 'ring' | 'ulysses'
+    c: int = 1
+    placement: str = "team_inner"
+    seq_scheme: str = "zigzag"
+    block_impl: str = "ref"
+    block_skip: bool = False
+    remat: str = "attn_out"
+    microbatches: int = 1
+    sharding_rules: str = "default"
+    grad_compression: str = "none"
+    mesh_kind: str = "local"       # 'local' (forced-host) | 'production'
+    unroll_scans: bool = False
+
+    # ---- derived sizes ---------------------------------------------------
+    @property
+    def dp_size(self) -> int:
+        return self.pod * self.data
+
+    @property
+    def sp_size(self) -> int:
+        return self.n_devices // self.dp_size
+
+    @property
+    def r(self) -> int:
+        return self.sp_size // (self.c * self.c)
+
+    def __post_init__(self):
+        if self.mesh_kind not in MESH_KINDS:
+            raise ValueError(f"mesh_kind must be one of {MESH_KINDS}")
+        if self.scheme not in cost.SCHEMES:
+            raise ValueError(f"scheme must be one of {cost.SCHEMES}, "
+                             f"got {self.scheme!r}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}")
+        if self.pod < 1 or self.data < 1 or self.n_devices < 1:
+            raise ValueError("pod/data/n_devices must be positive")
+        if self.n_devices % self.dp_size != 0:
+            raise ValueError(
+                f"n_devices={self.n_devices} not divisible by "
+                f"pod*data={self.dp_size}")
+        sp = self.sp_size
+        if self.c < 1 or sp % (self.c * self.c) != 0:
+            raise ValueError(
+                f"C={self.c} invalid for P={sp}: need P % C^2 == 0")
+        if self.scheme in ("ring", "ulysses") and self.c != 1:
+            raise ValueError(f"scheme {self.scheme!r} implies C=1, "
+                             f"got C={self.c}")
+        if self.seq_len % sp != 0:
+            raise ValueError(
+                f"seq_len={self.seq_len} not divisible by SP={sp}")
+        if self.seq_scheme == "zigzag" and self.seq_len % (2 * sp) != 0:
+            raise ValueError(
+                f"zigzag layout needs seq_len % (2*P) == 0, got "
+                f"seq_len={self.seq_len}, P={sp}")
+        if self.microbatches < 1:
+            raise ValueError("microbatches must be >= 1")
+        if self.kind == "train":
+            if self.global_batch % self.dp_size != 0:
+                raise ValueError(
+                    f"global_batch={self.global_batch} not divisible by "
+                    f"dp={self.dp_size}")
+            b_local = self.global_batch // self.dp_size
+            if b_local % self.microbatches != 0:
+                raise ValueError(
+                    f"per-device batch {b_local} not divisible by "
+                    f"microbatches={self.microbatches}")
+
+    # ---- the objects the rest of the system consumes ---------------------
+    def shape_config(self) -> ShapeConfig:
+        return ShapeConfig(self.shape, seq_len=self.seq_len,
+                           global_batch=self.global_batch, kind=self.kind)
+
+    def run_config(self) -> RunConfig:
+        return RunConfig(
+            c=self.c, seq_scheme=self.seq_scheme, block_impl=self.block_impl,
+            block_skip=self.block_skip, multi_pod=self.pod > 1,
+            remat=self.remat, grad_compression=self.grad_compression,
+            sharding_rules=self.sharding_rules, unroll_scans=self.unroll_scans,
+            attention_scheme=self.scheme, microbatches=self.microbatches)
+
+    def build_mesh(self):
+        """The refined `( [pod,] data, sp_grp, sp_ring, sp_team )` mesh."""
+        from repro.dist import meshes
+
+        if self.mesh_kind == "local":
+            if self.pod != 1:
+                raise ValueError("local meshes are single-pod")
+            return meshes.local_mesh_for_tests(c=self.c, r=self.r,
+                                               data=self.data)
+        from repro.launch.mesh import make_production_mesh
+
+        prod = make_production_mesh(multi_pod=self.pod > 1)
+        return meshes.refine_mesh(prod, self.c, placement=self.placement)
+
+    def build_train_step(self, model, adam_cfg, mesh=None):
+        """(jitted_step, shardings) — see train.step.build_train_step."""
+        from repro.train import step as train_step
+
+        mesh = mesh if mesh is not None else self.build_mesh()
+        return train_step.build_train_step(
+            model, mesh, self.run_config(), self.shape_config(), adam_cfg)
+
+    # ---- persistence -----------------------------------------------------
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["r"] = self.r           # derived, recorded for readability
+        d["sp_size"] = self.sp_size
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "ExecutionPlan":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    def save(self, path) -> pathlib.Path:
+        path = pathlib.Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(json.dumps({"plan": self.to_dict()}, indent=2))
+        return path
+
+    @classmethod
+    def load(cls, path) -> "ExecutionPlan":
+        d = json.loads(pathlib.Path(path).read_text())
+        return cls.from_dict(d["plan"] if "plan" in d else d)
+
+
+def plan_path(results_dir, arch: str, shape: str) -> pathlib.Path:
+    return pathlib.Path(results_dir) / f"PLAN_{arch}_{shape}.json"
+
+
+def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
+              = None, n_devices: int, data: int = 1, pod: int = 1,
+              scheme: Optional[str] = None, c: Optional[int] = None,
+              placement: Optional[str] = None,
+              microbatches: Optional[int] = None,
+              mesh_kind: str = "local", block_impl: str = "ref",
+              remat: str = "attn_out", sharding_rules: str = "default",
+              grad_compression: str = "none", unroll_scans: bool = False,
+              cluster=None) -> ExecutionPlan:
+    """Resolve one run into a validated ExecutionPlan.
+
+    Knobs left as None are chosen by the analytical cost model
+    (`cost.rank_arrangements`); explicitly-passed knobs are validated and
+    illegal combinations raise (e.g. `scheme='ulysses'` when P > Hkv raises
+    exactly as `core/ulysses.py` would at trace time).
+    """
+    dp = pod * data
+    if n_devices % dp != 0:
+        raise ValueError(f"n_devices={n_devices} not divisible by "
+                         f"pod*data={dp}")
+    sp = n_devices // dp
+
+    # sequence layout: causal load balance for training attention; SSM state
+    # passing and serve-side cache layouts need contiguity
+    if cfg.family in ("ssm", "hybrid") or shape.kind != "train":
+        seq_scheme = "contiguous"
+    else:
+        seq_scheme = "zigzag"
+
+    if scheme is not None:
+        cost.check_scheme(cfg, sp, scheme)
+    ranking = cost.rank_arrangements(cfg, shape, sp,
+                                     batch=max(shape.global_batch // dp, 1),
+                                     cluster=cluster)
+
+    def matches(arr: cost.Arrangement) -> bool:
+        if scheme is not None and arr.scheme != scheme:
+            return False
+        if c is not None and arr.c != c:
+            return False
+        if placement is not None and arr.c > 1 and arr.placement != placement:
+            return False
+        return True
+
+    picked = next((e["arrangement"] for e in ranking if matches(e["arrangement"])),
+                  None)
+    if picked is None:
+        legal = sorted({e["arrangement"].key for e in ranking})
+        raise ValueError(
+            f"no legal arrangement matches scheme={scheme!r} c={c} "
+            f"placement={placement!r} at P={sp}; legal: {legal}")
+
+    if microbatches is None:
+        if mesh_kind == "production" and shape.kind == "train":
+            microbatches = cost.choose_microbatches(
+                cfg, shape, dp=dp, sp=sp, c=picked.c, remat=remat)
+        else:
+            microbatches = 1
+
+    return ExecutionPlan(
+        arch=arch or cfg.name, shape=shape.name, seq_len=shape.seq_len,
+        global_batch=shape.global_batch, n_devices=n_devices,
+        kind=shape.kind, data=data, pod=pod, scheme=picked.scheme,
+        c=picked.c,
+        placement=picked.placement if picked.c > 1 else "team_inner",
+        seq_scheme=seq_scheme, block_impl=block_impl,
+        block_skip=cfg.window is not None and seq_scheme == "contiguous",
+        remat=remat, microbatches=microbatches,
+        sharding_rules=sharding_rules, grad_compression=grad_compression,
+        mesh_kind=mesh_kind, unroll_scans=unroll_scans)

@@ -632,5 +632,181 @@ CHECKS.update({
     "engine_moe": check_engine_moe,
 })
 
+
+# ---------------------------------------------------------------------------
+# plan layer: microbatched grad accumulation, scheme cross-checks, plans
+# ---------------------------------------------------------------------------
+
+def _gqa_smoke_cfg(arch="h2o-danube-1.8b", hq=8, hkv=4):
+    """Smoke config with head counts Ulysses can shard at SP=4. f32 params
+    so cross-scheme deltas measure reassociation, not bf16 rounding."""
+    import dataclasses as dc
+
+    from repro.configs import registry
+
+    return dc.replace(registry.get_smoke(arch), num_heads=hq,
+                      num_kv_heads=hkv, param_dtype="float32")
+
+
+def check_microbatch_equiv(arch="h2o-danube-1.8b", c=2, data=2, seq=64,
+                           batch=8, tol=5e-5):
+    """Gradient accumulation is bit-consistent: for a fixed global batch,
+    loss/grads with microbatches=4 match microbatches=1 within f32
+    accumulation tolerance (acceptance criterion)."""
+    import dataclasses as dc
+
+    from repro.configs import registry
+    from repro.configs.base import RunConfig, ShapeConfig
+    from repro.core import zigzag as zz
+    from repro.dist import meshes
+    from repro.models.factory import build_model
+    from repro.train import step as train_step
+
+    # f32 params: the mb=4-vs-mb=1 delta must be pure f32 reassociation
+    # noise, not per-microbatch bf16 rounding
+    cfg = dc.replace(registry.get_smoke(arch), param_dtype="float32")
+    model = build_model(cfg)
+    shape = ShapeConfig("test", seq_len=seq, global_batch=batch, kind="train")
+    r = 8 // (data * c * c)
+    mesh = meshes.local_mesh_for_tests(c=c, r=r, data=data)
+
+    run1 = RunConfig(c=c, seq_scheme="zigzag", microbatches=1)
+    run4 = dc.replace(run1, microbatches=4)
+    vg1, rt = train_step.build_value_and_grad_fn(model, mesh, run1, shape)
+    vg4, _ = train_step.build_value_and_grad_fn(model, mesh, run4, shape)
+
+    params = model.init(jax.random.PRNGKey(0))
+    batch_g = model.make_batch(jax.random.PRNGKey(1), shape)
+    psp = c * c * r
+    perm = zz.make_positions(seq, psp, rt.st_cfg.seq_scheme).reshape(-1)
+    batch_s = {k: jnp.take(v, perm, axis=1) for k, v in batch_g.items()}
+
+    l1, g1 = jax.jit(vg1)(params, batch_s)
+    l4, g4 = jax.jit(vg4)(params, batch_s)
+    lerr = abs(float(l1) - float(l4))
+    assert lerr < tol, f"loss mb=1 {l1} vs mb=4 {l4} (err {lerr})"
+    errs = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32)))), g1, g4)
+    worst = max(jax.tree.leaves(errs))
+    assert worst < tol, f"grad mismatch mb=1 vs mb=4: {worst}"
+
+
+def check_scheme_crosscheck(data=2, seq=64, batch=4, tol=2e-3):
+    """ulysses vs startrail vs C=1 ring: losses and grads agree on the
+    8-device smoke mesh for a GQA config (satellite acceptance)."""
+    from repro.configs.base import ShapeConfig
+    from repro.core import zigzag as zz
+    from repro.models.factory import build_model
+    from repro.plan import make_plan
+    from repro.train import step as train_step
+
+    cfg = _gqa_smoke_cfg()
+    model = build_model(cfg)
+    shape = ShapeConfig("test", seq_len=seq, global_batch=batch, kind="train")
+
+    results = {}
+    for scheme, c in (("ring", 1), ("startrail", 2), ("ulysses", 1)):
+        plan = make_plan(cfg, shape, arch="gqa-test", n_devices=8, data=data,
+                         scheme=scheme, c=c, mesh_kind="local")
+        mesh = plan.build_mesh()
+        vg, rt = train_step.build_value_and_grad_fn(
+            model, mesh, plan.run_config(), shape)
+        params = model.init(jax.random.PRNGKey(0))
+        batch_g = model.make_batch(jax.random.PRNGKey(1), shape)
+        perm = zz.make_positions(seq, plan.sp_size,
+                                 rt.st_cfg.seq_scheme).reshape(-1)
+        batch_s = {k: jnp.take(v, perm, axis=1) for k, v in batch_g.items()}
+        loss, grads = jax.jit(vg)(params, batch_s)
+        results[scheme] = (float(loss), grads)
+
+    l_ring, g_ring = results["ring"]
+    for scheme in ("startrail", "ulysses"):
+        l, g = results[scheme]
+        assert abs(l - l_ring) < tol, (
+            f"{scheme} loss {l} vs ring {l_ring}")
+        errs = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(
+                a.astype(jnp.float32) - b.astype(jnp.float32)))), g, g_ring)
+        worst = max(jax.tree.leaves(errs))
+        assert worst < tol, f"{scheme} grads vs ring: {worst}"
+
+
+def check_ulysses_rejected():
+    """Ulysses raises cleanly for the kv=1 (paligemma) config: at the plan
+    layer (cost model) and at trace time in core/ulysses.py."""
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig
+    from repro.plan import cost as plan_cost, make_plan
+
+    cfg = registry.get_smoke("paligemma-3b")   # kv=1
+    shape = ShapeConfig("test", seq_len=64, global_batch=4, kind="train")
+    for fn in (lambda: plan_cost.check_scheme(cfg, 8, "ulysses"),
+               lambda: make_plan(cfg, shape, n_devices=8, data=1,
+                                 scheme="ulysses", mesh_kind="local")):
+        try:
+            fn()
+        except ValueError as e:
+            assert "head counts divisible" in str(e), e
+        else:
+            raise AssertionError("ulysses not rejected for kv=1 at plan level")
+
+    # trace-time guard in core/ulysses.py (existing behaviour, kept)
+    mesh = make_mesh(1, 8)
+    cfg_st = st.StarTrailConfig(seq_len=32, axes=AXES,
+                                seq_scheme="contiguous", causal=True)
+    q = _rand(jax.random.PRNGKey(0), (1, 32, 4, 8))
+    kv = _rand(jax.random.PRNGKey(1), (1, 32, 1, 8))
+    spec = P(None, AXES, None, None)
+    try:
+        jax.jit(jax.shard_map(
+            lambda q, k, v: ulysses_lib.ulysses_attention(q, k, v, cfg_st),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
+            check_vma=False)).lower(q, kv, kv)
+    except ValueError as e:
+        assert "head counts divisible" in str(e), e
+    else:
+        raise AssertionError("core ulysses did not raise for kv=1")
+
+
+def check_plan_constructs():
+    """Every emitted ExecutionPlan actually constructs: for each assigned
+    arch, the cost-model plan's mesh refines and the train step lowers on
+    the smoke mesh (microbatched for even per-device batches)."""
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig
+    from repro.models.factory import build_model
+    from repro.optim import adamw
+    from repro.plan import make_plan
+
+    shape = ShapeConfig("test", seq_len=64, global_batch=4, kind="train")
+    meshes_built = {}
+    for arch in registry.ASSIGNED_ARCHS:
+        cfg = registry.get_smoke(arch)
+        model = build_model(cfg)
+        plan = make_plan(cfg, shape, arch=arch, n_devices=8, data=2,
+                         microbatches=2, mesh_kind="local")
+        assert plan.sp_size == 4 and plan.c * plan.c * plan.r == 4, plan
+        key = (plan.c, plan.r, plan.data)
+        if key not in meshes_built:
+            meshes_built[key] = plan.build_mesh()
+        adam_cfg = adamw.AdamWConfig(state_dtype=cfg.opt_dtype)
+        jstep, _ = plan.build_train_step(model, adam_cfg,
+                                         mesh=meshes_built[key])
+        params = model.abstract()
+        opt = adamw.abstract_state(params, adam_cfg)
+        batch = model.input_specs(shape)
+        jstep.lower(params, opt, batch)   # traces the whole island
+        print(f"  plan_constructs: {arch} scheme={plan.scheme} c={plan.c} "
+              f"r={plan.r} lowered", flush=True)
+
+
+CHECKS.update({
+    "microbatch_equiv": check_microbatch_equiv,
+    "scheme_crosscheck": check_scheme_crosscheck,
+    "ulysses_rejected": check_ulysses_rejected,
+    "plan_constructs": check_plan_constructs,
+})
+
 if __name__ == "__main__":
     main(sys.argv[1:])

@@ -47,8 +47,11 @@ def make_runtime(model: Model, run_cfg: RunConfig, shape: ShapeConfig,
         unroll=run_cfg.unroll_scans,
     )
     batch_axes = ("pod", "data") if run_cfg.multi_pod else ("data",)
+    # 'ring' is the C=1 degenerate StarTrail config; 'ulysses' dispatches
+    # per-layer in Runtime.attention (head-count permitting)
+    impl = "ulysses" if run_cfg.attention_scheme == "ulysses" else "startrail"
     return Runtime(mode=mode, st_cfg=st, batch_axes=batch_axes,
-                   rules=run_cfg.sharding_rules,
+                   rules=run_cfg.sharding_rules, attention_impl=impl,
                    unroll_scans=run_cfg.unroll_scans)
 
 
@@ -94,23 +97,57 @@ def _make_vg_island(model: Model, mesh, run_cfg: RunConfig, rt: Runtime,
     leaves already reduce-scattered by the all_gather transposes, replicated
     leaves (norm scales, routers) summed over batch + SP axes, including
     ``pod``.
+
+    With ``run_cfg.microbatches > 1`` the island runs gradient accumulation:
+    a ``jax.lax.scan`` over equal microbatch slices of the per-device batch,
+    f32 grad accumulators, loss averaged — so the global batch no longer has
+    to fit in one step. The accumulation is in f32 regardless of the param
+    dtype, which keeps microbatches=M within f32 reassociation noise of
+    microbatches=1 (asserted by the `microbatch_equiv` dist check).
     """
     n_dev = mesh.size
+    mb = max(run_cfg.microbatches, 1)
 
     def island(params, batch):
-        loss, grads = jax.value_and_grad(
-            lambda p: model.loss(rt, p, batch, remat=run_cfg.remat))(params)
+        def loss_fn(p, b):
+            return model.loss(rt, p, b, remat=run_cfg.remat)
+
+        if mb == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(x):
+                if x.shape[0] % mb:
+                    raise ValueError(
+                        f"per-device batch {x.shape[0]} not divisible by "
+                        f"microbatches={mb}")
+                return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+            def body(carry, mbatch):
+                loss_acc, g_acc = carry
+                l_mb, g_mb = jax.value_and_grad(loss_fn)(params, mbatch)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, g_mb)
+                return (loss_acc + l_mb.astype(jnp.float32), g_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, g_sum), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), g0),
+                jax.tree.map(split, batch))
+            loss = loss_sum / mb
+            grads = jax.tree.map(lambda g: g / mb, g_sum)
+
         inv = 1.0 / n_dev
 
-        def reduce_leaf(g, spec):
+        def reduce_leaf(g, p, spec):
             g32 = g.astype(jnp.float32) * inv
             unmentioned = tuple(a for a in mesh.axis_names
                                 if a not in _mentioned_axes(spec))
             if unmentioned:  # reduce in f32, downcast once at the end
                 g32 = jax.lax.psum(g32, unmentioned)
-            return g32.astype(g.dtype)
+            return g32.astype(p.dtype)
 
-        grads = jax.tree.map(reduce_leaf, grads, param_specs)
+        grads = jax.tree.map(reduce_leaf, grads, params, param_specs)
         return loss, grads
 
     return jax.shard_map(

@@ -3,7 +3,20 @@
 The loop is deliberately thin — all heavy lifting is in the jitted step —
 but carries the production concerns: restore-on-start, periodic async
 checkpoints, deterministic data resume, straggler watermark, and a jsonl
-metrics stream.
+metrics stream. The run itself is described by an
+``repro.plan.ExecutionPlan``: the trainer builds its mesh, runtime and
+microbatching from the plan, never from hand-assembled pieces.
+
+Metrics stay on-device between log boundaries: converting a jax scalar to
+``float`` blocks the host on the step *and* transfers it, so the loop
+buffers the (tiny, replicated) metric arrays and materialises them only on
+``log_every`` / checkpoint boundaries and at exit — the jsonl stream still
+carries every step, just written in batches (a hard kill can lose at most
+the un-flushed tail; Python-level failures flush in ``finally``). The loop
+still waits on the *previous* step before dispatching past it (a one-deep
+async pipeline): the device keeps computing while the host prepares the
+next batch, run-ahead stays bounded, and the straggler detector keeps
+measuring real step durations rather than dispatch time.
 """
 
 from __future__ import annotations
@@ -11,18 +24,15 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-import time
-from typing import Callable, Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
-import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.dist import checkpoint, elastic
 from repro.models.factory import Model
 from repro.optim import adamw
-from repro.train import step as train_step
+from repro.plan.plan import ExecutionPlan
 
 
 @dataclasses.dataclass
@@ -35,13 +45,14 @@ class TrainerConfig:
     seed: int = 0
 
 
-def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
-          adam_cfg: adamw.AdamWConfig, tcfg: TrainerConfig,
-          data_source=None, params=None) -> Dict:
+def train(model: Model, plan: ExecutionPlan, adam_cfg: adamw.AdamWConfig,
+          tcfg: TrainerConfig, data_source=None, params=None,
+          mesh=None) -> Dict:
     """Run the loop; returns final metrics. Restores from ckpt_dir if a
     checkpoint exists (fault-tolerant restart)."""
-    jstep, sh = train_step.build_train_step(model, mesh, run_cfg, shape,
-                                            adam_cfg)
+    mesh = mesh if mesh is not None else plan.build_mesh()
+    shape = plan.shape_config()
+    jstep, sh = plan.build_train_step(model, adam_cfg, mesh=mesh)
     rt = sh["rt"]
     sp_size = 1
     for a in rt.sp_axes:
@@ -78,26 +89,50 @@ def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
     metrics_f = open(tcfg.metrics_path, "a") if tcfg.metrics_path else None
     pending_ckpt = None
     last_metrics: Dict = {}
+    # (step_i, on-device metrics, straggler flag) buffered between flushes —
+    # float() conversion is the only host sync in the loop
+    pending_metrics: List[Tuple[int, Dict, bool]] = []
 
+    def flush_metrics() -> Dict:
+        nonlocal last_metrics
+        for si, dev_m, straggling in pending_metrics:
+            m = {k: float(v) for k, v in dev_m.items()}
+            if straggling:
+                m["straggler_flag"] = 1.0
+            last_metrics = {"step": si + 1, **m}
+            if metrics_f:
+                metrics_f.write(json.dumps(last_metrics) + "\n")
+        if metrics_f and pending_metrics:
+            metrics_f.flush()
+        pending_metrics.clear()
+        return last_metrics
+
+    prev_loss = None
     try:
         for step_i in range(start, tcfg.num_steps):
             detector.step_start()
             _, batch_np = prefetch.next()
             batch = jax.device_put(batch_np, sh["batch"])
             params, opt, metrics = jstep(params, opt, batch)
-            metrics = {k: float(v) for k, v in metrics.items()}
+            # one-deep pipeline: dispatch is async, so wait on the
+            # *previous* step's (on-device, transfer-free) loss — the
+            # device is already busy with this step, and the detector's
+            # window sees real step durations (shifted by one step)
+            if prev_loss is not None:
+                jax.block_until_ready(prev_loss)
+            prev_loss = metrics["loss"]
             straggling = detector.step_end()
-            if straggling:
-                metrics["straggler_flag"] = 1.0
-            last_metrics = {"step": step_i + 1, **metrics}
-            if (step_i + 1) % tcfg.log_every == 0 or step_i == start:
-                print(f"[trainer] step {step_i + 1} "
-                      f"loss={metrics['loss']:.4f} "
-                      f"gnorm={metrics['grad_norm']:.3f}", flush=True)
-            if metrics_f:
-                metrics_f.write(json.dumps(last_metrics) + "\n")
-                metrics_f.flush()
-            if tcfg.ckpt_dir and (step_i + 1) % tcfg.ckpt_every == 0:
+            pending_metrics.append((step_i, metrics, straggling))
+            ckpt_boundary = (tcfg.ckpt_dir
+                             and (step_i + 1) % tcfg.ckpt_every == 0)
+            if ((step_i + 1) % tcfg.log_every == 0 or step_i == start
+                    or ckpt_boundary or step_i + 1 == tcfg.num_steps):
+                m = flush_metrics()
+                if (step_i + 1) % tcfg.log_every == 0 or step_i == start:
+                    print(f"[trainer] step {step_i + 1} "
+                          f"loss={m['loss']:.4f} "
+                          f"gnorm={m['grad_norm']:.3f}", flush=True)
+            if ckpt_boundary:
                 for t in pending_ckpt or ():
                     t.join()
                 # both writes async: save() snapshots to host in this
@@ -112,6 +147,7 @@ def train(model: Model, mesh, run_cfg: RunConfig, shape: ShapeConfig,
                 ]
     finally:
         prefetch.stop()
+        flush_metrics()
         for t in pending_ckpt or ():
             t.join()
         if metrics_f:

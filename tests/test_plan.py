@@ -1,0 +1,176 @@
+"""Plan-layer tests: cost-model properties, plan validation, mesh errors.
+
+Multi-device behaviour (plans lowering train steps, microbatch equivalence,
+scheme cross-checks) runs in the `plan_and_microbatch` subprocess batch of
+tests/test_system.py; everything here is single-device / pure python.
+"""
+
+import dataclasses as dc
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core.topology import valid_c_values
+from repro.dist import meshes
+from repro.plan import ExecutionPlan, cost, make_plan, plan_path
+
+ALL_ARCHS = list(registry.ASSIGNED_ARCHS)
+PROD_SP = 16   # the production 16x16 mesh's model-axis width
+
+
+def _shapes_for(cfg):
+    return [s for s in SHAPES.values()
+            if registry.shape_supported(cfg, s)[0]]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_ring_volume_saving_matches_paper_claims(arch):
+    """The analytical P2P volumes reproduce benchmarks/comm_volume.py's
+    claims: StarTrail-C saves (C-1)/C of Ring's per-device permute bytes
+    (~50% at C=2, ~75% at C=4) for every registered config and shape."""
+    cfg = registry.get(arch)
+    for shape in _shapes_for(cfg):
+        ring = cost.comm_volumes(cfg, shape, PROD_SP,
+                                 cost.Arrangement("ring", 1, PROD_SP))
+        assert ring["team_allgather"] == 0 and ring["combine_rs"] == 0
+        for c in (2, 4):
+            arr = cost.Arrangement("startrail", c, PROD_SP // (c * c))
+            vols = cost.comm_volumes(cfg, shape, PROD_SP, arr)
+            saving = 1 - vols["ring_p2p"] / ring["ring_p2p"]
+            assert saving == pytest.approx(1 - 1 / c, rel=1e-9), (
+                arch, shape.name, c, saving)
+            # the team collectives StarTrail pays for the saving are real
+            assert vols["team_allgather"] > 0 and vols["combine_rs"] > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_ranking_emits_constructible_plans(arch):
+    """Every arrangement the cost model emits turns into an ExecutionPlan
+    that validates: the mesh grid refines, shapes divide, Ulysses only
+    appears where head counts allow."""
+    cfg = registry.get(arch)
+    for shape in _shapes_for(cfg):
+        ranking = cost.rank_arrangements(cfg, shape, PROD_SP, batch=1)
+        keys = [e["arrangement"].key for e in ranking]
+        assert len(keys) == len(set(keys)) and ranking
+        assert ("ulysses" in keys) == cost.ulysses_supported(cfg, PROD_SP)
+        assert [e["total_s"] for e in ranking] == sorted(
+            e["total_s"] for e in ranking)
+        for e in ranking:
+            arr = e["arrangement"]
+            plan = make_plan(
+                cfg, shape, arch=arch, n_devices=256, data=PROD_SP,
+                scheme=arr.scheme, c=arr.c,
+                placement=arr.placement if arr.c > 1 else None,
+                mesh_kind="production")
+            assert plan.sp_size == PROD_SP
+            assert plan.c * plan.c * plan.r == PROD_SP
+            assert plan.seq_len % plan.sp_size == 0
+            # pure-array mesh refinement (no jax device state)
+            grid = meshes.refine_grid(
+                np.arange(PROD_SP).reshape(1, PROD_SP), plan.c,
+                plan.placement)
+            assert grid.shape == (1, plan.c, plan.r, plan.c)
+            assert sorted(grid.reshape(-1)) == list(range(PROD_SP))
+
+
+def test_valid_c_values_cover_factorisations():
+    for p in (4, 8, 16, 256):
+        for c in valid_c_values(p):
+            assert p % (c * c) == 0
+        arrs = cost.enumerate_arrangements(registry.get("minitron-8b"), p)
+        assert {a.c for a in arrs if a.scheme != "ulysses"} == \
+            set(valid_c_values(p))
+
+
+def test_ulysses_rejected_for_low_kv():
+    cfg = registry.get("paligemma-3b")      # kv heads = 1
+    shape = SHAPES["train_4k"]
+    with pytest.raises(ValueError, match="head counts divisible"):
+        make_plan(cfg, shape, n_devices=256, data=16, scheme="ulysses",
+                  mesh_kind="production")
+    arrs = cost.enumerate_arrangements(cfg, PROD_SP)
+    assert all(a.scheme != "ulysses" for a in arrs)
+
+
+def test_explicit_knobs_and_validation_errors():
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    shape = ShapeConfig("smoke", seq_len=64, global_batch=4, kind="train")
+    plan = make_plan(cfg, shape, n_devices=8, data=2, c=1)
+    assert plan.scheme == "ring" and plan.r == 4
+    with pytest.raises(ValueError, match="no legal arrangement"):
+        make_plan(cfg, shape, n_devices=8, data=2, c=3)
+    with pytest.raises(ValueError, match="C=2"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=4,
+                      n_devices=8, data=4, c=2)      # P=2, C^2=4
+    with pytest.raises(ValueError, match="zigzag"):
+        ExecutionPlan(arch="x", shape="s", seq_len=8, global_batch=4,
+                      n_devices=8, data=1, c=1)      # 8 % (2*8) != 0
+    with pytest.raises(ValueError, match="microbatches"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=4,
+                      n_devices=8, data=2, c=1, microbatches=3)
+    with pytest.raises(ValueError, match="implies C=1"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=8,
+                      n_devices=8, data=2, c=2, scheme="ulysses")
+
+
+def test_plan_roundtrip_and_path(tmp_path):
+    cfg = registry.get("minitron-8b")
+    plan = make_plan(cfg, SHAPES["train_4k"], arch="minitron-8b",
+                     n_devices=256, data=16, mesh_kind="production")
+    p = plan.save(tmp_path / "PLAN_x.json")
+    loaded = ExecutionPlan.load(p)
+    assert loaded == plan
+    rec = json.loads(p.read_text())
+    assert rec["plan"]["sp_size"] == 16      # derived fields recorded
+    assert plan_path(tmp_path, "a", "s").name == "PLAN_a_s.json"
+
+
+def test_microbatch_selection():
+    """Auto microbatching divides the per-device batch; the big archs need
+    accumulation for train_4k's global_batch=256 (the 'honest' case)."""
+    shape = SHAPES["train_4k"]
+    for arch in ALL_ARCHS:
+        cfg = registry.get(arch)
+        m = cost.choose_microbatches(cfg, shape, dp=16, sp=16, c=2)
+        assert (shape.global_batch // 16) % m == 0
+    big = cost.choose_microbatches(
+        registry.get("jamba-1.5-large-398b"), shape, dp=16, sp=16, c=2)
+    assert big > 1
+    plan = make_plan(registry.get("jamba-1.5-large-398b"), shape,
+                     n_devices=256, data=16, mesh_kind="production")
+    assert plan.microbatches == big
+
+
+def test_production_mesh_error_lists_refinable_grids():
+    """With too few devices the mesh error enumerates legal (data, model)
+    grids instead of a silent jax shape mismatch (satellite acceptance)."""
+    import jax
+
+    from repro.launch import mesh as mesh_lib
+
+    assert jax.device_count() < 256   # tier-1 session runs single-device
+    with pytest.raises(ValueError) as ei:
+        mesh_lib.make_production_mesh()
+    msg = str(ei.value)
+    assert "256 devices" in msg and "--smoke" in msg
+    assert mesh_lib.refinable_grids(8) == [(2, 4), (1, 8)]
+    assert all(d * m == 64 and m % 4 == 0
+               for d, m in mesh_lib.refinable_grids(64))
+
+
+def test_run_config_reflects_plan():
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+    plan = make_plan(cfg, shape, n_devices=8, data=2, c=2,
+                     microbatches=2)
+    rc = plan.run_config()
+    assert rc.c == 2 and rc.microbatches == 2
+    assert rc.attention_scheme == plan.scheme
+    assert rc.seq_scheme == plan.seq_scheme
+    plan_ssm = make_plan(registry.get_smoke("xlstm-1.3b"), shape,
+                         n_devices=8, data=2)
+    assert plan_ssm.seq_scheme == "contiguous"

@@ -32,6 +32,10 @@ BATCHES = {
     "engine_serving": [
         "greedy_tie", "engine_sampling", "engine_mixed", "engine_moe",
     ],
+    "plan_and_microbatch": [
+        "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",
+        "plan_constructs",
+    ],
 }
 
 
@@ -69,12 +73,18 @@ def test_dryrun_one_cell():
 
 
 def test_train_driver_end_to_end(tmp_path):
-    """launch.train runs, checkpoints, and restores in a fresh process."""
+    """launch.train runs, checkpoints, and restores in a fresh process;
+    the jsonl metrics stream carries every step (the trainer buffers
+    metrics on-device between log boundaries — the stream must not)."""
+    import json
+
     env = dict(os.environ)
     env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    metrics = tmp_path / "metrics.jsonl"
     args = [sys.executable, "-m", "repro.launch.train", "--arch",
             "h2o-danube-1.8b", "--smoke", "--devices", "8", "--data", "2",
-            "--c", "2", "--steps", "6", "--ckpt-dir", str(tmp_path)]
+            "--c", "2", "--steps", "6", "--ckpt-dir", str(tmp_path),
+            "--metrics", str(metrics)]
     p1 = subprocess.run(args, env=env, capture_output=True, text=True,
                         timeout=1200)
     assert p1.returncode == 0, p1.stdout[-3000:] + p1.stderr[-2000:]
@@ -83,3 +93,6 @@ def test_train_driver_end_to_end(tmp_path):
                         timeout=1200)
     assert p2.returncode == 0, p2.stdout[-3000:] + p2.stderr[-2000:]
     assert "restored step 6" in p2.stdout
+    recs = [json.loads(l) for l in metrics.read_text().splitlines()]
+    assert [r["step"] for r in recs] == list(range(1, 7)) + [7, 8]
+    assert all("loss" in r and "grad_norm" in r for r in recs)

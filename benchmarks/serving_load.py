@@ -12,6 +12,15 @@ Reports aggregate tokens/s, per-request latency (steps and seconds), batch
 occupancy and page utilization, and writes the result JSON (default
 ``results/BENCH_serving.json``).
 
+A second, reduced phase compares the two paged-decode kernels on the same
+workload: ``kernel_impl='ref'`` (dense page gather + jnp oracle) vs
+``kernel_impl='pallas'`` (the page-table-indexed Pallas kernel —
+interpret mode on CPU, so its CPU tokens/s is diagnostic only; the bit
+that matters off-TPU is **bit-identical tokens** and **zero recompiles
+after warmup**, both of which ``--check`` gates). Per-kernel tokens/s and
+the analytical byte/flop pricing (`plan.cost.decode_step_cost`) land in
+the ``kernels`` section of the JSON.
+
   PYTHONPATH=src python benchmarks/serving_load.py --smoke
   PYTHONPATH=src python benchmarks/serving_load.py --smoke --check  # CI gate
 """
@@ -102,6 +111,51 @@ def run_sequential(engine, workload):
     }, out
 
 
+def run_kernel_compare(args, workload):
+    """Same (reduced) workload through both paged-decode kernels.
+
+    Each kernel gets its own engine (fresh compile caches), an untimed
+    warmup pass, then a timed replay — so the numbers are steady-state and
+    the replay must add zero compiles. Returns the per-kernel stats plus
+    the cross-kernel output comparison.
+    """
+    from repro.engine import EngineConfig, build_engine
+
+    sub = sorted(workload, key=lambda p: p[0])[:args.kernel_requests]
+    out = {}
+    stats = {}
+    for kern in ("ref", "pallas"):
+        engine = build_engine(
+            args.arch, smoke=args.smoke, c=args.c, kernel=kern,
+            eng=EngineConfig(max_slots=args.max_slots,
+                             page_size=args.page_size,
+                             pages_per_shard=args.pages_per_shard,
+                             max_len=args.max_len))
+        run_continuous(engine, sub)          # untimed warmup
+        engine.reset()
+        compiles0 = (engine.metrics.prefill_compiles,
+                     engine.metrics.decode_compiles)
+        timed, toks = run_continuous(engine, sub)
+        compiles1 = (engine.metrics.prefill_compiles,
+                     engine.metrics.decode_compiles)
+        out[kern] = toks
+        stats[kern] = {
+            "tokens_per_s": timed["tokens_per_s"],
+            "wall_s": timed["wall_s"],
+            "tokens": timed["tokens"],
+            "compiles_after_warmup": compiles1 == compiles0,
+        }
+        # analytical decode pricing at this phase's shape (per step)
+        from repro.plan import cost as plan_cost
+
+        stats[kern]["analytical"] = plan_cost.decode_step_cost(
+            engine.cfg, batch=args.max_slots, cache_len=args.max_len,
+            sp=engine.sp, page_size=args.page_size, kernel=kern)
+    stats["outputs_identical"] = out["ref"] == out["pallas"]
+    stats["requests"] = len(sub)
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
@@ -123,6 +177,9 @@ def main(argv=None):
                     default=True,
                     help="every other request samples (T=0.8, k=32, p=0.95); "
                          "--no-sampled for a pure-greedy workload")
+    ap.add_argument("--kernel-requests", type=int, default=3,
+                    help="requests in the ref-vs-pallas kernel phase "
+                         "(0 disables it; interpret mode is slow on CPU)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/BENCH_serving.json")
     ap.add_argument("--check", action="store_true",
@@ -159,6 +216,9 @@ def main(argv=None):
     compiles1 = (engine.metrics.prefill_compiles,
                  engine.metrics.decode_compiles)
 
+    kernels = (run_kernel_compare(args, workload)
+               if args.kernel_requests > 0 else None)
+
     identical = cont_out == seq_out
     result = {
         "bench": "serving_load",
@@ -180,6 +240,7 @@ def main(argv=None):
         "speedup": cont["tokens_per_s"] / seq["tokens_per_s"],
         "outputs_identical_to_solo": identical,
         "compiles_after_warmup": compiles1 == compiles0,
+        "kernels": kernels,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -189,12 +250,23 @@ def main(argv=None):
           f"sequential {seq['tokens_per_s']:.2f} tok/s "
           f"(speedup {result['speedup']:.2f}x), outputs identical: "
           f"{identical}, wrote {args.out}")
+    if kernels is not None:
+        print(f"[serving_load] kernels: "
+              f"ref {kernels['ref']['tokens_per_s']:.2f} tok/s vs "
+              f"pallas(interpret) {kernels['pallas']['tokens_per_s']:.2f} "
+              f"tok/s, identical: {kernels['outputs_identical']}")
     if args.check:
         assert identical, "batched outputs diverged from solo serving"
         assert result["compiles_after_warmup"], "recompiled after warmup"
         assert result["speedup"] > 1.0, (
             f"continuous batching slower than sequential: "
             f"{result['speedup']:.2f}x")
+        if kernels is not None:
+            assert kernels["outputs_identical"], (
+                "paged-decode kernel tokens diverged from the ref path")
+            for kern in ("ref", "pallas"):
+                assert kernels[kern]["compiles_after_warmup"], (
+                    f"{kern} paged-kernel path recompiled after warmup")
     return result
 
 

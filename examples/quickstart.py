@@ -17,7 +17,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import StarTrailConfig, startrail_attention
 from repro.core import zigzag as zz
-from repro.kernels.ref import mha_reference
+from repro.kernels.dispatch import mha as mha_reference
 
 # ---- mesh: P = 8 sequence-parallel devices, attention-parallel size C = 2
 C, R = 2, 2                                # P = C^2 * R = 8

@@ -117,7 +117,8 @@ class RunConfig:
     # gradient-accumulation microbatches per optimizer step (train only)
     microbatches: int = 1
     seq_scheme: str = "zigzag"
-    block_impl: str = "ref"
+    block_impl: str = "ref"              # ring-step block kernel: 'ref'|'pallas'
+    kernel_impl: str = "ref"             # serving decode kernel: 'ref'|'pallas'
     block_skip: bool = False
     multi_pod: bool = False
     remat: str = "attn_out"              # 'none' | 'attn_out' | 'full'

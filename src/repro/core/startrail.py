@@ -45,7 +45,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import topology as topo_lib
 from repro.core.combine import NEG_INF, combine_pair
-from repro.kernels import ref as ref_kernels
+from repro.kernels import dispatch as kernels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,36 +116,21 @@ def team_positions(team_idx: jax.Array, c: int, seq_len: int, sp_size: int, sche
 
 
 # ---------------------------------------------------------------------------
-# Block dispatch
+# Block compute (routed through the kernels.dispatch layer)
 # ---------------------------------------------------------------------------
 
 def _block_fwd(cfg: StarTrailConfig, q, k, v, pos_q, pos_k):
-    if cfg.block_impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-
-        return kernel_ops.flash_attention_fwd(
-            q, k, v, pos_q, pos_k, causal=cfg.causal, window=cfg.window,
-            scale=cfg.scale, prefix_len=cfg.prefix_len,
-        )
-    return ref_kernels.block_attention(
+    return kernels.block_fwd(
         q, k, v, pos_q, pos_k, causal=cfg.causal, window=cfg.window,
-        scale=cfg.scale, prefix_len=cfg.prefix_len,
+        scale=cfg.scale, prefix_len=cfg.prefix_len, impl=cfg.block_impl,
     )
 
 
 def _block_bwd(cfg: StarTrailConfig, q, k, v, do, lse, delta, pos_q, pos_k):
-    if cfg.block_impl == "pallas":
-        from repro.kernels import ops as kernel_ops
-
-        return kernel_ops.flash_attention_bwd(
-            q, k, v, do, lse, delta, pos_q, pos_k,
-            causal=cfg.causal, window=cfg.window, scale=cfg.scale,
-            prefix_len=cfg.prefix_len,
-        )
-    return ref_kernels.block_attention_bwd(
+    return kernels.block_bwd(
         q, k, v, do, lse, delta, pos_q, pos_k,
         causal=cfg.causal, window=cfg.window, scale=cfg.scale,
-        prefix_len=cfg.prefix_len,
+        prefix_len=cfg.prefix_len, impl=cfg.block_impl,
     )
 
 
@@ -411,24 +396,12 @@ def sharded_startrail_attention(
 # The ring degenerates to a partial-attention + global lse-combine reduction.
 # ---------------------------------------------------------------------------
 
-def decode_attention(q_new, k_cache, v_cache, pos_q, pos_k, valid_k, cfg: StarTrailConfig):
-    """Per-shard decode attention (call inside shard_map).
-
-    q_new: (B, M, Hq, D) replicated across SP axes (M = new tokens, usually 1)
-    k_cache/v_cache: (B, S_local, Hkv, D) this shard's slice of the cache
-    pos_q: (M,) positions of the new tokens; pos_k: (S_local,) cache positions
-    valid_k: (B, S_local) bool — which cache slots are filled
-    Returns (B, M, Hq, D) fully-combined attention, replicated across SP.
+def combine_decode_partials(o, lse, axes):
+    """Merge per-shard partial (o, lse) pairs into full attention via the
+    global lse-combine psum over ``axes``. Shards whose lse is -inf (no
+    visible key) contribute exact zeros; if *every* shard is dead the
+    result is zero (the caller treats such rows as inactive).
     """
-    o, lse = ref_kernels.block_attention(
-        q_new, k_cache, v_cache, pos_q, pos_k,
-        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
-    )
-    # mask out unfilled cache slots: recompute with -inf where invalid is
-    # handled by giving invalid slots pos = huge so the causal mask kills
-    # them; callers encode validity via pos_k (see serve.kv_cache).
-    del valid_k
-    axes = tuple(cfg.axes)
     m = jax.lax.pmax(lse, axes)
     dead = m <= NEG_INF / 2
     m_safe = jnp.where(dead, 0.0, m)
@@ -436,4 +409,26 @@ def decode_attention(q_new, k_cache, v_cache, pos_q, pos_k, valid_k, cfg: StarTr
     se_safe = jnp.where(se == 0.0, 1.0, se)
     w = jnp.where(dead, 0.0, jnp.exp(lse - m_safe) / se_safe)
     o = o * jnp.swapaxes(w, 1, 2)[..., None]
-    return jax.lax.psum(o, axes).astype(q_new.dtype)
+    return jax.lax.psum(o, axes)
+
+
+def decode_attention(q_new, k_cache, v_cache, pos_q, pos_k, cfg: StarTrailConfig):
+    """Per-shard decode attention (call inside shard_map).
+
+    q_new: (B, M, Hq, D) replicated across SP axes (M = new tokens, usually 1)
+    k_cache/v_cache: (B, S_local, Hkv, D) this shard's slice of the cache
+    pos_q: (M,) or (B, M) positions of the new tokens; pos_k: (S_local,) or
+      (B, S_local) cache positions
+    Returns (B, M, Hq, D) fully-combined attention, replicated across SP.
+
+    Validity contract (repo-wide): cache-slot validity is encoded through
+    *positions*, never a separate mask — callers push the positions of
+    unfilled/unowned slots past the query position (``cache_len + 1``) so
+    the causal mask removes them (see serve.kv_cache / engine.paged_cache).
+    """
+    o, lse = kernels.decode(
+        q_new, k_cache, v_cache, pos_q, pos_k,
+        causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+        impl=cfg.block_impl,
+    )
+    return combine_decode_partials(o, lse, tuple(cfg.axes)).astype(q_new.dtype)

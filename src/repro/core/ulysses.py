@@ -17,7 +17,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref as ref_kernels
+from repro.kernels import dispatch as kernels
 from repro.core.startrail import StarTrailConfig, shard_positions
 
 
@@ -47,10 +47,9 @@ def ulysses_attention(q, k, v, cfg: StarTrailConfig):
     ranks = jnp.arange(sp, dtype=jnp.int32)
     pos = jax.vmap(lambda r: shard_positions(r, cfg.seq_len, sp, cfg.seq_scheme))(ranks).reshape(-1)
 
-    o, _ = ref_kernels.block_attention(
+    o = kernels.prefill(
         qh, kh, vh, pos, pos, causal=cfg.causal, window=cfg.window,
-        scale=cfg.scale, prefix_len=cfg.prefix_len
+        scale=cfg.scale, prefix_len=cfg.prefix_len, impl=cfg.block_impl,
     )
-    o = o.astype(q.dtype)
     # head-sharded -> seq-sharded
     return jax.lax.all_to_all(o, axes, split_axis=1, concat_axis=2, tiled=True)

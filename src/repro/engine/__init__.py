@@ -3,8 +3,12 @@ SP-sharded KV cache (see docs/SERVING.md).
 
 Public surface:
   Request                — one serving request (prompt, budget, sampling)
-  Engine / EngineConfig  — add_request / step / collect / run driver
-  build_engine           — convenience constructor over the local mesh
+  Engine / EngineConfig  — add_request / step / collect / run driver;
+                           constructed from a kind='decode' ExecutionPlan
+                           (mesh, arrangement, decode_batch/page_size and
+                           the paged-decode kernel_impl all come from it)
+  build_engine           — convenience constructor: resolves a serve plan
+                           (plan.make_serve_plan) over the local mesh
   paged_cache            — SP-sharded page-pool layout + island helpers
   sampling               — vocab-parallel greedy/temperature/top-k/top-p
   scheduler              — FIFO continuous-batching slot/page bookkeeping

@@ -5,7 +5,9 @@ The engine owns three kinds of state:
 
   * **device** — the page pools (``paged_cache.init_pools``) and the model
     params, both living in the refined ``(data, sp_grp, sp_ring, sp_team)``
-    mesh's shardings;
+    mesh's shardings — the mesh, the (C, R) refinement and the paged-decode
+    ``kernel_impl`` all come from one ``ExecutionPlan`` serve plan
+    (``plan.make_serve_plan`` / ``launch.serve --plan``);
   * **host** — the ``Scheduler`` (slots, page free lists, page table,
     FIFO queue);
   * **compiled** — two jit caches: prefill keyed by the padded prompt
@@ -36,7 +38,6 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.dist.sharding import SP_AXES
 from repro.engine import paged_cache, sampling as sampling_lib
 from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
@@ -87,10 +88,16 @@ class EngineMetrics:
 
 
 class Engine:
-    """Continuous-batching serving engine (add_request / step / collect)."""
+    """Continuous-batching serving engine (add_request / step / collect).
 
-    def __init__(self, model: Model, mesh, run_cfg: RunConfig,
-                 eng: EngineConfig = EngineConfig(), params=None):
+    Construction is plan-driven: the ``ExecutionPlan`` (a ``kind='decode'``
+    plan with the serving face filled in — see ``plan.make_serve_plan``) is
+    the single source of the mesh refinement, the attention scheme, the
+    decode slot count / page size, and the paged-decode ``kernel_impl``.
+    """
+
+    def __init__(self, model: Model, plan,
+                 eng: EngineConfig = EngineConfig(), params=None, mesh=None):
         import jax
         import jax.numpy as jnp
         import dataclasses as dc
@@ -101,17 +108,32 @@ class Engine:
         ok, why = paged_cache.supported(cfg)
         if not ok:
             raise NotImplementedError(f"repro.engine: {cfg.name}: {why}")
+        if not plan.decode_batch or not plan.page_size:
+            raise ValueError(
+                "engine plans need the serving face (decode_batch/page_size "
+                "> 0) — build them with plan.make_serve_plan or --plan a "
+                "persisted serve plan")
+        # the plan is authoritative for the serving shape; EngineConfig
+        # keeps only the pool-capacity and sampling/driver knobs
+        eng = dc.replace(eng, max_slots=plan.decode_batch,
+                         page_size=plan.page_size, max_len=plan.seq_len)
+        run_cfg = plan.run_config()
+        mesh = mesh if mesh is not None else plan.build_mesh()
         self.model, self.mesh, self.run_cfg, self.eng = model, mesh, run_cfg, eng
+        self.plan = plan
         self.cfg = cfg
         self.sp = 1
         for a in SP_AXES:
             self.sp *= mesh.shape[a]
-        shape = ShapeConfig("engine", seq_len=eng.max_len,
-                            global_batch=eng.max_slots, kind="decode")
+        if self.sp != plan.sp_size:
+            raise ValueError(f"mesh SP degree {self.sp} != plan "
+                             f"sp_size {plan.sp_size}")
+        shape = plan.shape_config()
         rt = train_step.make_runtime(model, run_cfg, shape, mode="spmd")
         rt = dc.replace(rt, batch_axes=(),
                         st_cfg=dc.replace(rt.st_cfg, seq_scheme="contiguous"))
         self.rt = rt
+        self.kernel_impl = plan.kernel_impl
         self.params = model.init(jax.random.PRNGKey(0)) if params is None \
             else params
         self._param_specs = model.partition(run_cfg.sharding_rules)
@@ -365,26 +387,31 @@ class Engine:
         return self.collect()
 
 
-def build_engine(arch: str, *, smoke: bool = True, c: int = 1, data: int = 1,
-                 eng: EngineConfig = EngineConfig(), params=None,
-                 init_seed: int = 0) -> Engine:
-    """Convenience constructor over the local forced-host-device mesh.
+def build_engine(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
+                 data: int = 1, eng: EngineConfig = EngineConfig(),
+                 params=None, init_seed: int = 0,
+                 kernel: Optional[str] = None, plan=None) -> Engine:
+    """Convenience constructor: resolve a serve plan, build the engine.
 
-    Uses every available device: r = n_devices // (data * c^2), the same
-    refinement rule as the train/serve launchers.
+    With ``plan=None`` a ``kind='decode'`` ExecutionPlan is made from the
+    knobs over every available device (``make_serve_plan`` — same
+    refinement rule as the train launcher; pass ``c=None`` to let the cost
+    model pick the factorisation). ``kernel`` selects the paged-decode
+    kernel (None = backend default: pallas on TPU, ref on CPU).
     """
     import jax
 
     from repro.configs import registry
-    from repro.dist import meshes
     from repro.models.factory import build_model
+    from repro.plan import make_serve_plan
 
     cfg = registry.get_smoke(arch) if smoke else registry.get(arch)
     model = build_model(cfg)
-    run_cfg = RunConfig(c=c, seq_scheme="contiguous")
-    n = len(jax.devices())
-    r = n // (data * c * c)
-    mesh = meshes.local_mesh_for_tests(c=c, r=r, data=data)
+    if plan is None:
+        plan = make_serve_plan(
+            cfg, arch=arch, n_devices=len(jax.devices()), data=data, c=c,
+            decode_batch=eng.max_slots, page_size=eng.page_size,
+            max_len=eng.max_len, mesh_kind="local", kernel_impl=kernel)
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
-    return Engine(model, mesh, run_cfg, eng, params)
+    return Engine(model, plan, eng, params)

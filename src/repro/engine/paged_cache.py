@@ -113,18 +113,19 @@ def init_pools(cfg: ModelConfig, mesh, pages_global: int, page_size: int):
 # device-side read/write (call inside shard_map; pools are local slices)
 # ---------------------------------------------------------------------------
 
-def write_and_read(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
-                   paged: PagedTables, cache_len, active):
-    """Append one token per slot, then materialise this shard's key view.
+def write_token(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
+                paged: PagedTables, cache_len, active):
+    """Append one token per slot into its owning shard's page.
 
     cache: {'k','v'} local pool slices (pages_loc, page_size, Hkv, hd).
     k_new/v_new: (B, 1, Hkv, hd) — post-RoPE K and V of the new token.
     cache_len: (B,) int32 — the new token's global position.
     active: (B,) bool or None — inactive slots write nothing.
 
-    Returns (k_r, v_r, new_cache, pos_k, valid) with k_r/v_r of shape
-    (B, W*page_size, Hkv, hd) and pos_k (B, W*page_size) already masked to
-    ``cache_len + 1`` on invalid slots.
+    Returns (new_cache, tbl) where tbl (B, W) is this shard's slice of the
+    page table — the operand both decode-kernel paths consume (the Pallas
+    paged kernel indexes the pool with it directly; the ref path gathers a
+    dense view via ``kernels.dispatch.paged_decode(..., impl='ref')``).
     """
     pool_k, pool_v = cache["k"], cache["v"]
     pages_loc, ps = pool_k.shape[0], paged.page_size
@@ -134,7 +135,6 @@ def write_and_read(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
                                        keepdims=False)        # (B, W)
     B, W = tbl.shape
 
-    # -- write the new token into its owning shard's page ----------------
     g = cache_len // ps                                       # global block
     j = g // sp                                               # local block
     page = jnp.take_along_axis(tbl, jnp.clip(j, 0, W - 1)[:, None],
@@ -148,20 +148,7 @@ def write_and_read(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
         k_new[:, 0].astype(pool_k.dtype), mode="drop")
     pool_v = pool_v.at[page, off].set(
         v_new[:, 0].astype(pool_v.dtype), mode="drop")
-
-    # -- gather this shard's pages of every slot -------------------------
-    safe = jnp.clip(tbl, 0, pages_loc - 1)
-    k_r = pool_k[safe]                                        # (B,W,ps,H,hd)
-    v_r = pool_v[safe]
-    k_r = k_r.reshape(B, W * ps, *pool_k.shape[2:])
-    v_r = v_r.reshape(B, W * ps, *pool_v.shape[2:])
-    pos = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * ps)[:, None] \
-        + jnp.arange(ps, dtype=jnp.int32)[None]
-    pos = pos.reshape(W * ps)                                 # (S,)
-    valid = jnp.repeat(tbl >= 0, ps, axis=1)                  # (B, S)
-    valid &= pos[None] <= cache_len[:, None]
-    pos_k = jnp.where(valid, pos[None], (cache_len + 1)[:, None])
-    return k_r, v_r, {"k": pool_k, "v": pool_v}, pos_k, valid
+    return {"k": pool_k, "v": pool_v}, tbl
 
 
 def insert_prompt(rt: Runtime, pools_sub: Dict[str, jax.Array],

@@ -1,3 +1,13 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Attention kernels: jnp oracle + Pallas TPU implementations behind one
+dispatch layer.
+
+  dispatch.py        — THE public surface: block_fwd/block_bwd (ring step),
+                       prefill, decode, paged_decode; impl='ref'|'pallas'
+                       resolved per backend. Everything outside kernels/
+                       calls attention through this module.
+  ref.py             — pure-jnp semantic ground truth (oracle for tests)
+  flash_attention.py — Pallas flash fwd/bwd block kernels (training)
+  paged_decode.py    — Pallas paged-decode kernel (serving; page-table
+                       indexed K/V tiles, no dense gather)
+  ops.py             — jit'd wrappers + custom-VJP around the Pallas pair
+"""

@@ -1,0 +1,165 @@
+"""The single attention-kernel dispatch layer.
+
+Every attention call site in ``core/``, ``serve/``, ``engine/`` and
+``models/`` goes through this module (grep-enforced by
+``tests/test_kernels.py::test_no_direct_kernel_imports``) instead of
+importing ``kernels.ref`` / ``kernels.ops`` / ``kernels.flash_attention``
+directly. One ``impl`` knob — ``'ref'`` (pure jnp, XLA-fused; CPU default)
+or ``'pallas'`` (TPU kernels, interpret-mode on CPU) — selects the backend
+for all four entry points:
+
+    block_fwd / block_bwd  — one (Q block x K/V block) pair of the ring
+                             step (online-softmax partials + flash backward)
+    prefill                — full masked attention of batched positions
+                             (o only; the serve/encdec dense call sites)
+    decode                 — per-shard partial (o, lse) of M=1 queries vs a
+                             dense cache slice
+    paged_decode           — per-shard partial (o, lse) straight off a
+                             page-table-indexed pool (no dense gather);
+                             'pallas' runs kernels/paged_decode.py, 'ref'
+                             gathers the pages and reuses the jnp oracle
+
+``resolve_impl(None)`` picks the backend default: ``'pallas'`` when
+``jax.default_backend()`` is TPU, ``'ref'`` otherwise — the rule
+``plan.make_plan`` applies to unset ``block_impl`` / ``kernel_impl`` knobs.
+
+The Pallas block kernels take shared ``(S,)`` position vectors; call sites
+with *batched* ``(B, S)`` positions (per-sequence cache lengths) fall back
+to the reference implementation, which masks per row. The paged-decode
+kernel is the batched-positions fast path.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+IMPLS = ("ref", "pallas")
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """'ref' | 'pallas', with None/'auto' resolved from the backend."""
+    if impl in (None, "", "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl not in IMPLS:
+        raise ValueError(f"attention impl must be one of {IMPLS} (or None "
+                         f"for the backend default), got {impl!r}")
+    return impl
+
+
+def _batched_positions(*pos) -> bool:
+    return any(jnp.ndim(p) > 1 for p in pos)
+
+
+# ---------------------------------------------------------------------------
+# ring-step block compute (training hot spot)
+# ---------------------------------------------------------------------------
+
+def block_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
+              prefix_len=None, impl="ref") -> Tuple[jax.Array, jax.Array]:
+    """Masked (Q block x K/V block) attention -> (o, lse) partials."""
+    if impl == "pallas" and not _batched_positions(pos_q, pos_k):
+        from repro.kernels import ops as _ops
+
+        return _ops.flash_attention_fwd(
+            q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
+            prefix_len=prefix_len)
+    return _ref.block_attention(
+        q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
+        prefix_len=prefix_len)
+
+
+def block_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,
+              window=None, scale=None, prefix_len=None, impl="ref"):
+    """Flash backward for one block pair -> (dq, dk, dv) in float32."""
+    if impl == "pallas" and not _batched_positions(pos_q, pos_k):
+        from repro.kernels import ops as _ops
+
+        return _ops.flash_attention_bwd(
+            q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
+            window=window, scale=scale, prefix_len=prefix_len)
+    return _ref.block_attention_bwd(
+        q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
+        scale=scale, prefix_len=prefix_len)
+
+
+# ---------------------------------------------------------------------------
+# prefill (dense full attention; o only, in q's dtype)
+# ---------------------------------------------------------------------------
+
+def prefill(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
+            prefix_len=None, impl="ref") -> jax.Array:
+    """Full masked attention over a dense K/V set (batched positions ok)."""
+    o, _ = block_fwd(q, k, v, pos_q, pos_k, causal=causal, window=window,
+                     scale=scale, prefix_len=prefix_len, impl=impl)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode (per-shard partials; the caller lse-combines across SP shards)
+# ---------------------------------------------------------------------------
+
+def decode(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
+           impl="ref") -> Tuple[jax.Array, jax.Array]:
+    """M-query attention vs a dense cache slice -> partial (o, lse).
+
+    Validity is position-encoded (the repo-wide contract): callers push the
+    positions of unfilled cache slots past the query position so the causal
+    mask removes them — no separate validity mask enters the kernels.
+    """
+    return block_fwd(q, k, v, pos_q, pos_k, causal=causal, window=window,
+                     scale=scale, impl=impl)
+
+
+def paged_decode(q, pool_k, pool_v, table, cache_len, rank, *, sp: int,
+                 page_size: int, window=None, scale=None,
+                 impl="ref") -> Tuple[jax.Array, jax.Array]:
+    """One query per row vs this shard's pages -> partial (o, lse).
+
+    q: (B, 1, Hq, D); pool_k/pool_v: (pages_loc, page_size, Hkv, D);
+    table: (B, W) local page ids (-1 = unallocated); cache_len: (B,) the
+    new token's position; rank: traced scalar SP rank. Page ``w`` covers
+    positions ``[(w*sp + rank)*page_size, ...)`` (round-robin layout).
+
+    'pallas' streams page-table-indexed tiles through
+    ``kernels/paged_decode.py``; 'ref' gathers the pages into a dense
+    (B, W*page_size) view and reuses the jnp oracle — bit-for-bit the
+    engine's pre-dispatch behaviour.
+    """
+    if impl == "pallas":
+        from repro.kernels import paged_decode as _paged
+
+        return _paged.paged_decode_attention(
+            q, pool_k, pool_v, table, cache_len, rank, sp=sp,
+            page_size=page_size, window=window, scale=scale)
+
+    pages_loc = pool_k.shape[0]
+    B, W = table.shape
+    safe = jnp.clip(table, 0, pages_loc - 1)
+    k_r = pool_k[safe].reshape(B, W * page_size, *pool_k.shape[2:])
+    v_r = pool_v[safe].reshape(B, W * page_size, *pool_v.shape[2:])
+    pos = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * page_size)[:, None] \
+        + jnp.arange(page_size, dtype=jnp.int32)[None]
+    pos = pos.reshape(W * page_size)
+    valid = jnp.repeat(table >= 0, page_size, axis=1)
+    valid &= pos[None] <= cache_len[:, None]
+    pos_k = jnp.where(valid, pos[None], (cache_len + 1)[:, None])
+    pos_q = cache_len[:, None]
+    return decode(q, k_r, v_r, pos_q, pos_k, causal=True, window=window,
+                  scale=scale, impl="ref")
+
+
+# ---------------------------------------------------------------------------
+# single-device oracle (examples / tests convenience)
+# ---------------------------------------------------------------------------
+
+def mha(q, k, v, *, positions=None, causal=True, window=None, scale=None,
+        prefix_len=None) -> jax.Array:
+    """Plain full attention — re-exported end-to-end oracle (always ref)."""
+    return _ref.mha_reference(q, k, v, positions=positions, causal=causal,
+                              window=window, scale=scale,
+                              prefix_len=prefix_len)

@@ -1,0 +1,181 @@
+"""Pallas TPU paged-decode flash kernel: one query token per sequence
+against this shard's page-table-indexed slice of a paged KV pool.
+
+This is the serving-side analogue of ``flash_attention.py``: instead of
+gathering a sequence's pages into a dense per-shard cache (the pure-jnp
+reference path — one full copy of the cache through HBM per decode step),
+the page table is handed to the kernel as a *scalar-prefetch* operand and
+the ``BlockSpec`` index map DMAs each K/V page straight from the pool:
+
+    pool_k, pool_v : (pages_loc, page_size, Hkv, D)   this shard's pool slice
+    table          : (B, W) int32                     local page ids, -1 = unallocated
+    cache_len      : (B,) int32                       the new token's position
+    rank           : (1,) int32                       this shard's SP rank (traced)
+
+Grid ``(B, Hq, W)`` with the page dimension innermost; the online-softmax
+statistics (m, l, acc) live in VMEM scratch across the W steps, exactly as
+in the training kernel. GQA is native (the K/V index map divides the query
+head by G = Hq // Hkv). Pages that are unallocated (``table < 0``), fully
+in the causal future, or fully outside the sliding window are skipped with
+``pl.when`` — the skip test only reads prefetched scalars, so a skipped
+page costs no FLOPs.
+
+Validity is *position-encoded*, matching the repo-wide contract: a key at
+position p is visible iff ``p <= cache_len`` (causal; the query sits at
+``cache_len``) and, with a window, ``cache_len - p < window``. Rows with no
+visible key anywhere (inactive engine slots) finalise to ``(o=0,
+lse=-inf)`` so the cross-shard lse-combine drops them exactly.
+
+Returns *partial* ``(o, lse)`` in float32 — block-attention semantics, to
+be merged across SP shards by ``core.startrail.combine_decode_partials``.
+Validated in ``interpret=True`` mode against ``ref.block_attention`` over
+the dense gather of the same pages (tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.combine import NEG_INF
+
+
+def _kernel(tbl_ref, cl_ref, rank_ref,                  # scalar prefetch
+            q_ref, k_ref, v_ref,                        # inputs
+            o_ref, lse_ref,                             # outputs
+            acc_ref, m_ref, l_ref,                      # scratch
+            *, sp, page_size, window, scale, n_w):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cl = cl_ref[b]
+    page = tbl_ref[b, w]
+    base = (w * sp + rank_ref[0]) * page_size
+    live = (page >= 0) & (base <= cl)
+    if window is not None:
+        # newest visible position is cl; oldest is cl - window + 1
+        live &= (cl - (base + page_size - 1)) < window
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)       # (1, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (ps, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)       # (ps, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (1, ps)
+        pos = base + jax.lax.broadcasted_iota(jnp.int32, (1, page_size), 1)
+        valid = pos <= cl
+        if window is not None:
+            valid &= (cl - pos) < window
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]                              # (1,)
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_cur <= NEG_INF / 2, 0.0, m_cur)
+        p = jnp.exp(s - m_safe[:, None]) * valid
+        alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(w == n_w - 1)
+    def _finalize():
+        m = m_ref[...]
+        l = l_ref[...]
+        dead = m <= NEG_INF / 2
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(
+            dead, NEG_INF, jnp.where(dead, 0.0, m) + jnp.log(l_safe)
+        ).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sp", "page_size", "window", "scale", "interpret"),
+)
+def paged_decode_attention(
+    q, pool_k, pool_v, table, cache_len, rank, *, sp, page_size,
+    window=None, scale=None, interpret=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-shard paged decode attention -> partial (o, lse).
+
+    q: (B, 1, Hq, D); pool_k/pool_v: (pages_loc, page_size, Hkv, D);
+    table: (B, W) int32; cache_len: (B,) int32; rank: (1,) int32 (traced —
+    ``jax.lax.axis_index`` products are fine). Page ``w`` of row ``b``
+    covers global positions ``[(w*sp + rank)*page_size, ... + page_size)``
+    — the round-robin layout of ``engine.paged_cache``.
+    """
+    B, M, Hq, D = q.shape
+    if M != 1:
+        raise ValueError(f"paged decode takes one query per row, got M={M}")
+    pages_loc, ps, Hkv, _ = pool_k.shape
+    if ps != page_size:
+        raise ValueError(f"pool page size {ps} != page_size {page_size}")
+    G = Hq // Hkv
+    W = table.shape[1]
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kernel = functools.partial(
+        _kernel, sp=sp, page_size=page_size, window=window, scale=scale,
+        n_w=W)
+
+    def page_idx(b, h, w, tbl, cl, rk):
+        # -1 (unallocated) clips to page 0; the kernel masks it via pl.when
+        del cl, rk
+        return (jnp.maximum(tbl[b, w], 0), 0, h // G, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hq, W),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, w, tbl, cl, rk: (b, 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, D), page_idx),
+            pl.BlockSpec((1, page_size, 1, D), page_idx),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, D),
+                         lambda b, h, w, tbl, cl, rk: (b, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1),
+                         lambda b, h, w, tbl, cl, rk: (b, h, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, D), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(table.astype(jnp.int32), cache_len.astype(jnp.int32),
+      jnp.asarray(rank, jnp.int32).reshape(1), q, pool_k, pool_v)
+    return o, lse

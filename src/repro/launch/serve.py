@@ -1,6 +1,14 @@
 """Serving driver on top of ``repro.engine``: continuous batching with a
 paged, SP-sharded KV cache, compiled once per length bucket.
 
+Every serve run — engine and ``--legacy`` alike — is described by a
+``kind='decode'`` ``ExecutionPlan`` (the serving face: decode slots, page
+size, paged-decode ``kernel_impl``), exactly like ``launch.train``: load a
+persisted one with ``--plan``, or let ``make_serve_plan`` resolve the CLI
+knobs (leave ``--c`` unset for the cost-model pick; ``--kernel`` defaults
+to the backend: Pallas on TPU, the jnp reference on CPU). ``--save-plan``
+persists the resolved plan for replay / CI artifacts.
+
 CPU-runnable reduced mode (the default serves a mixed workload of
 ``--requests`` requests with staggered prompt lengths / budgets through the
 engine and prints per-request generations + engine metrics):
@@ -17,24 +25,20 @@ import argparse
 import os
 
 
-def _legacy_main(args):
+def _legacy_main(args, plan, cfg):
     """Static-batch greedy decode (pre-engine path, compile hoisted)."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.configs import registry
-    from repro.configs.base import RunConfig, ShapeConfig
-    from repro.dist import meshes
+    from repro.configs.base import ShapeConfig
     from repro.models.factory import build_model
     from repro.serve import kv_cache, step as serve_step
 
-    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
     model = build_model(cfg)
-    run_cfg = RunConfig(c=args.c, seq_scheme="contiguous")
-    r = args.devices // (args.data * args.c * args.c)
-    mesh = meshes.local_mesh_for_tests(c=args.c, r=r, data=args.data)
-    sp = args.c * args.c * r
+    run_cfg = plan.run_config()
+    mesh = plan.build_mesh()
+    sp = plan.sp_size
 
     capacity = args.prompt_len + args.gen
     capacity = ((capacity + sp - 1) // sp) * sp  # pad to SP multiple
@@ -88,16 +92,15 @@ def _legacy_main(args):
     return out
 
 
-def _engine_main(args):
+def _engine_main(args, plan, cfg):
     import numpy as np
 
-    from repro.engine import EngineConfig, Request, build_engine
+    from repro.engine import Engine, EngineConfig, Request
+    from repro.models.factory import build_model
 
-    engine = build_engine(
-        args.arch, smoke=args.smoke, c=args.c, data=args.data,
-        eng=EngineConfig(max_slots=args.max_slots, page_size=args.page_size,
-                         pages_per_shard=args.pages_per_shard,
-                         max_len=args.max_len))
+    model = build_model(cfg)
+    engine = Engine(model, plan,
+                    EngineConfig(pages_per_shard=args.pages_per_shard))
     rng = np.random.default_rng(args.seed)
     vocab = engine.cfg.vocab_size
     reqs = []
@@ -122,13 +125,54 @@ def _engine_main(args):
     return out
 
 
+def _resolve_plan(args):
+    from repro.configs import registry
+    from repro.plan import ExecutionPlan, make_serve_plan
+
+    if args.plan:
+        plan = ExecutionPlan.load(args.plan)
+        print(f"[serve] loaded plan {args.plan}: scheme={plan.scheme} "
+              f"C={plan.c} R={plan.r} kernel={plan.kernel_impl} "
+              f"slots={plan.decode_batch} page={plan.page_size}")
+        if not plan.arch or plan.arch not in registry.ASSIGNED_ARCHS:
+            raise SystemExit(
+                f"[serve] plan {args.plan} names unknown arch "
+                f"{plan.arch!r}; known: {sorted(registry.ASSIGNED_ARCHS)}")
+        # mesh_kind='local' plans are smoke runs (same convention as
+        # launch.train); production plans carry the full config
+        cfg = (registry.get_smoke(plan.arch) if plan.mesh_kind == "local"
+               else registry.get(plan.arch))
+        return plan, cfg
+    import jax
+
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
+    # --smoke = forced-host/local mesh; otherwise the production mesh
+    # (mesh_kind also encodes smoke-ness for --plan replay, as in
+    # launch.train)
+    plan = make_serve_plan(
+        cfg, arch=args.arch, n_devices=len(jax.devices()), data=args.data,
+        c=args.c, decode_batch=args.max_slots, page_size=args.page_size,
+        max_len=args.max_len, mesh_kind="local" if args.smoke
+        else "production", kernel_impl=args.kernel)
+    return plan, cfg
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (optional with --plan)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--data", type=int, default=1)
-    ap.add_argument("--c", type=int, default=1)
+    ap.add_argument("--c", type=int, default=None,
+                    help="StarTrail C (default: cost-model pick)")
+    ap.add_argument("--plan", default=None,
+                    help="load a persisted serve ExecutionPlan json")
+    ap.add_argument("--save-plan", default=None,
+                    help="persist the resolved serve plan to this path")
+    ap.add_argument("--kernel", default=None, choices=["ref", "pallas"],
+                    help="paged-decode kernel (default: backend pick — "
+                         "pallas on TPU, ref on CPU)")
     ap.add_argument("--legacy", action="store_true",
                     help="pre-engine static-batch greedy path")
     ap.add_argument("--batch", type=int, default=2, help="legacy batch size")
@@ -145,14 +189,34 @@ def main(argv=None):
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if not args.plan and not args.arch:
+        ap.error("--arch is required (unless --plan carries it)")
 
+    if args.plan and not args.devices:
+        # a local-mesh plan records its forced-host device count; read it
+        # from the raw json (before anything can initialise the backend)
+        import json
+
+        rec = json.loads(open(args.plan).read())
+        rec = rec.get("plan", rec)
+        if rec.get("mesh_kind") == "local":
+            args.devices = int(rec["n_devices"])
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
+    plan, cfg = _resolve_plan(args)
+    print(f"[serve] plan: P_sp={plan.sp_size} scheme={plan.scheme} "
+          f"C={plan.c} R={plan.r} data={plan.data} "
+          f"kernel={plan.kernel_impl} slots={plan.decode_batch} "
+          f"page={plan.page_size} capacity={plan.seq_len}")
+    if args.save_plan:
+        path = plan.save(args.save_plan)
+        print(f"[serve] plan saved -> {path}")
+
     if args.legacy:
-        return _legacy_main(args)
-    return _engine_main(args)
+        return _legacy_main(args, plan, cfg)
+    return _engine_main(args, plan, cfg)
 
 
 if __name__ == "__main__":

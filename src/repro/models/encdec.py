@@ -21,7 +21,7 @@ from jax.ad_checkpoint import checkpoint_name
 from repro.configs.base import ModelConfig
 from repro.models import blocks, spec
 from repro.models.runtime import Runtime
-from repro.kernels import ref as ref_kernels
+from repro.kernels import dispatch as kernels
 
 
 def cross_attention_specs(cfg: ModelConfig):
@@ -45,8 +45,8 @@ def cross_attention_block(rt: Runtime, params, x, enc_kv, cfg: ModelConfig):
     s_q = q.shape[1]
     pos_q = rt.positions(s_q)
     pos_k = jnp.arange(k.shape[1], dtype=jnp.int32)  # order-free (full mask)
-    o, _ = ref_kernels.block_attention(q, k, v, pos_q, pos_k, causal=False)
-    o = o.astype(x.dtype)
+    o = kernels.prefill(q, k, v, pos_q, pos_k, causal=False,
+                        impl=rt.st_cfg.block_impl)
     return x + jnp.einsum("bshk,hkd->bsd", o, wo)
 
 

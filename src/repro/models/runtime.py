@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from repro.core import startrail as st
 from repro.core import ulysses as ulysses_lib
 from repro.dist import sharding as shard_rules
-from repro.kernels import ref as ref_kernels
+from repro.kernels import dispatch as kernels
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,6 +32,7 @@ class Runtime:
     batch_axes: Tuple[str, ...] = ("data",)    # ('pod','data') multi-pod
     rules: str = "default"
     attention_impl: str = "startrail"          # 'startrail' | 'ulysses' | 'local'
+    kernel_impl: str = "ref"                   # decode kernel: 'ref' | 'pallas'
     unroll_scans: bool = False                 # dry-run cost accounting
 
     # ---- axis info -----------------------------------------------------
@@ -159,10 +160,9 @@ class Runtime:
         if self.mode == "local" or self.attention_impl == "local":
             s = q.shape[1]
             pos = self.positions(s)
-            o, _ = ref_kernels.block_attention(
+            return kernels.prefill(
                 q, k, v, pos, pos, causal=cfg.causal, window=cfg.window,
-                prefix_len=cfg.prefix_len)
-            return o.astype(q.dtype)
+                prefix_len=cfg.prefix_len, impl=cfg.block_impl)
         if self.attention_impl == "ulysses":
             # per-layer dispatch: Ulysses only where this layer's head
             # counts divide the SP degree (the plan layer rejects configs

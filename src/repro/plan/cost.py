@@ -192,6 +192,78 @@ def rank_arrangements(cfg: ModelConfig, shape: ShapeConfig, sp: int, *,
 
 
 # ---------------------------------------------------------------------------
+# Serving decode-step cost (paged-kernel vs page-gather bytes)
+# ---------------------------------------------------------------------------
+
+DECODE_KERNELS = ("ref", "pallas")
+
+
+def decode_step_cost(cfg: ModelConfig, *, batch: int, cache_len: int,
+                     sp: int, page_size: int, kernel: str = "ref",
+                     dtype_bytes: int = 2,
+                     cluster: Optional[sch.ClusterModel] = None
+                     ) -> Dict[str, float]:
+    """Per-device cost of one decode step's attention, all layers.
+
+    Decode is bandwidth-bound: the FLOPs (one M=1 query against the cache)
+    are identical for both kernels, but the **bytes through HBM** differ.
+    Both paths walk the *bucketed* per-shard table width (the engine
+    buckets ``W`` to powers of two, so reserved-but-unfilled entries are
+    touched too — `pl.when` skips their FLOPs, not their DMA):
+
+      * ``kernel='pallas'`` (paged kernel) streams each table-indexed K/V
+        page exactly once, DMA'd straight from the pool — one pass over
+        ``2 * Hkv * dh * W_bucket * page_size`` bytes per sequence per
+        layer.
+      * ``kernel='ref'`` (page gather) makes three passes over the same
+        width: read the pool pages, write the dense per-shard cache copy,
+        then stream the dense copy into the attention.
+
+    Returns {'flops', 'bytes', 'flops_s', 'bytes_s', 'total_s'} summed over
+    the attention layers. This is the model behind defaulting
+    ``kernel_impl='pallas'`` on TPU; `benchmarks/serving_load.py` reports
+    the measured per-kernel tokens/s next to it.
+    """
+    if kernel not in DECODE_KERNELS:
+        raise ValueError(f"kernel must be one of {DECODE_KERNELS}, "
+                         f"got {kernel!r}")
+    cl = cluster or sch.ClusterModel(sp_size=sp)
+    n_attn = max(num_attention_layers(cfg), 1)
+    dh = cfg.head_dim_
+    keys_local = -(-cache_len // sp)                 # ceil: per-shard keys
+    pages_local = -(-keys_local // page_size)
+    w_bucket = 1
+    while w_bucket < pages_local:                    # engine pow2 bucketing
+        w_bucket *= 2
+    bucket_bytes = batch * w_bucket * page_size * 2 * cfg.num_kv_heads \
+        * dh * dtype_bytes
+    flops = 4.0 * batch * keys_local * cfg.num_heads * dh
+    if kernel == "pallas":
+        bytes_moved = bucket_bytes
+    else:
+        bytes_moved = 3.0 * bucket_bytes             # gather out + in, + read
+    flops_s = n_attn * flops / cl.peak_flops
+    bytes_s = n_attn * bytes_moved / hw.HBM_BW
+    return {"flops": n_attn * flops, "bytes": n_attn * bytes_moved,
+            "flops_s": flops_s, "bytes_s": bytes_s,
+            "total_s": max(flops_s, bytes_s)}
+
+
+def rank_decode_kernels(cfg: ModelConfig, *, batch: int, cache_len: int,
+                        sp: int, page_size: int,
+                        cluster: Optional[sch.ClusterModel] = None
+                        ) -> List[Dict[str, object]]:
+    """Both decode kernels priced and sorted fastest-first."""
+    out = [{"kernel": k,
+            **decode_step_cost(cfg, batch=batch, cache_len=cache_len,
+                               sp=sp, page_size=page_size, kernel=k,
+                               cluster=cluster)}
+           for k in DECODE_KERNELS]
+    out.sort(key=lambda e: e["total_s"])
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Microbatch selection (gradient accumulation)
 # ---------------------------------------------------------------------------
 

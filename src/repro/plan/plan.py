@@ -46,7 +46,7 @@ class ExecutionPlan:
     c: int = 1
     placement: str = "team_inner"
     seq_scheme: str = "zigzag"
-    block_impl: str = "ref"
+    block_impl: str = "ref"        # ring-step block kernel ('ref' | 'pallas')
     block_skip: bool = False
     remat: str = "attn_out"
     microbatches: int = 1
@@ -54,6 +54,10 @@ class ExecutionPlan:
     grad_compression: str = "none"
     mesh_kind: str = "local"       # 'local' (forced-host) | 'production'
     unroll_scans: bool = False
+    # ---- serving face (kind='decode' plans consumed by repro.engine) -----
+    decode_batch: int = 0          # engine decode slots (0 = not a serve plan)
+    page_size: int = 0             # KV page tokens (0 = not a serve plan)
+    kernel_impl: str = "ref"       # paged-decode kernel ('ref' | 'pallas')
 
     # ---- derived sizes ---------------------------------------------------
     @property
@@ -98,6 +102,19 @@ class ExecutionPlan:
                 f"seq_len={self.seq_len}, P={sp}")
         if self.microbatches < 1:
             raise ValueError("microbatches must be >= 1")
+        from repro.kernels.dispatch import IMPLS
+
+        for knob, val in (("block_impl", self.block_impl),
+                          ("kernel_impl", self.kernel_impl)):
+            if val not in IMPLS:
+                raise ValueError(f"{knob} must be one of {IMPLS}, "
+                                 f"got {val!r}")
+        if self.decode_batch < 0 or self.page_size < 0:
+            raise ValueError("decode_batch/page_size must be >= 0")
+        if self.page_size and self.seq_len % self.page_size:
+            raise ValueError(
+                f"seq_len={self.seq_len} not divisible by "
+                f"page_size={self.page_size}")
         if self.kind == "train":
             if self.global_batch % self.dp_size != 0:
                 raise ValueError(
@@ -117,6 +134,7 @@ class ExecutionPlan:
     def run_config(self) -> RunConfig:
         return RunConfig(
             c=self.c, seq_scheme=self.seq_scheme, block_impl=self.block_impl,
+            kernel_impl=self.kernel_impl,
             block_skip=self.block_skip, multi_pod=self.pod > 1,
             remat=self.remat, grad_compression=self.grad_compression,
             sharding_rules=self.sharding_rules, unroll_scans=self.unroll_scans,
@@ -177,7 +195,8 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
               scheme: Optional[str] = None, c: Optional[int] = None,
               placement: Optional[str] = None,
               microbatches: Optional[int] = None,
-              mesh_kind: str = "local", block_impl: str = "ref",
+              mesh_kind: str = "local", block_impl: Optional[str] = None,
+              kernel_impl: Optional[str] = None,
               remat: str = "attn_out", sharding_rules: str = "default",
               grad_compression: str = "none", unroll_scans: bool = False,
               cluster=None) -> ExecutionPlan:
@@ -186,8 +205,14 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
     Knobs left as None are chosen by the analytical cost model
     (`cost.rank_arrangements`); explicitly-passed knobs are validated and
     illegal combinations raise (e.g. `scheme='ulysses'` when P > Hkv raises
-    exactly as `core/ulysses.py` would at trace time).
+    exactly as `core/ulysses.py` would at trace time). Unset
+    `block_impl`/`kernel_impl` resolve per backend: the Pallas kernels on
+    TPU, the jnp reference on CPU (`kernels.dispatch.resolve_impl`).
     """
+    from repro.kernels.dispatch import resolve_impl
+
+    block_impl = resolve_impl(block_impl)
+    kernel_impl = resolve_impl(kernel_impl)
     dp = pod * data
     if n_devices % dp != 0:
         raise ValueError(f"n_devices={n_devices} not divisible by "
@@ -238,7 +263,53 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
         c=picked.c,
         placement=picked.placement if picked.c > 1 else "team_inner",
         seq_scheme=seq_scheme, block_impl=block_impl,
+        kernel_impl=kernel_impl,
         block_skip=cfg.window is not None and seq_scheme == "contiguous",
         remat=remat, microbatches=microbatches,
         sharding_rules=sharding_rules, grad_compression=grad_compression,
         mesh_kind=mesh_kind, unroll_scans=unroll_scans)
+
+
+def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
+                    n_devices: int, data: int = 1,
+                    scheme: Optional[str] = None, c: Optional[int] = None,
+                    placement: Optional[str] = None,
+                    decode_batch: int = 4, page_size: int = 8,
+                    max_len: int = 512, mesh_kind: str = "local",
+                    kernel_impl: Optional[str] = None,
+                    block_impl: Optional[str] = None,
+                    sharding_rules: str = "default",
+                    cluster=None) -> ExecutionPlan:
+    """Resolve one *serving* run (the engine's mesh + kernels) into a plan.
+
+    ``kind='decode'``: ``seq_len`` is the engine capacity (``max_len``
+    rounded up so both the SP degree and the page size divide it),
+    ``global_batch``/``decode_batch`` the decode slot count, and
+    ``kernel_impl`` the paged-decode kernel — backend-resolved when unset,
+    like ``block_impl``. The arrangement (scheme, C, placement) comes from
+    the same analytical ranking as training plans; for M=1 decode the ring
+    degenerates to the lse-combine reduction, so the mesh factorisation
+    mainly decides the *placement* of the cache shards.
+    """
+    import math
+
+    dp = data
+    if n_devices % dp != 0:
+        raise ValueError(f"n_devices={n_devices} not divisible by "
+                         f"data={dp}")
+    sp = n_devices // dp
+    if page_size < 1:
+        raise ValueError("page_size must be >= 1")
+    if decode_batch < 1:
+        raise ValueError("decode_batch must be >= 1")
+    quantum = math.lcm(sp, page_size)
+    seq_len = ((max_len + quantum - 1) // quantum) * quantum
+    shape = ShapeConfig("serve", seq_len=seq_len, global_batch=decode_batch,
+                        kind="decode")
+    base = make_plan(cfg, shape, arch=arch, n_devices=n_devices, data=data,
+                     scheme=scheme, c=c, placement=placement,
+                     mesh_kind=mesh_kind, block_impl=block_impl,
+                     kernel_impl=kernel_impl, sharding_rules=sharding_rules,
+                     cluster=cluster)
+    return dataclasses.replace(base, decode_batch=decode_batch,
+                               page_size=page_size)

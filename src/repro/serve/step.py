@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import MambaConfig, ModelConfig, RunConfig, ShapeConfig
 from repro.core import startrail as st
 from repro.dist import sharding as shard_rules
+from repro.kernels import dispatch as kernels
 from repro.models import blocks, moe as moe_lib, ssm, transformer
 from repro.models.factory import Model
 from repro.models.runtime import Runtime
@@ -67,10 +68,23 @@ def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len,
     v_new = jnp.einsum("bsd,dhk->bshk", h, wv)
 
     if paged is not None:
+        # paged pool: write the token, then hand the page table straight to
+        # the dispatch layer — the Pallas kernel indexes the pool tiles via
+        # the table (no dense gather); the ref impl gathers and reuses the
+        # jnp oracle. Partial (o, lse) merge across shards exactly as the
+        # contiguous path does.
         from repro.engine import paged_cache as paged_lib
 
-        k_cache, v_cache, new_cache, pos_k, valid = paged_lib.write_and_read(
+        new_cache, tbl = paged_lib.write_token(
             rt, cache, k_new, v_new, paged, cl, active)
+        o_p, lse_p = kernels.paged_decode(
+            q, new_cache["k"], new_cache["v"], tbl, cl, rt.sp_rank(),
+            sp=rt.sp_size(), page_size=paged.page_size, window=cfg.window,
+            impl=rt.kernel_impl)
+        o = st.combine_decode_partials(
+            o_p, lse_p, rt.sp_axes).astype(x.dtype)
+        out = jnp.einsum("bshk,hkd->bsd", o, wo)
+        return x + out, new_cache
     else:
         s_loc = cache["k"].shape[1]
         pos_k = rt.positions_contig(s_loc)
@@ -90,15 +104,10 @@ def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len,
     cfg_st = dataclasses.replace(
         rt.st_cfg, causal=True, window=cfg.window, prefix_len=None)
     if rt.mode == "local":
-        from repro.kernels import ref as ref_kernels
-
-        o, _ = ref_kernels.block_attention(
-            q, k_cache, v_cache, pos_new, pos_k,
-            causal=True, window=cfg.window)
-        o = o.astype(x.dtype)
+        o = kernels.prefill(q, k_cache, v_cache, pos_new, pos_k,
+                            causal=True, window=cfg.window)
     else:
-        o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k,
-                                valid, cfg_st)
+        o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k, cfg_st)
     out = jnp.einsum("bshk,hkd->bsd", o, wo)
     return x + out, new_cache
 
@@ -193,8 +202,6 @@ def _slstm_decode(rt: Runtime, p, x, cache, cfg: ModelConfig):
 
 def _cross_decode(rt: Runtime, p, x, enc_out, cfg: ModelConfig):
     """Cross-attention for one decoder token vs the full encoder output."""
-    from repro.kernels import ref as ref_kernels
-
     h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
     wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
     wk = rt.dense(p["wk"], ("embed", "kv_heads", "head_dim"))
@@ -207,12 +214,10 @@ def _cross_decode(rt: Runtime, p, x, enc_out, cfg: ModelConfig):
     pos_k = rt.positions_contig(s_loc)
     pos_q = jnp.array([0], jnp.int32)
     if rt.mode == "local":
-        o, _ = ref_kernels.block_attention(q, k, v, pos_q, pos_k, causal=False)
-        o = o.astype(x.dtype)
+        o = kernels.prefill(q, k, v, pos_q, pos_k, causal=False)
     else:
         cfg_st = dataclasses.replace(rt.st_cfg, causal=False, window=None)
-        valid = jnp.ones(k.shape[:2], bool)
-        o = st.decode_attention(q, k, v, pos_q, pos_k, valid, cfg_st)
+        o = st.decode_attention(q, k, v, pos_q, pos_k, cfg_st)
     return x + jnp.einsum("bshk,hkd->bsd", o, wo)
 
 

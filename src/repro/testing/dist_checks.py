@@ -146,9 +146,6 @@ def check_decode(p=8, cache_len=64, hq=4, hkv=2, d=8):
     spec_kv = P(None, AXES, None, None)
 
     def local(q, k, v):
-        sp_rank = (
-            jax.lax.axis_index(AXES[0]) * (p // c) * 1
-        )
         # contiguous cache shard positions
         gi = jax.lax.axis_index(AXES[0])
         ji = jax.lax.axis_index(AXES[1])
@@ -156,8 +153,7 @@ def check_decode(p=8, cache_len=64, hq=4, hkv=2, d=8):
         r = p // (c * c)
         rank = (gi * r + ji) * c + ti
         pos_k = st.shard_positions(rank, cache_len, p, "contiguous")
-        valid = jnp.ones(k.shape[:2], bool)
-        return st.decode_attention(q, k, v, pos_q, pos_k, valid, cfg)
+        return st.decode_attention(q, k, v, pos_q, pos_k, cfg)
 
     dist = jax.jit(jax.shard_map(
         local, mesh=mesh,
@@ -625,11 +621,132 @@ def check_engine_moe(arch="phi3.5-moe-42b-a6.6b"):
     assert eng.run() == out, "MoE engine replay nondeterministic"
 
 
+def check_paged_decode_dist(c=2, p=8, hq=4, hkv=2, d=16, ps=4, w=3):
+    """The Pallas paged-decode kernel inside a shard_map island on the
+    refined mesh: partial (o, lse) per shard + lse-combine psum must match
+    the dense full-cache oracle, with ragged per-row cache lengths and
+    round-robin page ownership."""
+    from repro.kernels import dispatch as kernels
+
+    mesh = make_mesh(c, p)
+    B = 3
+    pages_loc = 8
+    cache_max = w * p * ps
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (B, 1, hq, d))
+    k_full = _rand(kk, (B, cache_max, hkv, d))
+    v_full = _rand(kv, (B, cache_max, hkv, d))
+    cache_len = jnp.array([cache_max - 1, ps + 1, 0], jnp.int32)[:B]
+
+    # host-side round-robin paging of the dense cache: global block g lives
+    # on shard g % p as that shard's g // p-th block; per-shard pools +
+    # a (B, p, w) table with distinct local pages per (slot, block)
+    pools_k = np.zeros((p, pages_loc, ps, hkv, d), np.float32)
+    pools_v = np.zeros((p, pages_loc, ps, hkv, d), np.float32)
+    table = np.full((B, p, w), -1, np.int32)
+    next_free = [0] * p
+    for b in range(B):
+        blocks = int(cache_len[b]) // ps + 1
+        for g in range(blocks):
+            sh, j = g % p, g // p
+            page = next_free[sh]
+            next_free[sh] += 1
+            table[b, sh, j] = page
+            sl = slice(g * ps, (g + 1) * ps)
+            pools_k[sh, page] = np.asarray(k_full[b, sl])
+            pools_v[sh, page] = np.asarray(v_full[b, sl])
+
+    spec_pool = P(AXES, None, None, None, None)
+
+    def island(q, pool_k, pool_v, table, cache_len):
+        gi = jax.lax.axis_index(AXES[0])
+        ji = jax.lax.axis_index(AXES[1])
+        ti = jax.lax.axis_index(AXES[2])
+        r = p // (c * c)
+        rank = (gi * r + ji) * c + ti
+        tbl = jax.lax.dynamic_index_in_dim(table, rank, axis=1,
+                                           keepdims=False)
+        o_p, lse_p = kernels.paged_decode(
+            q, pool_k[0], pool_v[0], tbl, cache_len, rank, sp=p,
+            page_size=ps, impl="pallas")
+        return st.combine_decode_partials(o_p, lse_p, AXES)
+
+    fn = jax.jit(jax.shard_map(
+        island, mesh=mesh,
+        in_specs=(P(None, None, None, None), spec_pool, spec_pool,
+                  P(None, None, None), P(None)),
+        out_specs=P(None, None, None, None), check_vma=False))
+    o = np.asarray(fn(q, jnp.asarray(pools_k), jnp.asarray(pools_v),
+                      jnp.asarray(table), cache_len))
+
+    pos = jnp.arange(cache_max, dtype=jnp.int32)
+    for b in range(B):
+        cl = int(cache_len[b])
+        pos_k = jnp.where(pos <= cl, pos, cl + 1)
+        o_ref, _ = ref_kernels.block_attention(
+            q[b:b + 1], k_full[b:b + 1], v_full[b:b + 1],
+            jnp.array([cl], jnp.int32), pos_k, causal=True)
+        err = np.abs(o[b] - np.asarray(o_ref)[0]).max()
+        assert err < 2e-4, f"paged decode row {b} err {err}"
+
+
+def check_engine_paged_kernel(arch="h2o-danube-1.8b"):
+    """Acceptance (paged-decode kernel): the engine under
+    kernel_impl='pallas' (interpret mode on CPU) emits bit-identical tokens
+    to the ref gather path for the same mixed workload, and holds the same
+    once-per-bucket compile guarantee."""
+    from repro.engine import EngineConfig, Request, build_engine
+
+    rng = np.random.default_rng(3)
+    outs = {}
+    engines = {}
+    for kern in ("ref", "pallas"):
+        eng = build_engine(arch, smoke=True, c=2, data=1, kernel=kern,
+                           eng=EngineConfig(max_slots=2, page_size=4,
+                                            pages_per_shard=16, max_len=64))
+        assert eng.kernel_impl == kern
+        vocab = eng.cfg.vocab_size
+        rng_w = np.random.default_rng(3)
+        reqs = [Request(uid=f"p{i}",
+                        tokens=rng_w.integers(0, vocab, 3 + 4 * i).tolist(),
+                        max_new_tokens=2 + i, seed=50 + i)
+                for i in range(3)]
+        eng.add_request(reqs[0])
+        eng.add_request(reqs[1])
+        eng.step()
+        eng.add_request(reqs[2])        # joins the running batch
+        outs[kern] = eng.run()
+        assert eng.xla_compiles() == (len(eng._prefill_fns),
+                                      len(eng._decode_fns)), (
+            f"{kern}: a bucket fn compiled more than once")
+        engines[kern] = eng
+    assert outs["pallas"] == outs["ref"], (
+        f"paged-kernel tokens diverged from the ref path:\n"
+        f"  ref:    {outs['ref']}\n  pallas: {outs['pallas']}")
+
+    # replay on the warm pallas engine: zero new compiles
+    eng = engines["pallas"]
+    pc, dc = eng.metrics.prefill_compiles, eng.metrics.decode_compiles
+    eng.reset()
+    vocab = eng.cfg.vocab_size
+    rng_w = np.random.default_rng(3)
+    for i in range(3):
+        eng.add_request(Request(
+            uid=f"p{i}", tokens=rng_w.integers(0, vocab, 3 + 4 * i).tolist(),
+            max_new_tokens=2 + i, seed=50 + i))
+    assert eng.run() == outs["pallas"], "pallas replay diverged"
+    assert (eng.metrics.prefill_compiles, eng.metrics.decode_compiles) == \
+        (pc, dc), "pallas engine recompiled on replay"
+
+
 CHECKS.update({
     "greedy_tie": check_greedy_tie,
     "engine_sampling": check_engine_sampling,
     "engine_mixed": check_engine_mixed,
     "engine_moe": check_engine_moe,
+    "paged_decode_dist": check_paged_decode_dist,
+    "engine_paged_kernel": check_engine_paged_kernel,
 })
 
 

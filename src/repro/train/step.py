@@ -52,6 +52,7 @@ def make_runtime(model: Model, run_cfg: RunConfig, shape: ShapeConfig,
     impl = "ulysses" if run_cfg.attention_scheme == "ulysses" else "startrail"
     return Runtime(mode=mode, st_cfg=st, batch_axes=batch_axes,
                    rules=run_cfg.sharding_rules, attention_impl=impl,
+                   kernel_impl=run_cfg.kernel_impl,
                    unroll_scans=run_cfg.unroll_scans)
 
 

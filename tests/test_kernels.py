@@ -1,14 +1,25 @@
-"""Pallas flash-attention kernels vs the pure-jnp oracle (interpret mode).
+"""Pallas flash-attention + paged-decode kernels vs the pure-jnp oracle
+(interpret mode).
 
 Sweeps shapes/dtypes per the kernel-testing contract: every kernel is
-asserted allclose against ref.py.
+asserted allclose against ref.py. Also grep-enforces the dispatch-layer
+contract: nothing outside kernels/ imports ref/ops/flash_attention/
+paged_decode directly — all attention call sites go through
+``kernels.dispatch``.
+
+Runnable standalone (the CI ``kernels-interpret`` step):
+    PYTHONPATH=src python -m pytest -x -q tests/test_kernels.py
 """
+
+import pathlib
+import re
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels import dispatch
 from repro.kernels import ops
 from repro.kernels import ref
 
@@ -72,6 +83,138 @@ def test_bwd_matches_ref(B, Sq, Sk, Hq, Hkv, D, causal, window, dtype, blk):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w),
                                    atol=3e-4, rtol=3e-4,
                                    err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# paged-decode kernel: page-table-indexed online softmax vs the dense oracle
+# ---------------------------------------------------------------------------
+
+PAGED_CASES = [
+    # B, Hq, Hkv, D, page_size, W, sp, rank, window, raggedness
+    (2, 4, 2, 16, 4, 3, 2, 1, None, "ragged"),     # GQA, mid-shard
+    (3, 4, 1, 8, 4, 4, 4, 3, None, "ragged"),      # MQA, last shard
+    (2, 2, 2, 32, 8, 2, 1, 0, None, "partial"),    # MHA, partially-filled page
+    (2, 4, 2, 16, 4, 4, 2, 0, 6, "ragged"),        # sliding window
+    (1, 4, 2, 16, 4, 3, 2, 1, 5, "partial"),       # window + partial page
+    (2, 4, 2, 16, 4, 3, 2, 0, None, "empty"),      # a row with nothing valid
+]
+
+
+def _paged_fixture(B, Hkv, D, ps, W, sp, raggedness, seed=0):
+    """Random pools + a table with some -1 holes + per-row cache lengths."""
+    rng = np.random.default_rng(seed)
+    pages_loc = 8
+    pool_k = jnp.asarray(rng.normal(size=(pages_loc, ps, Hkv, D))
+                         .astype(np.float32))
+    pool_v = jnp.asarray(rng.normal(size=(pages_loc, ps, Hkv, D))
+                         .astype(np.float32))
+    tbl = rng.integers(0, pages_loc, size=(B, W)).astype(np.int32)
+    tbl[0, -1] = -1                               # unallocated tail page
+    max_pos = W * sp * ps
+    if raggedness == "partial":
+        # last valid position lands mid-page on every row
+        cl = (rng.integers(0, W * sp, size=(B,)) * ps
+              + rng.integers(1, ps - 1, size=(B,))).astype(np.int32)
+    else:
+        cl = rng.integers(0, max_pos, size=(B,)).astype(np.int32)
+    if raggedness == "empty":
+        tbl[-1] = -1                              # no pages at all
+        cl[-1] = 0
+    return pool_k, pool_v, jnp.asarray(tbl), jnp.asarray(cl)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,D,ps,W,sp,rank,window,ragged", PAGED_CASES)
+def test_paged_decode_matches_ref(B, Hq, Hkv, D, ps, W, sp, rank, window,
+                                  ragged):
+    """Interpret-mode parity: the Pallas paged kernel's partial (o, lse)
+    equals ref.block_attention over the dense gather of the same pages
+    (GQA, sliding window, ragged cache_len, partially-filled pages)."""
+    pool_k, pool_v, tbl, cl = _paged_fixture(B, Hkv, D, ps, W, sp, ragged)
+    q = jnp.asarray(np.random.default_rng(1)
+                    .normal(size=(B, 1, Hq, D)).astype(np.float32))
+    rank_a = jnp.int32(rank)
+
+    o_p, lse_p = dispatch.paged_decode(
+        q, pool_k, pool_v, tbl, cl, rank_a, sp=sp, page_size=ps,
+        window=window, impl="pallas")
+
+    # dense oracle: gather this shard's pages by hand, positions encode
+    # validity (invalid slots pushed past the query position)
+    pages_loc = pool_k.shape[0]
+    safe = jnp.clip(tbl, 0, pages_loc - 1)
+    k_r = pool_k[safe].reshape(B, W * ps, Hkv, D)
+    v_r = pool_v[safe].reshape(B, W * ps, Hkv, D)
+    pos = ((np.arange(W) * sp + rank) * ps)[:, None] + np.arange(ps)[None]
+    pos = jnp.asarray(pos.reshape(-1).astype(np.int32))
+    valid = jnp.repeat(tbl >= 0, ps, axis=1) & (pos[None] <= cl[:, None])
+    pos_k = jnp.where(valid, pos[None], (cl + 1)[:, None])
+    o_r, lse_r = ref.block_attention(q, k_r, v_r, cl[:, None], pos_k,
+                                     causal=True, window=window)
+
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    live = np.asarray(lse_r) > -1e29
+    np.testing.assert_allclose(np.asarray(lse_p)[live],
+                               np.asarray(lse_r)[live], atol=1e-4, rtol=1e-4)
+    # dead rows (no visible key on this shard) must report lse = -inf so
+    # the cross-shard combine drops them
+    assert (np.asarray(lse_p)[~live] < -1e29).all()
+
+
+def test_paged_decode_ref_impl_matches_oracle():
+    """dispatch.paged_decode(impl='ref') — the gather fallback — agrees
+    with the pallas kernel bit-for-tolerance on the same fixture."""
+    B, Hq, Hkv, D, ps, W, sp, rank = 2, 4, 2, 16, 4, 3, 2, 1
+    pool_k, pool_v, tbl, cl = _paged_fixture(B, Hkv, D, ps, W, sp, "ragged")
+    q = jnp.asarray(np.random.default_rng(2)
+                    .normal(size=(B, 1, Hq, D)).astype(np.float32))
+    o_r, lse_r = dispatch.paged_decode(q, pool_k, pool_v, tbl, cl,
+                                       jnp.int32(rank), sp=sp, page_size=ps,
+                                       impl="ref")
+    o_p, lse_p = dispatch.paged_decode(q, pool_k, pool_v, tbl, cl,
+                                       jnp.int32(rank), sp=sp, page_size=ps,
+                                       impl="pallas")
+    np.testing.assert_allclose(np.asarray(o_p), np.asarray(o_r),
+                               atol=2e-5, rtol=2e-5)
+    live = np.asarray(lse_r) > -1e29
+    np.testing.assert_allclose(np.asarray(lse_p)[live],
+                               np.asarray(lse_r)[live], atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dispatch layer contract
+# ---------------------------------------------------------------------------
+
+def test_resolve_impl():
+    assert dispatch.resolve_impl("ref") == "ref"
+    assert dispatch.resolve_impl("pallas") == "pallas"
+    assert dispatch.resolve_impl(None) == (
+        "pallas" if jax.default_backend() == "tpu" else "ref")
+    with pytest.raises(ValueError):
+        dispatch.resolve_impl("cuda")
+
+
+def test_no_direct_kernel_imports():
+    """Grep-enforced: no module outside kernels/ imports kernels.ref /
+    kernels.ops / kernels.flash_attention / kernels.paged_decode directly —
+    every attention call site in core/, serve/, engine/, models/ goes
+    through kernels.dispatch. (testing/dist_checks.py is exempt: it uses
+    ref as the *oracle* the distributed paths are checked against.)"""
+    src = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+    pat = re.compile(
+        r"repro\.kernels\s+import\s+(ref|ops|flash_attention|paged_decode)"
+        r"|repro\.kernels\.(ref|ops|flash_attention|paged_decode)")
+    offenders = []
+    for path in sorted(src.rglob("*.py")):
+        rel = path.relative_to(src)
+        if rel.parts[0] in ("kernels", "testing"):
+            continue
+        for i, line in enumerate(path.read_text().splitlines(), 1):
+            if pat.search(line):
+                offenders.append(f"{rel}:{i}: {line.strip()}")
+    assert not offenders, (
+        "direct kernel imports outside kernels/ (use kernels.dispatch):\n"
+        + "\n".join(offenders))
 
 
 def test_flash_attention_grad_end_to_end():

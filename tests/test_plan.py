@@ -174,3 +174,86 @@ def test_run_config_reflects_plan():
     plan_ssm = make_plan(registry.get_smoke("xlstm-1.3b"), shape,
                          n_devices=8, data=2)
     assert plan_ssm.seq_scheme == "contiguous"
+
+
+# ---------------------------------------------------------------------------
+# serving face (kind='decode' plans for repro.engine — see docs/SERVING.md)
+# ---------------------------------------------------------------------------
+
+def test_make_serve_plan_and_roundtrip(tmp_path):
+    from repro.plan import make_serve_plan
+
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    plan = make_serve_plan(cfg, arch="h2o-danube-1.8b", n_devices=8,
+                           data=1, c=2, decode_batch=4, page_size=8,
+                           max_len=100)
+    assert plan.kind == "decode" and plan.scheme == "startrail"
+    assert plan.decode_batch == 4 and plan.page_size == 8
+    # capacity padded so both SP and the page size divide it
+    assert plan.seq_len >= 100
+    assert plan.seq_len % plan.sp_size == 0
+    assert plan.seq_len % plan.page_size == 0
+    assert plan.seq_scheme == "contiguous"
+    p = plan.save(tmp_path / "PLAN_serve.json")
+    assert ExecutionPlan.load(p) == plan
+    rc = plan.run_config()
+    assert rc.kernel_impl == plan.kernel_impl
+
+
+def test_impls_default_to_backend():
+    """make_plan's unset block_impl/kernel_impl follow the backend: 'ref'
+    on CPU (this session), 'pallas' on TPU (satellite acceptance — the
+    hardcoded "ref" default is gone)."""
+    import jax
+
+    from repro.kernels import dispatch
+    from repro.plan import make_serve_plan
+
+    assert jax.default_backend() == "cpu"
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    shape = ShapeConfig("smoke", seq_len=64, global_batch=4, kind="train")
+    plan = make_plan(cfg, shape, n_devices=8, data=2)
+    assert plan.block_impl == dispatch.resolve_impl(None) == "ref"
+    splan = make_serve_plan(cfg, n_devices=8, decode_batch=2, page_size=4,
+                            max_len=64)
+    assert splan.kernel_impl == "ref"
+    # explicit knobs pass through and are validated
+    plan = make_plan(cfg, shape, n_devices=8, data=2, block_impl="pallas",
+                     kernel_impl="pallas")
+    assert plan.block_impl == "pallas" and plan.kernel_impl == "pallas"
+    with pytest.raises(ValueError, match="impl"):
+        make_plan(cfg, shape, n_devices=8, data=2, block_impl="cuda")
+
+
+def test_serve_plan_validation():
+    from repro.plan import make_serve_plan
+
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    with pytest.raises(ValueError, match="decode_batch"):
+        make_serve_plan(cfg, n_devices=8, decode_batch=0, page_size=4)
+    with pytest.raises(ValueError, match="page_size"):
+        make_serve_plan(cfg, n_devices=8, decode_batch=2, page_size=0)
+    with pytest.raises(ValueError, match="kernel_impl"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=4,
+                      n_devices=8, data=2, c=1, kind="decode",
+                      seq_scheme="contiguous", kernel_impl="cuda")
+    with pytest.raises(ValueError, match="page_size"):
+        ExecutionPlan(arch="x", shape="s", seq_len=60, global_batch=4,
+                      n_devices=4, data=2, c=1, kind="decode",
+                      seq_scheme="contiguous", page_size=8,
+                      decode_batch=2)   # 60 % 8 != 0
+
+
+def test_decode_kernel_cost_model():
+    """The paged kernel strictly beats the gather path on bytes (it skips
+    the dense cache copy); flops are identical."""
+    cfg = registry.get("h2o-danube-1.8b")
+    kw = dict(batch=8, cache_len=4096, sp=16, page_size=16)
+    ref_c = cost.decode_step_cost(cfg, kernel="ref", **kw)
+    pal_c = cost.decode_step_cost(cfg, kernel="pallas", **kw)
+    assert pal_c["flops"] == ref_c["flops"]
+    assert pal_c["bytes"] < ref_c["bytes"]
+    ranked = cost.rank_decode_kernels(cfg, **kw)
+    assert ranked[0]["kernel"] == "pallas"
+    with pytest.raises(ValueError, match="kernel"):
+        cost.decode_step_cost(cfg, kernel="cuda", **kw)

@@ -32,6 +32,9 @@ BATCHES = {
     "engine_serving": [
         "greedy_tie", "engine_sampling", "engine_mixed", "engine_moe",
     ],
+    "engine_paged_kernel": [
+        "paged_decode_dist", "engine_paged_kernel",
+    ],
     "plan_and_microbatch": [
         "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",
         "plan_constructs",

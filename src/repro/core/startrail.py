@@ -402,14 +402,25 @@ def combine_decode_partials(o, lse, axes):
     visible key) contribute exact zeros; if *every* shard is dead the
     result is zero (the caller treats such rows as inactive).
     """
+    o, _ = combine_partials_with_lse(o, lse, axes)
+    return o
+
+
+def combine_partials_with_lse(o, lse, axes):
+    """``combine_decode_partials`` that also returns the merged lse, for
+    callers that go on to merge the cross-shard result with *another*
+    disjoint partial (the prefix-cached prefill merges page-pool partials
+    with the locally-computed suffix partial via ``combine.combine_pair``).
+    """
     m = jax.lax.pmax(lse, axes)
     dead = m <= NEG_INF / 2
     m_safe = jnp.where(dead, 0.0, m)
     se = jax.lax.psum(jnp.exp(lse - m_safe), axes)
     se_safe = jnp.where(se == 0.0, 1.0, se)
     w = jnp.where(dead, 0.0, jnp.exp(lse - m_safe) / se_safe)
-    o = o * jnp.swapaxes(w, 1, 2)[..., None]
-    return jax.lax.psum(o, axes)
+    o = jax.lax.psum(o * jnp.swapaxes(w, 1, 2)[..., None], axes)
+    lse_c = jnp.where(dead, NEG_INF, m_safe + jnp.log(se_safe))
+    return o, lse_c
 
 
 def decode_attention(q_new, k_cache, v_cache, pos_q, pos_k, cfg: StarTrailConfig):

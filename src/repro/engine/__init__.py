@@ -9,17 +9,22 @@ Public surface:
                            the paged-decode kernel_impl all come from it)
   build_engine           — convenience constructor: resolves a serve plan
                            (plan.make_serve_plan) over the local mesh
-  paged_cache            — SP-sharded page-pool layout + island helpers
+  paged_cache            — SP-sharded page-pool layout + island helpers;
+                           PagePool, the ref-counted free list that makes
+                           pages shareable (repro.gateway's prefix cache)
   sampling               — vocab-parallel greedy/temperature/top-k/top-p
   scheduler              — FIFO continuous-batching slot/page bookkeeping
+                           (prefix-cache-aware admission when a
+                           repro.gateway.PrefixCache is attached)
 """
 
 from repro import compat as _compat  # noqa: F401  (jax shims)
 from repro.engine.engine import (Engine, EngineConfig, EngineMetrics,
                                  build_engine)
+from repro.engine.paged_cache import PagePool
 from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
 
 __all__ = [
-    "Engine", "EngineConfig", "EngineMetrics", "build_engine",
+    "Engine", "EngineConfig", "EngineMetrics", "build_engine", "PagePool",
     "Request", "Scheduler", "SlotState", "bucket_pow2",
 ]

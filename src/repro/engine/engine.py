@@ -68,6 +68,10 @@ class EngineMetrics:
     peak_pages: int = 0
     pages_total: int = 0
     wall_s: float = 0.0
+    # prefix-cache accounting (zero when the cache is off)
+    prefill_tokens_computed: int = 0   # prompt tokens actually forwarded
+    prefill_tokens_cached: int = 0     # prompt tokens served from the cache
+    prefix_evictions: int = 0          # cache pages dropped under pressure
 
     def reset(self, keep_compiles: bool = True) -> None:
         pc, dc = self.prefill_compiles, self.decode_compiles
@@ -84,6 +88,9 @@ class EngineMetrics:
                                  if self.pages_total else 0.0)
         d["tokens_per_s"] = (self.tokens_out / self.wall_s
                              if self.wall_s > 0 else 0.0)
+        prompt = self.prefill_tokens_computed + self.prefill_tokens_cached
+        d["prefix_hit_rate"] = (self.prefill_tokens_cached / prompt
+                                if prompt else 0.0)
         return d
 
 
@@ -151,14 +158,38 @@ class Engine:
             donate_argnums=(0,))
         self.pools = self._zero_pools(paged_cache.init_pools(
             cfg, mesh, self.sp * eng.pages_per_shard, eng.page_size))
-        self.scheduler = Scheduler(
-            max_slots=eng.max_slots, page_size=eng.page_size, sp=self.sp,
-            pages_per_shard=eng.pages_per_shard, max_len=eng.max_len)
+        self.prefix_caching = bool(getattr(plan, "prefix_cache", False))
+        if self.prefix_caching and any(
+                mlp == "moe" for _, mlp in transformer.layer_pattern(cfg)):
+            # MoE expert capacity couples tokens *within* a sequence: a
+            # prefix token's hidden state depends on the suffix competing
+            # for expert slots, so cached prefix KV is not reusable.
+            raise NotImplementedError(
+                f"repro.engine: {cfg.name}: prefix caching is unsound for "
+                "MoE stacks (capacity couples prefix KV to the suffix)")
+        self.scheduler = self._new_scheduler()
         self._prefill_fns: Dict[int, object] = {}
+        self._suffix_fns: Dict[int, object] = {}
         self._decode_fns: Dict[int, object] = {}
         self._base_keys: Dict[int, np.ndarray] = {}
         self.metrics = EngineMetrics(
             pages_total=self.scheduler.pages_total())
+
+    def _new_scheduler(self) -> Scheduler:
+        sched = Scheduler(
+            max_slots=self.eng.max_slots, page_size=self.eng.page_size,
+            sp=self.sp, pages_per_shard=self.eng.pages_per_shard,
+            max_len=self.eng.max_len)
+        if self.prefix_caching:
+            from repro.gateway.prefix_cache import PrefixCache
+
+            sched.prefix_cache = PrefixCache(
+                sched.pool, page_size=self.eng.page_size, sp=self.sp)
+        return sched
+
+    @property
+    def prefix_cache(self):
+        return self.scheduler.prefix_cache
 
     # ---- request lifecycle ---------------------------------------------
     def add_request(self, req: Request) -> None:
@@ -170,12 +201,10 @@ class Engine:
                 for uid, st in self.scheduler.finished.items()}
 
     def reset(self) -> None:
-        """Drop all requests and cache contents; keep compiled fns."""
+        """Drop all requests and cache contents (including the prefix
+        cache — the pools are zeroed); keep compiled fns."""
         self.pools = self._zero_pools(self.pools)
-        self.scheduler = Scheduler(
-            max_slots=self.eng.max_slots, page_size=self.eng.page_size,
-            sp=self.sp, pages_per_shard=self.eng.pages_per_shard,
-            max_len=self.eng.max_len)
+        self.scheduler = self._new_scheduler()
         self.metrics.reset(keep_compiles=True)
         self.metrics.pages_total = self.scheduler.pages_total()
 
@@ -234,6 +263,49 @@ class Engine:
         self.metrics.prefill_compiles += 1
         return fn
 
+    def _suffix_fn(self, bucket_len: int, sampled: bool):
+        """One jit per (padded *suffix* length, any-sampling): the
+        prefix-cached prefill. The page-table row keeps its full static
+        width (one prefill per request — no width bucketing needed)."""
+        import jax
+        import dataclasses as dc
+        from jax.sharding import PartitionSpec as P
+
+        from repro.serve import step as serve_step
+
+        fn = self._suffix_fns.get((bucket_len, sampled))
+        if fn is not None:
+            return fn
+        cfg, eng, sc = self.cfg, self.eng, self._sc
+        rt = dc.replace(self.rt, st_cfg=dc.replace(self.rt.st_cfg,
+                                                   seq_len=bucket_len))
+
+        def island(params, tokens, prompt_len, cached_len, pools, table_row,
+                   temp, top_k, top_p, key):
+            last, new_pools = serve_step.lm_prefill_paged(
+                rt, params, {"tokens": tokens}, cfg,
+                prompt_len=prompt_len, cached_len=cached_len, pools=pools,
+                table_row=table_row, page_size=eng.page_size)
+            head = params.get("lm_head", params["embed"])
+            if sampled:
+                k1 = jax.random.fold_in(key, prompt_len[0])
+                tok = sampling_lib.sample(
+                    rt, head, last, cfg, temperature=temp, top_k=top_k,
+                    top_p=top_p, keys=k1[None], sc=sc)
+            else:
+                tok = sampling_lib.greedy(rt, head, last, cfg)
+            return tok, new_pools
+
+        fn = jax.jit(jax.shard_map(
+            island, mesh=self.mesh,
+            in_specs=(self._param_specs, P(None, SP_AXES), P(), P(),
+                      self._pool_part, P(), P(), P(), P(), P()),
+            out_specs=(P(), self._pool_part), check_vma=False),
+            donate_argnums=(4,))
+        self._suffix_fns[(bucket_len, sampled)] = fn
+        self.metrics.prefill_compiles += 1
+        return fn
+
     def _decode_fn(self, width: int, sampled: bool):
         """One jit per (table-width bucket, any-active-request-samples)."""
         import jax
@@ -277,7 +349,8 @@ class Engine:
                 size = getattr(fn, "_cache_size", None)
                 n += size() if callable(size) else 1
             return n
-        return total(self._prefill_fns), total(self._decode_fns)
+        return (total(self._prefill_fns) + total(self._suffix_fns),
+                total(self._decode_fns))
 
     def _base_key(self, seed: int) -> np.ndarray:
         key = self._base_keys.get(seed)
@@ -298,20 +371,48 @@ class Engine:
         emitted: List[Tuple[str, int]] = []
         m = self.metrics
 
-        for st in self.scheduler.admit(m.steps):
+        while True:
+            # one at a time: each admission registers its prompt blocks
+            # before the next is matched, so same-step bursts sharing a
+            # prefix hit the cache
+            batch = self.scheduler.admit(m.steps, limit=1)
+            if not batch:
+                break
+            st = batch[0]
             req = st.req
-            bucket = self._prefill_bucket(req.prompt_len)
-            fn = self._prefill_fn(bucket, req.temperature > 0.0)
-            tokens = np.zeros((1, bucket), np.int32)
-            tokens[0, :req.prompt_len] = req.tokens
-            tok, self.pools = fn(
-                self.params, tokens,
-                np.asarray([req.prompt_len], np.int32), self.pools,
-                self.scheduler.table[st.slot].copy(),
-                np.asarray([req.temperature], np.float32),
-                np.asarray([req.top_k], np.int32),
-                np.asarray([req.top_p], np.float32),
-                self._base_key(req.seed))
+            if st.cached_len:
+                # prefix hit: forward only the uncached suffix; the cached
+                # blocks are read in place from the shared pool pages
+                suffix = req.prompt_len - st.cached_len
+                bucket = self._prefill_bucket(suffix)
+                fn = self._suffix_fn(bucket, req.temperature > 0.0)
+                tokens = np.zeros((1, bucket), np.int32)
+                tokens[0, :suffix] = req.tokens[st.cached_len:]
+                tok, self.pools = fn(
+                    self.params, tokens,
+                    np.asarray([req.prompt_len], np.int32),
+                    np.asarray([st.cached_len], np.int32), self.pools,
+                    self.scheduler.table[st.slot].copy(),
+                    np.asarray([req.temperature], np.float32),
+                    np.asarray([req.top_k], np.int32),
+                    np.asarray([req.top_p], np.float32),
+                    self._base_key(req.seed))
+            else:
+                bucket = self._prefill_bucket(req.prompt_len)
+                fn = self._prefill_fn(bucket, req.temperature > 0.0)
+                tokens = np.zeros((1, bucket), np.int32)
+                tokens[0, :req.prompt_len] = req.tokens
+                tok, self.pools = fn(
+                    self.params, tokens,
+                    np.asarray([req.prompt_len], np.int32), self.pools,
+                    self.scheduler.table[st.slot].copy(),
+                    np.asarray([req.temperature], np.float32),
+                    np.asarray([req.top_k], np.int32),
+                    np.asarray([req.top_p], np.float32),
+                    self._base_key(req.seed))
+            self.scheduler.register_prefix(st)
+            m.prefill_tokens_computed += req.prompt_len - st.cached_len
+            m.prefill_tokens_cached += st.cached_len
             st.cache_len = req.prompt_len
             st.out.append(int(np.asarray(tok)[0, 0]))
             st.first_token_step = m.steps
@@ -321,6 +422,8 @@ class Engine:
             if st.done:
                 self.scheduler.finish(st.slot, m.steps)
                 m.finished += 1
+        if self.scheduler.prefix_cache is not None:
+            m.prefix_evictions = self.scheduler.prefix_cache.evicted_pages
 
         active = self.scheduler.active()
         if active:

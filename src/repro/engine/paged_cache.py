@@ -31,17 +31,20 @@ kills them — no extra mask plumbing through the attention kernels.
 
 Device-side helpers in this module are pure functions meant to run inside a
 ``shard_map`` island; host-side page accounting lives in
-``repro.engine.scheduler``.
+``repro.engine.scheduler`` on top of this module's :class:`PagePool` —
+the ref-counted free list that lets several sequences share immutable
+pages (the copy-on-write substrate of ``repro.gateway``'s prefix cache).
 """
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, List, Tuple
 
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -49,6 +52,66 @@ from repro.configs.base import ModelConfig
 from repro.dist.sharding import SP_AXES
 from repro.models import transformer
 from repro.models.runtime import Runtime
+
+
+class PagePool:
+    """Host-side, ref-counted page free lists (one per SP shard).
+
+    Every physical page carries a reference count: 1 for each live sequence
+    whose page table points at it, plus 1 when the gateway's prefix cache
+    retains it. Pages return to the free list only when the count reaches
+    zero, so a shared prefix page outlives any single request and an
+    over-release (double free) is a loud error instead of silent cache
+    corruption. Shared pages are **immutable by construction** — decode
+    appends land in blocks past the shared full-prompt prefix — so
+    copy-on-write never has to copy; the ref counts are the entire
+    write-safety story (see docs/SERVING.md, "COW semantics").
+    """
+
+    def __init__(self, sp: int, pages_per_shard: int):
+        self.sp = sp
+        self.pages_per_shard = pages_per_shard
+        self.free: List[List[int]] = [
+            list(range(pages_per_shard - 1, -1, -1)) for _ in range(sp)]
+        self.refs = np.zeros((sp, pages_per_shard), np.int32)
+
+    def available(self, shard: int) -> int:
+        return len(self.free[shard])
+
+    def alloc(self, shard: int) -> int:
+        """Pop a free page on ``shard`` with refcount 1."""
+        if not self.free[shard]:
+            raise RuntimeError(
+                f"page pool exhausted on shard {shard} "
+                f"({self.pages_per_shard} pages)")
+        page = self.free[shard].pop()
+        assert self.refs[shard, page] == 0, "free-list page had live refs"
+        self.refs[shard, page] = 1
+        return page
+
+    def incref(self, shard: int, page: int) -> None:
+        if self.refs[shard, page] <= 0:
+            raise ValueError(
+                f"incref of free page ({shard}, {page}) — stale reference")
+        self.refs[shard, page] += 1
+
+    def decref(self, shard: int, page: int) -> bool:
+        """Drop one reference; returns True when the page was freed."""
+        if self.refs[shard, page] <= 0:
+            raise ValueError(
+                f"double free of page ({shard}, {page}): refcount already 0")
+        self.refs[shard, page] -= 1
+        if self.refs[shard, page] == 0:
+            self.free[shard].append(page)
+            return True
+        return False
+
+    def pages_in_use(self) -> int:
+        return self.sp * self.pages_per_shard - sum(
+            len(f) for f in self.free)
+
+    def pages_total(self) -> int:
+        return self.sp * self.pages_per_shard
 
 
 @dataclasses.dataclass(frozen=True)

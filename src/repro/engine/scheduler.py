@@ -17,6 +17,13 @@ Policy
 * **Round-robin block placement**: logical block ``b`` goes to SP shard
   ``b % P_sp`` — per-shard load for any single sequence is balanced to
   within one page, keeping per-device decode compute flat in ``P_sp``.
+* **Ref-counted pages / prefix reuse**: every page lifecycle event goes
+  through ``paged_cache.PagePool`` (never a raw free-list append). With a
+  ``repro.gateway.prefix_cache.PrefixCache`` attached, admission matches
+  the request's full prompt blocks against the block-hash trie, *shares*
+  the hit pages (incref, no copy), and reserves fresh pages only for the
+  uncached suffix — ``SlotState.cached_len`` tells the engine how many
+  leading prompt tokens to skip at prefill.
 """
 
 from __future__ import annotations
@@ -27,6 +34,8 @@ import math
 from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.engine.paged_cache import PagePool
 
 
 @dataclasses.dataclass
@@ -52,8 +61,12 @@ class SlotState:
     slot: int
     arrived_step: int
     cache_len: int = 0                 # filled KV positions
+    cached_len: int = 0                # leading prompt tokens from the prefix
+    #                                    cache (multiple of page_size); the
+    #                                    engine prefills only the suffix
     out: List[int] = dataclasses.field(default_factory=list)
     pages: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
+    hashes: List[int] = dataclasses.field(default_factory=list)
     first_token_step: Optional[int] = None
     done_step: Optional[int] = None
 
@@ -72,7 +85,7 @@ def bucket_pow2(n: int, lo: int = 1) -> int:
 
 class Scheduler:
     def __init__(self, *, max_slots: int, page_size: int, sp: int,
-                 pages_per_shard: int, max_len: int):
+                 pages_per_shard: int, max_len: int, prefix_cache=None):
         if max_len % page_size:
             max_len = (max_len // page_size + 1) * page_size
         self.max_slots = max_slots
@@ -84,8 +97,9 @@ class Scheduler:
         self.table_width = math.ceil(self.max_blocks / sp)
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[SlotState]] = [None] * max_slots
-        self.free_pages: List[List[int]] = [
-            list(range(pages_per_shard - 1, -1, -1)) for _ in range(sp)]
+        self.pool = PagePool(sp, pages_per_shard)
+        # optional repro.gateway.prefix_cache.PrefixCache sharing this pool
+        self.prefix_cache = prefix_cache
         self.table = np.full((max_slots, sp, self.table_width), -1, np.int32)
         self.finished: Dict[str, SlotState] = {}
 
@@ -118,42 +132,104 @@ class Scheduler:
                 for s in range(self.sp)]
 
     def pages_in_use(self) -> int:
-        return self.sp * self.pages_per_shard - sum(
-            len(f) for f in self.free_pages)
+        return self.pool.pages_in_use()
 
     def pages_total(self) -> int:
-        return self.sp * self.pages_per_shard
+        return self.pool.pages_total()
 
     # ---- admission / eviction ------------------------------------------
-    def admit(self, step: int) -> List[SlotState]:
-        """FIFO-admit queued requests into free slots while pages last."""
+    def _alloc_evicting(self, shard: int) -> int:
+        """Pop a free page on ``shard``, evicting cache-only pages if dry.
+        Only called after :meth:`admit`'s feasibility check, so a dry pool
+        here is a bookkeeping bug, not back-pressure."""
+        if self.pool.available(shard) == 0 and self.prefix_cache is not None:
+            self.prefix_cache.evict(shard, 1)
+        if self.pool.available(shard) == 0:
+            raise RuntimeError(
+                f"shard {shard} dry after a feasible admission check")
+        return self.pool.alloc(shard)
+
+    def admit(self, step: int, limit: Optional[int] = None
+              ) -> List[SlotState]:
+        """FIFO-admit queued requests into free slots while pages last.
+
+        With a prefix cache attached, the head request's full prompt blocks
+        are matched first: hit pages are shared (incref — the cached KV is
+        reused in place) and only the uncached suffix allocates fresh
+        pages, evicting least-recently-used cache-only pages under
+        pressure. Feasibility (free + evictable pages per shard) is checked
+        *before* anything destructive: a head request that cannot get its
+        suffix pages blocks without evicting a single cached block, without
+        touching LRU stamps, and without skewing hit-rate stats — the probe
+        is read-only until admission is certain.
+
+        ``limit`` caps the admissions per call: the engine admits one at a
+        time so a burst of shared-prefix arrivals hits the blocks the
+        previous admission's prefill registered moments earlier.
+        """
         admitted = []
-        while self.queue:
+        while self.queue and (limit is None or len(admitted) < limit):
             free_slot = next(
                 (i for i, s in enumerate(self.slots) if s is None), None)
             if free_slot is None:
                 break
             req = self.queue[0]
             nb = self._blocks_for(req)
-            need = self._per_shard_need(nb)
-            if any(len(self.free_pages[s]) < need[s] for s in range(self.sp)):
-                break                               # head-of-line blocks
+            hashes: List[int] = []
+            matched: List[Tuple[int, int]] = []
+            if self.prefix_cache is not None:
+                # all full prompt blocks (register_prefix inserts them)...
+                hashes = self.prefix_cache.hashes(req.tokens)
+                # ...but match at most (prompt_len - 1) // ps of them:
+                # the next-token hidden state is not cached, so a fully-
+                # cached prompt still forwards its final token through
+                # the suffix prefill
+                usable = (req.prompt_len - 1) // self.page_size
+                matched = self.prefix_cache.match(hashes[:usable])
+            n_hits = len(matched)
+            need = [0] * self.sp
+            for b in range(n_hits, nb):
+                need[b % self.sp] += 1
+            # the hit pages are about to gain a live ref, so they must not
+            # count as evictable capacity (exclude=matched)
+            evictable = (self.prefix_cache.evictable_counts(
+                self.sp, exclude=matched)
+                if self.prefix_cache is not None else [0] * self.sp)
+            if any(self.pool.available(s) + evictable[s] < need[s]
+                   for s in range(self.sp)):
+                break                                       # head-of-line
+            hits: List[Tuple[int, int]] = []
+            if self.prefix_cache is not None:
+                hits = self.prefix_cache.acquire(
+                    hashes[:usable])                        # increfs+stats
+                assert hits == matched
+            fresh = [(b % self.sp, self._alloc_evicting(b % self.sp))
+                     for b in range(n_hits, nb)]
             self.queue.popleft()
-            st = SlotState(req=req, slot=free_slot, arrived_step=step)
-            for b in range(nb):
-                shard = b % self.sp
-                page = self.free_pages[shard].pop()
+            st = SlotState(req=req, slot=free_slot, arrived_step=step,
+                           cached_len=len(hits) * self.page_size,
+                           hashes=hashes)
+            st.pages = hits + fresh
+            for b, (shard, page) in enumerate(st.pages):
                 self.table[free_slot, shard, b // self.sp] = page
-                st.pages.append((shard, page))
             self.slots[free_slot] = st
             admitted.append(st)
         return admitted
+
+    def register_prefix(self, st: SlotState) -> None:
+        """Offer a freshly prefilled request's full prompt blocks to the
+        prefix cache (the engine calls this right after the prefill+insert
+        lands, when the pages hold valid KV). No-op without a cache."""
+        if self.prefix_cache is None:
+            return
+        full = st.req.prompt_len // self.page_size
+        self.prefix_cache.insert(st.hashes[:full], st.pages[:full])
 
     def finish(self, slot: int, step: int) -> SlotState:
         st = self.slots[slot]
         assert st is not None
         for shard, page in st.pages:
-            self.free_pages[shard].append(page)
+            self.pool.decref(shard, page)   # shared pages may stay cached
         st.pages = []
         st.done_step = step
         self.table[slot] = -1

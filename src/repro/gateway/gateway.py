@@ -1,0 +1,218 @@
+"""The serving gateway: a multi-replica front end over ``repro.engine``.
+
+One ``Gateway`` owns N ``Engine`` replicas, each on its own submesh slice
+of the available devices (the replica's mesh shape — data x (C, R, C)
+refinement — comes from one shared ``kind='decode'`` ``ExecutionPlan``
+whose ``replicas``/``prefix_cache`` serving knobs this module consumes).
+Requests enter through prefix-aware, load-aware routing with session
+affinity (``gateway.router``), are served by the replicas' continuous
+batching, and stream back per request: ``step()`` returns the (uid, token)
+pairs emitted that tick and ``take(uid)`` drains a request's stream
+incrementally, so callers can forward tokens while decode is still
+running.
+
+All replicas share one set of model parameters (initialised once, placed
+per-replica by each engine's jits) and each runs its own prefix cache over
+its own SP-sharded page pool — the router's job is to keep shared-prefix
+traffic landing where its pages already are.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.engine import Engine, EngineConfig, Request
+from repro.gateway.router import Router
+
+
+def replica_meshes(plan, replicas: int):
+    """One refined ``(data, sp_grp, sp_ring, sp_team)`` mesh per replica,
+    over disjoint slices of the local device list. The plan's
+    ``n_devices`` is the *per-replica* device count."""
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.dist.sharding import SP_AXES
+
+    if plan.mesh_kind != "local":
+        raise NotImplementedError(
+            "multi-replica gateways currently build local (forced-host) "
+            "meshes; production multi-host replicas are future work")
+    devs = jax.devices()
+    need = plan.n_devices * replicas
+    if len(devs) < need:
+        raise ValueError(
+            f"gateway needs {need} devices for {replicas} replicas of "
+            f"{plan.n_devices} but only {len(devs)} are available")
+    out = []
+    for i in range(replicas):
+        grid = np.array(devs[i * plan.n_devices:(i + 1) * plan.n_devices])
+        grid = grid.reshape(plan.data, plan.c, plan.r, plan.c)
+        out.append(Mesh(grid, ("data",) + SP_AXES))
+    return out
+
+
+class Gateway:
+    """add_request / step / take / collect driver over N engine replicas."""
+
+    def __init__(self, model, plan, eng: EngineConfig = EngineConfig(),
+                 params=None):
+        import jax
+
+        self.plan = plan
+        self.replicas = max(int(getattr(plan, "replicas", 1)), 1)
+        if params is None:
+            params = model.init(jax.random.PRNGKey(0))
+        if self.replicas == 1:
+            meshes = [plan.build_mesh()]
+        else:
+            meshes = replica_meshes(plan, self.replicas)
+        self.engines: List[Engine] = [
+            Engine(model, plan, eng, params, mesh=m) for m in meshes]
+        self.cfg = self.engines[0].cfg
+        self.router = Router(self.engines,
+                             prefix_aware=bool(plan.prefix_cache))
+        self._owner: Dict[str, int] = {}
+        self._streams: Dict[str, List[int]] = {}
+        self._cursor: Dict[str, int] = {}
+        self.wall_s = 0.0
+        self.max_steps = eng.max_steps
+
+    # ---- request lifecycle ---------------------------------------------
+    def add_request(self, req: Request, session: Optional[str] = None,
+                    replica: Optional[int] = None) -> int:
+        """Route and enqueue; returns the replica index. ``replica`` pins
+        the choice (the benchmark replays recorded placements so cache-on
+        and cache-off phases compare the same per-replica workloads)."""
+        i = self.router.route(req, session) if replica is None else replica
+        if replica is not None:
+            self.router.routed[i] += 1
+        self.engines[i].add_request(req)
+        self._owner[req.uid] = i
+        self._streams[req.uid] = []
+        self._cursor[req.uid] = 0
+        return i
+
+    def step(self) -> List[Tuple[str, int]]:
+        """One tick: step every replica with work; returns this tick's
+        (uid, token) emissions (also appended to the per-request streams)."""
+        t0 = time.monotonic()
+        emitted: List[Tuple[str, int]] = []
+        for engine in self.engines:
+            if not engine.idle():
+                emitted.extend(engine.step())
+        for uid, tok in emitted:
+            self._streams[uid].append(tok)
+        self.wall_s += time.monotonic() - t0
+        return emitted
+
+    def take(self, uid: str) -> List[int]:
+        """Drain the tokens streamed for ``uid`` since the last take."""
+        cur = self._cursor.get(uid, 0)
+        out = self._streams.get(uid, [])[cur:]
+        self._cursor[uid] = cur + len(out)
+        return out
+
+    def idle(self) -> bool:
+        return all(e.idle() for e in self.engines)
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[str, List[int]]:
+        limit = max_steps or self.max_steps
+        n = 0
+        while not self.idle():
+            emitted = self.step()
+            if not emitted and not any(
+                    e.scheduler.active() for e in self.engines):
+                # nothing decoding and nothing admissible: eviction was
+                # already tried, so no future step can make progress
+                raise RuntimeError(
+                    "gateway stalled: queued requests cannot be admitted "
+                    "(pool exhausted by live sequences?)")
+            n += 1
+            if n > limit:
+                raise RuntimeError(f"gateway did not drain in {limit} steps")
+        return self.collect()
+
+    def collect(self) -> Dict[str, List[int]]:
+        out: Dict[str, List[int]] = {}
+        for engine in self.engines:
+            out.update(engine.collect())
+        return out
+
+    def reset(self) -> None:
+        """Drop requests, pools and prefix caches on every replica; keep
+        compiled fns and the router's affinity map cleared."""
+        for engine in self.engines:
+            engine.reset()
+        self.router = Router(self.engines,
+                             prefix_aware=bool(self.plan.prefix_cache))
+        self._owner.clear()
+        self._streams.clear()
+        self._cursor.clear()
+        self.wall_s = 0.0
+
+    # ---- metrics --------------------------------------------------------
+    def compiles(self) -> Tuple[int, int]:
+        """(prefill, decode) bucket-compile counters summed over replicas."""
+        return (sum(e.metrics.prefill_compiles for e in self.engines),
+                sum(e.metrics.decode_compiles for e in self.engines))
+
+    def xla_compiles(self) -> Tuple[int, int]:
+        pf = dc = 0
+        for e in self.engines:
+            a, b = e.xla_compiles()
+            pf, dc = pf + a, dc + b
+        return pf, dc
+
+    def metrics_dict(self) -> Dict[str, object]:
+        per = [e.metrics.to_dict() for e in self.engines]
+        tokens = sum(m["tokens_out"] for m in per)
+        computed = sum(m["prefill_tokens_computed"] for m in per)
+        cached = sum(m["prefill_tokens_cached"] for m in per)
+        prompt = computed + cached
+        return {
+            "replicas": self.replicas,
+            "tokens_out": tokens,
+            "wall_s": self.wall_s,
+            "tokens_per_s": tokens / self.wall_s if self.wall_s > 0 else 0.0,
+            "prefill_tokens_computed": computed,
+            "prefill_tokens_cached": cached,
+            "prefix_hit_rate": cached / prompt if prompt else 0.0,
+            "prefix_evictions": sum(m["prefix_evictions"] for m in per),
+            "routed": list(self.router.routed),
+            "affinity_hits": self.router.affinity_hits,
+            "per_replica": per,
+        }
+
+
+def build_gateway(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
+                  data: int = 1, replicas: int = 1,
+                  prefix_cache: bool = True,
+                  eng: EngineConfig = EngineConfig(), params=None,
+                  init_seed: int = 0, kernel: Optional[str] = None,
+                  plan=None) -> Gateway:
+    """Convenience constructor mirroring ``engine.build_engine``: resolve a
+    serve plan whose ``n_devices`` is the per-replica share of the local
+    devices, then build the gateway on it."""
+    import jax
+
+    from repro.configs import registry
+    from repro.models.factory import build_model
+    from repro.plan import make_serve_plan
+
+    cfg = registry.get_smoke(arch) if smoke else registry.get(arch)
+    model = build_model(cfg)
+    if plan is None:
+        n_dev = len(jax.devices()) // max(replicas, 1)
+        plan = make_serve_plan(
+            cfg, arch=arch, n_devices=n_dev, data=data, c=c,
+            decode_batch=eng.max_slots, page_size=eng.page_size,
+            max_len=eng.max_len, mesh_kind="local", kernel_impl=kernel,
+            replicas=replicas, prefix_cache=prefix_cache)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(init_seed))
+    return Gateway(model, plan, eng, params)

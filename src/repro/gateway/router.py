@@ -1,0 +1,58 @@
+"""Request routing across engine replicas.
+
+Three signals, in priority order:
+
+* **session affinity** — a request carrying a ``session`` key goes to the
+  replica that served that session before (its earlier turns' KV pages are
+  in that replica's pool, so the prefix trie can hit them); the map is
+  sticky until the caller resets the gateway.
+* **prefix awareness** — otherwise each replica's trie is probed read-only
+  (``PrefixCache.match_len``) with the request's block hashes, and the
+  replica with the most cached prefix tokens wins: prefill work already
+  paid anywhere should never be paid again somewhere else.
+* **load** — ties (including the cold everyone-misses case) break to the
+  replica with the fewest outstanding tokens (queued + remaining decode
+  budget), then to the lowest replica index (deterministic routing — the
+  serving benchmark replays workloads across cache-on/off phases and needs
+  identical placement to compare tokens bit-for-bit).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+
+class Router:
+    def __init__(self, engines: Sequence, *, prefix_aware: bool = True):
+        self.engines = list(engines)
+        self.prefix_aware = prefix_aware
+        self.affinity: Dict[str, int] = {}
+        self.affinity_hits = 0
+        self.routed: List[int] = [0] * len(self.engines)
+
+    def load(self, i: int) -> int:
+        """Outstanding tokens on replica ``i`` (queued + admitted)."""
+        sched = self.engines[i].scheduler
+        t = sum(r.prompt_len + r.max_new_tokens for r in sched.queue)
+        t += sum(s.req.prompt_len + s.req.max_new_tokens - len(s.out)
+                 for s in sched.active())
+        return t
+
+    def cached_tokens(self, i: int, req) -> int:
+        cache = self.engines[i].prefix_cache
+        if not self.prefix_aware or cache is None:
+            return 0
+        return cache.match_len(cache.hashes(req.tokens)) * cache.page_size
+
+    def route(self, req, session: Optional[str] = None) -> int:
+        if session is not None and session in self.affinity:
+            i = self.affinity[session]
+            self.affinity_hits += 1
+        else:
+            i = min(range(len(self.engines)),
+                    key=lambda j: (-self.cached_tokens(j, req),
+                                   self.load(j), j))
+            if session is not None:
+                self.affinity[session] = i
+        self.routed[i] += 1
+        return i

@@ -26,12 +26,18 @@ for all four entry points:
 The Pallas block kernels take shared ``(S,)`` position vectors; call sites
 with *batched* ``(B, S)`` positions (per-sequence cache lengths) fall back
 to the reference implementation, which masks per row. The paged-decode
-kernel is the batched-positions fast path.
+kernel is the batched-positions fast path. The fallback is **explicit**:
+each occurrence is counted per entry point (``pallas_fallbacks()``) and
+logged once per entry point, so a serving path that silently lost its
+Pallas kernel shows up in logs and is assertable in tests (the counter
+ticks at *trace* time — once per jit compilation, not per step).
 """
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import collections
+import logging
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +45,31 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 
 IMPLS = ("ref", "pallas")
+
+_log = logging.getLogger(__name__)
+_fallbacks: collections.Counter = collections.Counter()
+
+
+def _note_fallback(entry: str) -> None:
+    """Record a pallas->ref fallback (batched per-row positions)."""
+    if not _fallbacks[entry]:
+        _log.warning(
+            "kernels.dispatch.%s: impl='pallas' requested with batched "
+            "(B, S) positions — falling back to the reference "
+            "implementation (the Pallas block kernels take shared (S,) "
+            "position vectors; see docs/SERVING.md, 'known gaps'). "
+            "Logged once; occurrences are counted in pallas_fallbacks().",
+            entry)
+    _fallbacks[entry] += 1
+
+
+def pallas_fallbacks() -> Dict[str, int]:
+    """Trace-time pallas->ref fallback counts, keyed by entry point."""
+    return dict(_fallbacks)
+
+
+def reset_pallas_fallbacks() -> None:
+    _fallbacks.clear()
 
 
 def resolve_impl(impl: Optional[str] = None) -> str:
@@ -62,12 +93,14 @@ def _batched_positions(*pos) -> bool:
 def block_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
               prefix_len=None, impl="ref") -> Tuple[jax.Array, jax.Array]:
     """Masked (Q block x K/V block) attention -> (o, lse) partials."""
-    if impl == "pallas" and not _batched_positions(pos_q, pos_k):
-        from repro.kernels import ops as _ops
+    if impl == "pallas":
+        if not _batched_positions(pos_q, pos_k):
+            from repro.kernels import ops as _ops
 
-        return _ops.flash_attention_fwd(
-            q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
-            prefix_len=prefix_len)
+            return _ops.flash_attention_fwd(
+                q, k, v, pos_q, pos_k, causal=causal, window=window,
+                scale=scale, prefix_len=prefix_len)
+        _note_fallback("block_fwd")
     return _ref.block_attention(
         q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
         prefix_len=prefix_len)
@@ -76,12 +109,14 @@ def block_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
 def block_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,
               window=None, scale=None, prefix_len=None, impl="ref"):
     """Flash backward for one block pair -> (dq, dk, dv) in float32."""
-    if impl == "pallas" and not _batched_positions(pos_q, pos_k):
-        from repro.kernels import ops as _ops
+    if impl == "pallas":
+        if not _batched_positions(pos_q, pos_k):
+            from repro.kernels import ops as _ops
 
-        return _ops.flash_attention_bwd(
-            q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
-            window=window, scale=scale, prefix_len=prefix_len)
+            return _ops.flash_attention_bwd(
+                q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
+                window=window, scale=scale, prefix_len=prefix_len)
+        _note_fallback("block_bwd")
     return _ref.block_attention_bwd(
         q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
         scale=scale, prefix_len=prefix_len)

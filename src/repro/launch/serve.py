@@ -16,6 +16,17 @@ engine and prints per-request generations + engine metrics):
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --smoke --devices 8 --c 1 --requests 8 --prompt-len 16 --gen 8
 
+**Gateway mode** (``--replicas N`` and/or ``--prefix-cache``) serves the
+workload through ``repro.gateway``: N engine replicas on disjoint device
+submeshes (``--devices`` is the total; the plan records the per-replica
+count), prefix-aware + load-aware routing with session affinity, and a
+shared ``--system-prompt-len``-token prefix on every request so the
+block-hash prefix cache has something to hit — per-request streams and the
+gateway's hit-rate/eviction/routing metrics are printed:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+      --smoke --devices 8 --replicas 2 --prefix-cache --requests 8
+
 ``--legacy`` keeps the pre-engine static-batch greedy path (one fixed batch,
 capacity-sized contiguous cache) — with the decode step compiled ONCE before
 the token loop, not per token.
@@ -125,6 +136,64 @@ def _engine_main(args, plan, cfg):
     return out
 
 
+def _gateway_main(args, plan, cfg):
+    import numpy as np
+
+    from repro.engine import EngineConfig, Request
+    from repro.gateway import Gateway
+    from repro.models.factory import build_model
+    from repro.plan import cost as plan_cost
+
+    model = build_model(cfg)
+    gw = Gateway(model, plan,
+                 EngineConfig(pages_per_shard=args.pages_per_shard))
+    rng = np.random.default_rng(args.seed)
+    vocab = cfg.vocab_size
+    sys_len = args.system_prompt_len
+    # two request families with distinct shared system prompts: prefix-aware
+    # routing steers each family to the replica holding its pages, so with
+    # --replicas 2 both replicas serve and both tries hit
+    shared = [rng.integers(0, vocab, sys_len).tolist() if sys_len else []
+              for _ in range(2)]
+    reqs = []
+    for i in range(args.requests):
+        tail = max(1, args.prompt_len // 2 + (i * 3) % (args.prompt_len + 1))
+        gen = max(1, args.gen // 2 + i % (args.gen + 1))
+        reqs.append(Request(
+            uid=f"req{i}",
+            tokens=shared[i % 2] + rng.integers(0, vocab, tail).tolist(),
+            max_new_tokens=gen, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed + i))
+    # each family is one "session" to exercise affinity too
+    for i, r in enumerate(reqs):
+        gw.add_request(r, session=f"sess{i % 2}" if sys_len else None)
+        gw.step()           # stream as we go (prints drain incrementally)
+    out = gw.run()
+    for r in reqs:
+        print(f"[gateway] {r.uid} (replica {gw._owner[r.uid]}): "
+              f"prompt_len={r.prompt_len} -> {out[r.uid]}")
+    stats = gw.metrics_dict()
+    per = stats.pop("per_replica")
+    print("[gateway] metrics: " + ", ".join(
+        f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in sorted(stats.items())))
+    for i, m in enumerate(per):
+        print(f"[gateway]   replica {i}: tokens={m['tokens_out']} "
+              f"hit_rate={m['prefix_hit_rate']:.3g} "
+              f"occupancy={m['occupancy']:.3g}")
+    if plan.prefix_cache and sys_len:
+        roi = plan_cost.prefix_cache_value(
+            cfg, prompt_len=sys_len + args.prompt_len, shared_len=sys_len,
+            requests=max(args.requests // plan.replicas, 2),
+            sp=plan.sp_size, page_size=plan.page_size,
+            pages_per_shard=args.pages_per_shard, max_len=args.gen)
+        print(f"[gateway] analytical cache value/replica: "
+              f"hit_rate~{roi['hit_rate']:.2f} "
+              f"saved_tokens~{roi['saved_tokens']} "
+              f"cache_pages={roi['cache_pages']} fits={roi['fits']}")
+    return out
+
+
 def _resolve_plan(args):
     from repro.configs import registry
     from repro.plan import ExecutionPlan, make_serve_plan
@@ -133,7 +202,8 @@ def _resolve_plan(args):
         plan = ExecutionPlan.load(args.plan)
         print(f"[serve] loaded plan {args.plan}: scheme={plan.scheme} "
               f"C={plan.c} R={plan.r} kernel={plan.kernel_impl} "
-              f"slots={plan.decode_batch} page={plan.page_size}")
+              f"slots={plan.decode_batch} page={plan.page_size} "
+              f"replicas={plan.replicas} prefix_cache={plan.prefix_cache}")
         if not plan.arch or plan.arch not in registry.ASSIGNED_ARCHS:
             raise SystemExit(
                 f"[serve] plan {args.plan} names unknown arch "
@@ -148,12 +218,16 @@ def _resolve_plan(args):
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
     # --smoke = forced-host/local mesh; otherwise the production mesh
     # (mesh_kind also encodes smoke-ness for --plan replay, as in
-    # launch.train)
+    # launch.train). With --replicas the plan's n_devices is the
+    # per-replica share of the visible devices.
+    replicas = max(args.replicas, 1)
+    n_dev = len(jax.devices()) // replicas
     plan = make_serve_plan(
-        cfg, arch=args.arch, n_devices=len(jax.devices()), data=args.data,
+        cfg, arch=args.arch, n_devices=n_dev, data=args.data,
         c=args.c, decode_batch=args.max_slots, page_size=args.page_size,
         max_len=args.max_len, mesh_kind="local" if args.smoke
-        else "production", kernel_impl=args.kernel)
+        else "production", kernel_impl=args.kernel,
+        replicas=replicas, prefix_cache=bool(args.prefix_cache))
     return plan, cfg
 
 
@@ -180,6 +254,17 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=8)
     # engine knobs
     ap.add_argument("--requests", type=int, default=8)
+    # gateway knobs
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas (gateway mode when > 1); "
+                         "--devices is split evenly across them")
+    ap.add_argument("--prefix-cache", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="block-hash prefix cache with COW page reuse "
+                         "(gateway mode)")
+    ap.add_argument("--system-prompt-len", type=int, default=32,
+                    help="shared prompt prefix length in gateway mode "
+                         "(0 = fully independent prompts)")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--pages-per-shard", type=int, default=128)
@@ -194,13 +279,14 @@ def main(argv=None):
 
     if args.plan and not args.devices:
         # a local-mesh plan records its forced-host device count; read it
-        # from the raw json (before anything can initialise the backend)
+        # from the raw json (before anything can initialise the backend).
+        # n_devices is per replica — the gateway needs the product.
         import json
 
         rec = json.loads(open(args.plan).read())
         rec = rec.get("plan", rec)
         if rec.get("mesh_kind") == "local":
-            args.devices = int(rec["n_devices"])
+            args.devices = int(rec["n_devices"]) * int(rec.get("replicas", 1))
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
@@ -209,13 +295,16 @@ def main(argv=None):
     print(f"[serve] plan: P_sp={plan.sp_size} scheme={plan.scheme} "
           f"C={plan.c} R={plan.r} data={plan.data} "
           f"kernel={plan.kernel_impl} slots={plan.decode_batch} "
-          f"page={plan.page_size} capacity={plan.seq_len}")
+          f"page={plan.page_size} capacity={plan.seq_len} "
+          f"replicas={plan.replicas} prefix_cache={plan.prefix_cache}")
     if args.save_plan:
         path = plan.save(args.save_plan)
         print(f"[serve] plan saved -> {path}")
 
     if args.legacy:
         return _legacy_main(args, plan, cfg)
+    if plan.replicas > 1 or plan.prefix_cache:
+        return _gateway_main(args, plan, cfg)
     return _engine_main(args, plan, cfg)
 
 

@@ -264,6 +264,113 @@ def rank_decode_kernels(cfg: ModelConfig, *, batch: int, cache_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Serving prefill cost and the prefix-cache capacity / hit-rate trade
+# ---------------------------------------------------------------------------
+
+def prefill_step_cost(cfg: ModelConfig, *, prompt_len: int,
+                      cached_len: int = 0, sp: int = 1,
+                      page_size: int = 8, dtype_bytes: int = 2,
+                      cluster: Optional[sch.ClusterModel] = None
+                      ) -> Dict[str, float]:
+    """Per-device cost of prefilling one request with ``cached_len`` of its
+    prompt served from the prefix cache.
+
+    Only the suffix tokens are forwarded: dense/MLP FLOPs scale linearly in
+    forwarded tokens (``2 * P_dense`` per token), attention quadratically
+    (suffix queries still score the cached keys — reading them from the
+    pool — but never recompute their K/V or their own rows). A cache hit
+    costs ~0 FLOPs per cached token: what remains is the page-pool *read*
+    of the cached K/V during the suffix's attention plus the page-table
+    writes (int32 per block), which is why the model prices cached tokens
+    in bytes, not FLOPs.
+
+    Returns {'flops', 'bytes', 'total_s', 'flops_saved', 'saved_frac'};
+    ``saved_frac`` is the fraction of the cold prefill FLOPs the cache
+    removed. ``benchmarks/serving_load.py`` reports this next to the
+    measured tokens/s.
+    """
+    if not 0 <= cached_len <= prompt_len:
+        raise ValueError(f"cached_len={cached_len} outside "
+                         f"[0, {prompt_len}]")
+    cl = cluster or sch.ClusterModel(sp_size=sp)
+    n_attn = max(num_attention_layers(cfg), 1)
+    dh = cfg.head_dim_
+    d = cfg.d_model
+    # dense params touched per token per layer (qkv/o + mlp), vocab head off
+    dense_per_layer = d * dh * (cfg.num_heads * 2 + cfg.num_kv_heads * 2) \
+        + 3 * d * cfg.d_ff
+
+    def attn_flops(q_tokens: int, k_tokens_extra: int) -> float:
+        # causal suffix scores ~ q*(q/2) within itself + q*cached keys
+        return 4.0 * cfg.num_heads * dh * (
+            q_tokens * q_tokens / 2.0 + q_tokens * k_tokens_extra)
+
+    suffix = prompt_len - cached_len
+    flops_cold = (2.0 * dense_per_layer * prompt_len * cfg.num_layers
+                  + n_attn * attn_flops(prompt_len, 0)) / sp
+    flops = (2.0 * dense_per_layer * suffix * cfg.num_layers
+             + n_attn * attn_flops(suffix, cached_len)) / sp
+    # cached K/V read once by the suffix attention; page-table writes are
+    # one int32 per (shard, block)
+    cached_blocks = cached_len // max(page_size, 1)
+    bytes_moved = n_attn * (2.0 * cached_len * cfg.num_kv_heads * dh
+                            * dtype_bytes) / sp + 4.0 * cached_blocks
+    flops_s = flops / cl.peak_flops
+    bytes_s = bytes_moved / hw.HBM_BW
+    return {"flops": flops, "bytes": bytes_moved,
+            "total_s": max(flops_s, bytes_s),
+            "flops_saved": flops_cold - flops,
+            "saved_frac": 1.0 - flops / flops_cold if flops_cold else 0.0}
+
+
+def prefix_cache_value(cfg: ModelConfig, *, prompt_len: int,
+                       shared_len: int, requests: int, sp: int,
+                       page_size: int, pages_per_shard: int,
+                       max_len: int = 0,
+                       cluster: Optional[sch.ClusterModel] = None
+                       ) -> Dict[str, float]:
+    """Price a prefix-cache capacity against the hit-rate it can sustain.
+
+    ``requests`` arrivals share a ``shared_len``-token prefix of their
+    ``prompt_len`` prompts. The cache can only hit what fits: retaining the
+    shared prefix costs ``ceil(shared_len / page_size)`` pages spread
+    round-robin over ``sp`` shards, *on top of* the live sequences' own
+    reservations — if the pool cannot hold prefix + one worst-case request,
+    every lookup misses and the value is zero. Otherwise the first request
+    pays the cold prefill and the remaining ``requests - 1`` save
+    ``prefill_step_cost(..., cached_len=shared_cacheable)`` each.
+
+    Returns {'hit_rate', 'saved_tokens', 'saved_flops', 'saved_s',
+    'cache_pages', 'fits'} — the analytical counterpart of the
+    ``prefix`` section the serving benchmark measures.
+    """
+    shared_cacheable = (shared_len // page_size) * page_size
+    cache_pages = -(-shared_cacheable // page_size)
+    # worst-case per-shard pages of one live request: ceil blocks, then
+    # ceil over the round-robin shards (Scheduler._blocks_for semantics)
+    worst_blocks = -(-(prompt_len + (max_len or prompt_len)) // page_size)
+    worst = -(-worst_blocks // sp)
+    fits = (-(-cache_pages // sp)) + worst <= pages_per_shard
+    if not fits or requests < 2 or shared_cacheable == 0:
+        return {"hit_rate": 0.0, "saved_tokens": 0, "saved_flops": 0.0,
+                "saved_s": 0.0, "cache_pages": cache_pages, "fits": fits}
+    per = prefill_step_cost(cfg, prompt_len=prompt_len,
+                            cached_len=shared_cacheable, sp=sp,
+                            page_size=page_size, cluster=cluster)
+    cold = prefill_step_cost(cfg, prompt_len=prompt_len, sp=sp,
+                             page_size=page_size, cluster=cluster)
+    warm = requests - 1
+    return {
+        "hit_rate": warm * shared_cacheable / (requests * prompt_len),
+        "saved_tokens": warm * shared_cacheable,
+        "saved_flops": warm * per["flops_saved"],
+        "saved_s": warm * (cold["total_s"] - per["total_s"]),
+        "cache_pages": cache_pages,
+        "fits": fits,
+    }
+
+
+# ---------------------------------------------------------------------------
 # Microbatch selection (gradient accumulation)
 # ---------------------------------------------------------------------------
 

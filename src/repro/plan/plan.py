@@ -58,6 +58,9 @@ class ExecutionPlan:
     decode_batch: int = 0          # engine decode slots (0 = not a serve plan)
     page_size: int = 0             # KV page tokens (0 = not a serve plan)
     kernel_impl: str = "ref"       # paged-decode kernel ('ref' | 'pallas')
+    replicas: int = 1              # gateway engine replicas (n_devices is
+    #                                the per-replica device count)
+    prefix_cache: bool = False     # block-hash prefix cache (repro.gateway)
 
     # ---- derived sizes ---------------------------------------------------
     @property
@@ -115,6 +118,13 @@ class ExecutionPlan:
             raise ValueError(
                 f"seq_len={self.seq_len} not divisible by "
                 f"page_size={self.page_size}")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if (self.replicas > 1 or self.prefix_cache) and not self.page_size:
+            raise ValueError(
+                "replicas/prefix_cache are serving-face knobs — only valid "
+                "on kind='decode' plans with decode_batch/page_size set "
+                "(build them with plan.make_serve_plan)")
         if self.kind == "train":
             if self.global_batch % self.dp_size != 0:
                 raise ValueError(
@@ -279,6 +289,7 @@ def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
                     kernel_impl: Optional[str] = None,
                     block_impl: Optional[str] = None,
                     sharding_rules: str = "default",
+                    replicas: int = 1, prefix_cache: bool = False,
                     cluster=None) -> ExecutionPlan:
     """Resolve one *serving* run (the engine's mesh + kernels) into a plan.
 
@@ -290,6 +301,12 @@ def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
     the same analytical ranking as training plans; for M=1 decode the ring
     degenerates to the lse-combine reduction, so the mesh factorisation
     mainly decides the *placement* of the cache shards.
+
+    ``replicas``/``prefix_cache`` fill the gateway face (``repro.gateway``):
+    ``n_devices`` is then the per-replica device count, and
+    ``cost.prefix_cache_value`` prices the cache capacity against the
+    hit-rate it can sustain (cached prefill tokens cost ~0 FLOPs — only
+    page-table writes).
     """
     import math
 
@@ -312,4 +329,5 @@ def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
                      kernel_impl=kernel_impl, sharding_rules=sharding_rules,
                      cluster=cluster)
     return dataclasses.replace(base, decode_batch=decode_batch,
-                               page_size=page_size)
+                               page_size=page_size, replicas=replicas,
+                               prefix_cache=prefix_cache)

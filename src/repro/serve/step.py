@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MambaConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.core import combine
 from repro.core import startrail as st
 from repro.dist import sharding as shard_rules
 from repro.kernels import dispatch as kernels
@@ -454,6 +455,163 @@ def lm_prefill(rt: Runtime, params, batch, cfg: ModelConfig,
         return last, {"stack": cache}
     next_tok = vocab_parallel_greedy(rt, head, last, cfg)
     return next_tok, {"stack": cache}
+
+
+def _attn_prefill_paged(rt: Runtime, p, x, pool_sub, cfg: ModelConfig,
+                        cached_len, prompt_len, table_row, page_size: int):
+    """One attention layer of the prefix-cached (suffix) prefill.
+
+    x: (1, S_loc, D) — the prompt *suffix* (positions ``cached_len ..``),
+      SP-sharded contiguously, right-padded to the compile bucket.
+    pool_sub: {'k','v'} this shard's page-pool slices
+      (pages_loc, page_size, Hkv, hd) for this layer.
+    table_row: (P_sp, W) the slot's full page-table row (static W — the
+      suffix prefill runs once per request, so unlike the decode step it
+      does not bucket the table width).
+    cached_len / prompt_len: traced scalars — tokens served from the prefix
+      cache / real prompt length.
+
+    The suffix attends to two disjoint key sets and the partials merge
+    exactly (``core.combine``):
+      * **cached prefix** — this shard's round-robin pages, read in place
+        (the tokens the cache hit lets us skip); queries are all-gathered
+        so each shard scores every suffix query against its own pages, and
+        a psum-combine (with lse) merges the shards;
+      * **suffix itself** — K/V all-gathered over SP (O(suffix), the same
+        order insert_prompt already pays), scored locally per shard.
+    The same gathered suffix K/V is then scattered into this shard's owned
+    pages, continuing the round-robin layout from block ``cached_len/ps``.
+
+    Attention here goes through the dispatch layer with ``impl='ref'``:
+    the Q/K sets are rectangular (S_loc x W*ps) with value-encoded
+    validity, which the square-block ring-step Pallas kernel does not
+    cover — prefill runs once per request, so this is not the serving hot
+    path (docs/SERVING.md, "known gaps").
+    """
+    B, S_loc = x.shape[0], x.shape[1]
+    sp = rt.sp_size()
+    rank = rt.sp_rank()
+    ps = page_size
+    h = blocks.rmsnorm(p["norm"], x, cfg.norm_eps)
+    wq = rt.dense(p["wq"], ("embed", "heads", "head_dim"))
+    wk = rt.dense(p["wk"], ("embed", "kv_heads", "head_dim"))
+    wv = rt.dense(p["wv"], ("embed", "kv_heads", "head_dim"))
+    wo = rt.dense(p["wo"], ("heads", "head_dim", "embed_out"))
+
+    pos_loc = cached_len + rt.positions_contig(S_loc)           # (S_loc,)
+    q = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wq), pos_loc,
+                    cfg.rope_theta)
+    k = blocks.rope(jnp.einsum("bsd,dhk->bshk", h, wk), pos_loc,
+                    cfg.rope_theta)
+    v = jnp.einsum("bsd,dhk->bshk", h, wv)
+
+    kg = rt.all_gather_model(k, axis=1)              # (1, S_b, Hkv, hd)
+    vg = rt.all_gather_model(v, axis=1)
+    qg = rt.all_gather_model(q, axis=1)              # (1, S_b, Hq, hd)
+    S_b = S_loc * sp
+    pos_all = cached_len + jnp.arange(S_b, dtype=jnp.int32)
+
+    # --- cached-prefix partial: every suffix query vs this shard's pages
+    tbl = jax.lax.dynamic_index_in_dim(table_row, rank, axis=0,
+                                       keepdims=False)          # (W,)
+    W = tbl.shape[0]
+    pages_loc = pool_sub["k"].shape[0]
+    safe = jnp.clip(tbl, 0, pages_loc - 1)
+    kp = pool_sub["k"][safe].reshape(1, W * ps, *pool_sub["k"].shape[2:])
+    vp = pool_sub["v"][safe].reshape(1, W * ps, *pool_sub["v"].shape[2:])
+    pos_pg = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * ps)[:, None] \
+        + jnp.arange(ps, dtype=jnp.int32)[None]
+    pos_pg = pos_pg.reshape(W * ps)
+    valid = jnp.repeat(tbl >= 0, ps) & (pos_pg < cached_len)
+    # invalid slots (unallocated, or suffix pages being written this very
+    # call) get pushed past every query position -> causally masked
+    pos_pg = jnp.where(valid, pos_pg, cached_len + S_b)
+    o_pre, lse_pre = kernels.block_fwd(
+        qg, kp.astype(qg.dtype), vp.astype(qg.dtype), pos_all, pos_pg,
+        causal=True, window=cfg.window, impl="ref")
+    o_pre, lse_pre = st.combine_partials_with_lse(o_pre, lse_pre,
+                                                  rt.sp_axes)
+    lo = rank * S_loc
+    o_pre = jax.lax.dynamic_slice_in_dim(o_pre, lo, S_loc, axis=1)
+    lse_pre = jax.lax.dynamic_slice_in_dim(lse_pre, lo, S_loc, axis=2)
+
+    # --- suffix self-attention partial (local queries, gathered keys)
+    o_suf, lse_suf = kernels.block_fwd(
+        q, kg, vg, pos_loc, pos_all, causal=True, window=cfg.window,
+        impl="ref")
+    o, _ = combine.combine_pair(o_pre, lse_pre, o_suf, lse_suf)
+    x = x + jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), wo)
+
+    # --- scatter the suffix K/V into this shard's owned pages
+    G = S_b // ps
+    kb = kg[0].reshape(G, ps, *kg.shape[2:])
+    vb = vg[0].reshape(G, ps, *vg.shape[2:])
+    start_block = cached_len // ps                   # cached_len % ps == 0
+    gidx = jnp.arange(G, dtype=jnp.int32)
+    gglob = start_block + gidx
+    j = gglob // sp
+    page = tbl[jnp.clip(j, 0, W - 1)]
+    mine = ((gglob % sp) == rank) & (gidx * ps < prompt_len - cached_len) \
+        & (j < W) & (page >= 0)
+    page = jnp.where(mine, page, pages_loc)          # OOB -> drop
+    pool_k = pool_sub["k"].at[page].set(kb.astype(pool_sub["k"].dtype),
+                                        mode="drop")
+    pool_v = pool_sub["v"].at[page].set(vb.astype(pool_sub["v"].dtype),
+                                        mode="drop")
+    return x, {"k": pool_k, "v": pool_v}
+
+
+def lm_prefill_paged(rt: Runtime, params, batch, cfg: ModelConfig, *,
+                     prompt_len, cached_len, pools, table_row,
+                     page_size: int):
+    """Prefix-cached prefill: forward only the prompt *suffix*, reading the
+    cached prefix KV from the paged pool and writing the suffix KV into the
+    reserved pages. Returns ``(last_hidden, new_pools)`` with the (1, 1, D)
+    hidden state of position ``prompt_len - 1`` replicated across SP.
+
+    batch: {tokens: (1, S_bucket)} — the suffix tokens (prompt positions
+      ``cached_len ..``), right-padded; prompt_len/cached_len: (1,) traced.
+    pools: {'stack': {subN: {'k','v'}}} this shard's full pool slices
+      (n_periods leading dim, scanned with the params).
+    table_row: (P_sp, W) the admitted slot's page-table row.
+
+    Only all-attention stacks reach this path (``paged_cache.supported``
+    gates the engine), so every mixer here is 'attn'.
+    """
+    pat = transformer.layer_pattern(cfg)
+    cl = jnp.asarray(prompt_len, jnp.int32)[0]
+    cc = jnp.asarray(cached_len, jnp.int32)[0]
+    tokens = batch["tokens"]
+    x = blocks.embed(rt, params["embed"], tokens, cfg)
+
+    def period_fn(x, p_and_pool):
+        p, pool = p_and_pool
+        new_pool = {}
+        for i, (mixer, mlp) in enumerate(pat):
+            assert mixer == "attn", "paged prefill covers attention mixers"
+            # MoE is unreachable too: Engine rejects prefix caching for MoE
+            # stacks (capacity couples prefix KV to the suffix)
+            assert mlp != "moe", "prefix-cached prefill excludes MoE"
+            x, new_pool[f"sub{i}"] = _attn_prefill_paged(
+                rt, p[f"sub{i}"]["mixer"], x, pool[f"sub{i}"], cfg,
+                cc, cl, table_row, page_size)
+            if mlp == "mlp":
+                x = blocks.mlp_block(rt, p[f"sub{i}"]["mlp"], x, cfg)
+        return x, new_pool
+
+    n_p = jax.tree.leaves(params["stack"])[0].shape[0]
+    x, new_subs = jax.lax.scan(period_fn, x,
+                               (params["stack"], pools["stack"]),
+                               unroll=n_p if rt.unroll_scans else 1)
+    x = blocks.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    # last real position prompt_len-1 sits at suffix offset pl-1-cached_len:
+    # one (shard, slot) matches; one-hot contraction + psum broadcasts it
+    target = cl - 1 - cc
+    pos = rt.positions_contig(x.shape[1])
+    onehot = (pos == target).astype(jnp.float32)[None]
+    last = jnp.einsum("bs,bsd->bd", onehot, x.astype(jnp.float32))[:, None]
+    last = jax.lax.psum(last, rt.sp_axes).astype(x.dtype)
+    return last, {"stack": new_subs}
 
 
 def encdec_prefill(rt: Runtime, params, batch, cfg: ModelConfig):

@@ -740,6 +740,153 @@ def check_engine_paged_kernel(arch="h2o-danube-1.8b"):
         (pc, dc), "pallas engine recompiled on replay"
 
 
+def check_gateway_prefix_cow(arch="h2o-danube-1.8b"):
+    """Acceptance (gateway prefix cache, C=2 mesh): two requests sharing a
+    long prefix then diverging produce exactly the tokens of solo
+    cold-cache runs — the second request's prefill reads the first's pages
+    in place (copy-on-write sharing, >0 hit rate) — and dropping the
+    shared prefix from the cache *while a request is live* never corrupts
+    it (ref counts keep the pages alive until the request finishes)."""
+    from repro.engine import EngineConfig, Request
+    from repro.gateway import build_gateway
+
+    eng_cfg = EngineConfig(max_slots=2, page_size=4, pages_per_shard=16,
+                           max_len=64)
+    gw = build_gateway(arch, smoke=True, c=2, data=1, replicas=1,
+                       prefix_cache=True, eng=eng_cfg)
+    assert gw.engines[0].sp == 8 and gw.plan.c == 2
+    rng = np.random.default_rng(11)
+    vocab = gw.cfg.vocab_size
+    shared = rng.integers(0, vocab, 16).tolist()
+    req_a = Request("a", shared + rng.integers(0, vocab, 5).tolist(), 4,
+                    seed=1)
+    req_b = Request("b", shared + rng.integers(0, vocab, 7).tolist(), 4,
+                    seed=2)
+
+    # --- shared-prefix serving: A cold, B hits A's pages
+    gw.add_request(req_a)
+    gw.step()                                     # A prefilled + registered
+    gw.add_request(req_b)
+    out = gw.run()
+    m = gw.engines[0].metrics
+    assert m.prefill_tokens_cached == 16, (
+        f"B should reuse A's 16 shared-prefix tokens, cached="
+        f"{m.prefill_tokens_cached}")
+    # shared blocks resolved to the SAME physical pages for both slots
+    cache = gw.engines[0].prefix_cache
+    assert cache.hit_tokens == 16 and cache.hit_rate > 0
+
+    # --- solo cold-cache references
+    cold = build_gateway(arch, smoke=True, c=2, data=1, replicas=1,
+                         prefix_cache=False, eng=eng_cfg)
+    for r in (req_a, req_b):
+        cold.reset()
+        cold.add_request(r)
+        solo = cold.run()
+        assert solo[r.uid] == out[r.uid], (
+            f"{r.uid}: cached {out[r.uid]} != solo cold {solo[r.uid]}")
+
+    # --- evict the shared prefix while a sharing request is LIVE
+    gw.reset()
+    gw.add_request(req_a)
+    gw.step()
+    gw.add_request(req_b)
+    gw.step()                                     # B admitted, sharing pages
+    live_cached = gw.engines[0].scheduler.active()
+    assert any(s.cached_len for s in live_cached), "B should be a live hit"
+    cache = gw.engines[0].prefix_cache
+    cache.drop_all()                              # cache lets go of *all*
+    #                                               holds; B still refs them
+    assert gw.engines[0].scheduler.pool.pages_in_use() > 0
+    out2 = gw.run()
+    assert out2 == out, (
+        f"evicting the shared prefix under a live request corrupted it:\n"
+        f"  before: {out}\n  after:  {out2}")
+    # prefix gone from the trie: a re-arrival misses but stays correct
+    gw.add_request(Request("a2", req_a.tokens, 4, seed=1))
+    pre = gw.engines[0].metrics.prefill_tokens_cached
+    out3 = gw.run()
+    assert gw.engines[0].metrics.prefill_tokens_cached == pre, \
+        "dropped prefix should not hit"
+    assert out3["a2"] == out["a"], "post-eviction cold rerun diverged"
+
+    # --- pool-pressure eviction: a tiny pool (2 pages/shard) fills with
+    # retained prompt blocks; fresh admissions must reclaim cache-only
+    # pages (leaf-first LRU) and serving proceeds
+    gp = build_gateway(arch, smoke=True, c=2, data=1, replicas=1,
+                       prefix_cache=True,
+                       eng=EngineConfig(max_slots=2, page_size=4,
+                                        pages_per_shard=2, max_len=64))
+    filler = [Request(f"f{i}", rng.integers(0, vocab, 9).tolist(), 1,
+                      seed=10 + i) for i in range(4)]
+    for r in filler:                              # retained after finish
+        gp.add_request(r)
+    out_f = gp.run()
+    big = Request("big", rng.integers(0, vocab, 24).tolist(), 8, seed=99)
+    gp.add_request(big)
+    out4 = gp.run()
+    assert len(out4["big"]) == 8 and all(
+        len(out_f[r.uid]) == 1 for r in filler)
+    assert gp.engines[0].prefix_cache.evicted_pages > 0, \
+        "pool pressure should have evicted cache-only pages"
+
+
+def check_gateway_replicas(arch="h2o-danube-1.8b"):
+    """Acceptance (multi-replica gateway): 2 engine replicas on disjoint
+    4-device C=2 submeshes; prefix-aware routing sends shared-prefix
+    traffic to the replica holding the pages, session affinity pins
+    sessions, and every request's tokens are bit-identical to a solo
+    cold-cache run on the same replica mesh."""
+    from repro.engine import EngineConfig, Request
+    from repro.gateway import build_gateway
+
+    eng_cfg = EngineConfig(max_slots=2, page_size=4, pages_per_shard=32,
+                           max_len=64)
+    gw = build_gateway(arch, smoke=True, c=2, data=1, replicas=2,
+                       prefix_cache=True, eng=eng_cfg)
+    assert len(gw.engines) == 2 and gw.plan.n_devices == 4
+    assert gw.engines[0].mesh.devices.ravel()[0] != \
+        gw.engines[1].mesh.devices.ravel()[0]
+    rng = np.random.default_rng(5)
+    vocab = gw.cfg.vocab_size
+    shared = rng.integers(0, vocab, 12).tolist()
+    reqs = {
+        "s0": Request("s0", shared + rng.integers(0, vocab, 3).tolist(), 3,
+                      seed=1),
+        "s1": Request("s1", shared + rng.integers(0, vocab, 5).tolist(), 3,
+                      seed=2),
+        "u0": Request("u0", rng.integers(0, vocab, 14).tolist(), 3, seed=3),
+        "aff": Request("aff", rng.integers(0, vocab, 9).tolist(), 3, seed=4),
+    }
+    r0 = gw.add_request(reqs["s0"])
+    gw.step()                                     # s0 registered on r0
+    assert gw.add_request(reqs["s1"]) == r0, \
+        "prefix-aware routing should follow s0's cached pages"
+    assert gw.add_request(reqs["u0"]) != r0, \
+        "load-aware routing should spread cold traffic"
+    gw.add_request(reqs["aff"], session="sess")
+    out = gw.run()
+    aff_replica = gw._owner["aff"]
+    late = Request("aff2", reqs["aff"].tokens, 3, seed=4)
+    assert gw.add_request(late, session="sess") == aff_replica, \
+        "session affinity should pin the replica"
+    out.update(gw.run())
+    assert out["aff2"] == out["aff"], "affinity rerun diverged"
+    m = gw.metrics_dict()
+    assert m["prefix_hit_rate"] > 0 and m["prefill_tokens_cached"] >= 12
+    assert m["affinity_hits"] == 1 and sorted(m["routed"])[-1] >= 2
+
+    # solo cold-cache runs, pinned to the replica that served each request
+    cold = build_gateway(arch, smoke=True, c=2, data=1, replicas=2,
+                         prefix_cache=False, eng=eng_cfg)
+    for uid, r in reqs.items():
+        cold.reset()
+        cold.add_request(r, replica=gw._owner[uid])
+        solo = cold.run()
+        assert solo[uid] == out[uid], (
+            f"{uid}: gateway {out[uid]} != solo cold {solo[uid]}")
+
+
 CHECKS.update({
     "greedy_tie": check_greedy_tie,
     "engine_sampling": check_engine_sampling,
@@ -747,6 +894,8 @@ CHECKS.update({
     "engine_moe": check_engine_moe,
     "paged_decode_dist": check_paged_decode_dist,
     "engine_paged_kernel": check_engine_paged_kernel,
+    "gateway_prefix_cow": check_gateway_prefix_cow,
+    "gateway_replicas": check_gateway_replicas,
 })
 
 

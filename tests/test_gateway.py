@@ -1,0 +1,325 @@
+"""Unit tests for the serving gateway: ref-counted page pool (double-free
+regression), block-hash trie + COW sharing + eviction (pure host-side),
+routing policy, and a single-device end-to-end prefix-cached gateway run
+(the SP=1 degenerate mesh — still through shard_map and the suffix-prefill
+jit path)."""
+
+import numpy as np
+import pytest
+
+from repro.engine import EngineConfig, Request, Scheduler
+from repro.engine.paged_cache import PagePool
+from repro.gateway import PrefixCache, Router, block_hashes
+
+
+# ---------------------------------------------------------------------------
+# PagePool: ref-counted free lists (no devices)
+# ---------------------------------------------------------------------------
+
+def test_pagepool_alloc_share_release():
+    pool = PagePool(sp=2, pages_per_shard=2)
+    p0 = pool.alloc(0)
+    pool.incref(0, p0)                      # a second sequence shares it
+    assert pool.pages_in_use() == 1
+    assert not pool.decref(0, p0)           # first release: still held
+    assert pool.decref(0, p0)               # second release frees
+    assert pool.pages_in_use() == 0
+
+
+def test_pagepool_double_free_raises():
+    pool = PagePool(sp=1, pages_per_shard=2)
+    page = pool.alloc(0)
+    pool.decref(0, page)
+    with pytest.raises(ValueError, match="double free"):
+        pool.decref(0, page)
+    with pytest.raises(ValueError, match="free page"):
+        pool.incref(0, page)                # resurrection is also an error
+
+
+def test_pagepool_exhaustion():
+    pool = PagePool(sp=1, pages_per_shard=1)
+    pool.alloc(0)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(0)
+
+
+# ---------------------------------------------------------------------------
+# block hashes
+# ---------------------------------------------------------------------------
+
+def test_block_hashes_chain():
+    a = block_hashes([1, 2, 3, 4, 5, 6, 7], page_size=4)
+    assert len(a) == 1                      # only full blocks
+    b = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], page_size=4)
+    assert a[0] == b[0]                     # shared first block
+    c = block_hashes([9, 1, 2, 3, 4], page_size=4)
+    assert c[0] != a[0]                     # position-qualified: shifted
+    #                                         content is a different prefix
+    d = block_hashes([1, 2, 3, 4, 9, 9, 9, 9], page_size=4)
+    assert b == d                           # deterministic
+
+
+# ---------------------------------------------------------------------------
+# Scheduler + PrefixCache (host-side: admission shares pages, COW holds)
+# ---------------------------------------------------------------------------
+
+def _cached_sched(pages_per_shard=8, sp=2, max_slots=2):
+    s = Scheduler(max_slots=max_slots, page_size=4, sp=sp,
+                  pages_per_shard=pages_per_shard, max_len=64)
+    s.prefix_cache = PrefixCache(s.pool, page_size=4, sp=sp)
+    return s
+
+
+def test_admission_shares_prefix_pages():
+    s = _cached_sched()
+    prompt = list(range(12))                # 3 full blocks
+    s.enqueue(Request("a", prompt + [90], 3))
+    [st_a] = s.admit(step=0)
+    assert st_a.cached_len == 0
+    s.register_prefix(st_a)                 # prefill landed: blocks cached
+    s.enqueue(Request("b", prompt + [91, 92], 3))
+    [st_b] = s.admit(step=1)
+    assert st_b.cached_len == 12            # 3 shared blocks
+    assert st_b.pages[:3] == st_a.pages[:3], "COW: same physical pages"
+    for shard, page in st_b.pages[:3]:
+        assert s.pool.refs[shard, page] == 3   # a + b + cache hold
+    # decode writes target blocks past the shared prefix only
+    shared = set(st_b.pages[:3])
+    assert not shared & set(st_b.pages[3:])
+    # finishing a does NOT free the shared pages (b + cache still hold)
+    s.finish(st_a.slot, step=2)
+    for shard, page in st_b.pages[:3]:
+        assert s.pool.refs[shard, page] == 2
+    s.finish(st_b.slot, step=3)
+    for shard, page in st_b.pages[:3]:
+        assert s.pool.refs[shard, page] == 1   # cache keeps them resident
+
+
+def test_scheduler_finish_double_free_regression():
+    """Regression: finish used to append pages to the free list
+    unconditionally — with sharing that double-frees. Now every release
+    goes through the ref-counted pool and over-release raises."""
+    s = _cached_sched()
+    s.enqueue(Request("a", list(range(9)), 2))
+    [st] = s.admit(step=0)
+    pages = list(st.pages)
+    s.register_prefix(st)
+    s.finish(st.slot, step=1)
+    for shard, page in pages[:2]:           # cached full blocks: held
+        assert s.pool.refs[shard, page] == 1
+    with pytest.raises(ValueError, match="double free"):
+        s.pool.decref(*pages[-1])           # already freed at finish
+
+
+def test_fully_cached_prompt_keeps_one_suffix_token():
+    s = _cached_sched()
+    prompt = list(range(8))                 # exactly 2 full blocks
+    s.enqueue(Request("a", prompt, 3))
+    [st_a] = s.admit(step=0)
+    s.register_prefix(st_a)
+    s.finish(st_a.slot, step=1)
+    s.enqueue(Request("b", prompt, 3))      # identical prompt
+    [st_b] = s.admit(step=2)
+    # only (prompt_len - 1) // ps = 1 block may hit: the last token must
+    # be forwarded to produce the first sampled token's hidden state
+    assert st_b.cached_len == 4
+
+
+def test_blocked_admission_is_side_effect_free():
+    """Regression: a head-of-line-blocked request must not evict cached
+    pages, refresh LRU stamps, or inflate hit/lookup stats — the probe is
+    read-only until admission is certain."""
+    s = _cached_sched(pages_per_shard=2, sp=2, max_slots=2)
+    cache = s.prefix_cache
+    # seed the cache with one retained block (a finishes, block 0 stays)
+    s.enqueue(Request("a", [1, 2, 3, 4, 5], 2))
+    [st_a] = s.admit(step=0)
+    s.register_prefix(st_a)
+    s.finish(st_a.slot, step=0)
+    # b occupies (and keeps live) one page per shard
+    s.enqueue(Request("b", [9] * 4, 3))         # 7 pos -> 2 blocks live
+    [st_b] = s.admit(step=1)
+    assert st_b.cached_len == 0
+    # c cannot fit: needs 2 shard-0 pages; 0 free + only 1 evictable
+    s.enqueue(Request("c", [8] * 9, 4))         # 13 pos -> 4 blocks
+    stats0 = cache.stats()
+    for step in range(2, 6):                    # engine retries every step
+        assert s.admit(step=step) == []
+    stats1 = cache.stats()
+    assert stats1 == stats0, "blocked retries skewed cache stats/trie"
+    assert cache.evicted_pages == 0, "blocked admission evicted pages"
+    assert cache.match_len(cache.hashes([1, 2, 3, 4])) == 1, \
+        "blocked admission dropped a cached block"
+    # once b finishes, c admits (evicting under real feasibility)
+    s.finish(st_b.slot, step=6)
+    [st_c] = s.admit(step=7)
+    assert st_c.req.uid == "c"
+    assert cache.evicted_pages == 1             # a's block, now reclaimed
+
+
+def test_eviction_lru_and_live_protection():
+    s = _cached_sched(pages_per_shard=2, sp=2, max_slots=2)
+    cache = s.prefix_cache
+    # a: 8 pos -> 2 blocks; 1 full block cached after finish
+    s.enqueue(Request("a", [1, 2, 3, 4, 5], 3))
+    [st_a] = s.admit(step=0)
+    s.register_prefix(st_a)
+    s.finish(st_a.slot, step=1)
+    # b shares a's block and stays LIVE
+    s.enqueue(Request("b", [1, 2, 3, 4, 9], 3))
+    [st_b] = s.admit(step=2)
+    assert st_b.cached_len == 4
+    shared = st_b.pages[0]
+    # c fills the pool -> must evict, but only cache-only pages; the
+    # shared block (live ref from b) survives in the pool
+    s.enqueue(Request("c", [7, 7, 7, 7, 8], 3))
+    [st_c] = s.admit(step=3)
+    assert st_c.cached_len == 0
+    assert s.pool.refs[shared] >= 1, "live shared page was freed"
+    assert st_b.pages[0] == shared
+    # dropping the cache while b is live never frees b's pages
+    cache.drop_all()
+    assert s.pool.refs[shared] == 1         # b's ref only
+    s.finish(st_b.slot, step=4)
+    assert s.pool.refs[shared] == 0         # now truly free
+
+
+# ---------------------------------------------------------------------------
+# Router (stub engines)
+# ---------------------------------------------------------------------------
+
+class _StubSched:
+    def __init__(self):
+        self.queue = []
+
+    def active(self):
+        return []
+
+
+class _StubEngine:
+    def __init__(self, cached):
+        self._cached = cached
+        self.scheduler = _StubSched()
+        self.prefix_cache = self
+
+    # PrefixCache protocol used by the router
+    page_size = 4
+
+    def hashes(self, tokens):
+        return tokens
+
+    def match_len(self, hashes):
+        return self._cached
+
+
+def test_router_prefers_prefix_then_load_then_index():
+    a, b = _StubEngine(cached=0), _StubEngine(cached=2)
+    r = Router([a, b])
+    req = Request("x", [1, 2, 3, 4, 5, 6, 7, 8], 2)
+    assert r.route(req) == 1                # 8 cached tokens beat empty
+    b._cached = 0
+    assert r.route(req) == 0                # tie -> lower index
+    a.scheduler.queue = [req]               # load on a
+    assert r.route(req) == 1
+
+
+def test_router_session_affinity_sticks():
+    a, b = _StubEngine(0), _StubEngine(0)
+    r = Router([a, b])
+    req = Request("x", [1] * 8, 2)
+    first = r.route(req, session="s")
+    b._cached = 99                          # would win without affinity
+    assert r.route(req, session="s") == first
+    assert r.affinity_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# end-to-end on the single-device (SP=1) mesh
+# ---------------------------------------------------------------------------
+
+def test_gateway_single_device_prefix_cache_end_to_end():
+    from repro.gateway import build_gateway
+
+    eng = EngineConfig(max_slots=2, page_size=4, pages_per_shard=32,
+                       max_len=64)
+    gw = build_gateway("h2o-danube-1.8b", smoke=True, c=1, data=1,
+                       replicas=1, prefix_cache=True, eng=eng)
+    rng = np.random.default_rng(0)
+    vocab = gw.cfg.vocab_size
+    shared = rng.integers(0, vocab, 16).tolist()
+    reqs = [Request(f"r{i}", shared + rng.integers(0, vocab, 3 + i).tolist(),
+                    4, seed=i) for i in range(3)]
+    for r in reqs:
+        gw.add_request(r)
+    out = gw.run()
+    m = gw.metrics_dict()
+    assert m["prefill_tokens_cached"] == 32      # r1 + r2 hit 16 each
+    assert m["prefix_hit_rate"] > 0.5
+    # streaming: every request's stream drains to its full output
+    assert all(gw.take(r.uid) == out[r.uid] for r in reqs)
+    assert gw.take(reqs[0].uid) == []            # drained
+    # bit-identical to cold-cache solo serving
+    cold = build_gateway("h2o-danube-1.8b", smoke=True, c=1, data=1,
+                         replicas=1, prefix_cache=False, eng=eng)
+    for r in reqs:
+        cold.reset()
+        cold.add_request(r)
+        assert cold.run()[r.uid] == out[r.uid], f"{r.uid} diverged"
+    # replay on warm buckets: zero new compiles, incl. the suffix path
+    compiles = gw.compiles()
+    gw.reset()
+    for r in reqs:
+        gw.add_request(r)
+    assert gw.run() == out, "replay diverged"
+    assert gw.compiles() == compiles, "recompiled on replay"
+    e = gw.engines[0]
+    assert e.xla_compiles() == (
+        len(e._prefill_fns) + len(e._suffix_fns), len(e._decode_fns)), \
+        "a bucket fn holds more than one XLA trace"
+
+
+def test_prefix_cache_rejected_for_moe():
+    from repro.gateway import build_gateway
+
+    with pytest.raises(NotImplementedError, match="MoE"):
+        build_gateway("phi3.5-moe-42b-a6.6b", smoke=True, c=1, data=1,
+                      replicas=1, prefix_cache=True,
+                      eng=EngineConfig(max_slots=1, page_size=4,
+                                       pages_per_shard=8, max_len=32))
+
+
+def test_serve_plan_gateway_face_round_trip(tmp_path):
+    from repro.configs import registry
+    from repro.plan import ExecutionPlan, make_serve_plan
+
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    plan = make_serve_plan(cfg, arch="h2o-danube-1.8b", n_devices=1,
+                           decode_batch=2, page_size=4, max_len=64,
+                           replicas=2, prefix_cache=True)
+    assert plan.replicas == 2 and plan.prefix_cache
+    path = plan.save(tmp_path / "plan.json")
+    assert ExecutionPlan.load(path) == plan
+    with pytest.raises(ValueError, match="serving-face"):
+        import dataclasses
+        dataclasses.replace(plan, page_size=0, decode_batch=0)
+
+
+def test_prefix_cache_cost_model():
+    from repro.configs import registry
+    from repro.plan import cost
+
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    cold = cost.prefill_step_cost(cfg, prompt_len=128, sp=4)
+    warm = cost.prefill_step_cost(cfg, prompt_len=128, cached_len=96, sp=4)
+    assert warm["flops"] < cold["flops"]
+    assert warm["saved_frac"] > 0.5         # 3/4 of the prompt cached
+    assert cold["saved_frac"] == 0.0
+    roi = cost.prefix_cache_value(cfg, prompt_len=128, shared_len=96,
+                                  requests=8, sp=4, page_size=8,
+                                  pages_per_shard=64, max_len=32)
+    assert roi["fits"] and roi["hit_rate"] > 0.5 and roi["saved_flops"] > 0
+    # a pool too small for prefix + one live request prices to zero
+    none = cost.prefix_cache_value(cfg, prompt_len=128, shared_len=96,
+                                   requests=8, sp=1, page_size=8,
+                                   pages_per_shard=16, max_len=32)
+    assert not none["fits"] and none["hit_rate"] == 0.0

@@ -194,6 +194,45 @@ def test_resolve_impl():
         dispatch.resolve_impl("cuda")
 
 
+def test_pallas_batched_positions_fallback_is_explicit():
+    """Known gap made loud: impl='pallas' with batched (B, S) positions
+    (per-sequence cache lengths) runs the reference implementation — the
+    fallback must be counted/queryable, taken exactly on the batched case,
+    and produce the ref results bit-for-bit."""
+    key = jax.random.PRNGKey(3)
+    q, k, v, _ = _data(key, 2, 8, 8, 2, 2, 16, jnp.float32)
+    pos_shared = jnp.arange(8, dtype=jnp.int32)
+    pos_batched = jnp.stack([pos_shared, pos_shared + 1])     # (B, S)
+
+    dispatch.reset_pallas_fallbacks()
+    o_pl, lse_pl = dispatch.block_fwd(q, k, v, pos_batched, pos_batched,
+                                      causal=True, impl="pallas")
+    assert dispatch.pallas_fallbacks() == {"block_fwd": 1}, \
+        "batched positions under impl='pallas' must record a fallback"
+    o_ref, lse_ref = ref.block_attention(q, k, v, pos_batched, pos_batched,
+                                         causal=True)
+    np.testing.assert_array_equal(np.asarray(o_pl), np.asarray(o_ref))
+    np.testing.assert_array_equal(np.asarray(lse_pl), np.asarray(lse_ref))
+
+    # shared (S,) positions do NOT fall back...
+    dispatch.reset_pallas_fallbacks()
+    dispatch.block_fwd(q, k, v, pos_shared, pos_shared, causal=True,
+                       impl="pallas")
+    assert dispatch.pallas_fallbacks() == {}
+    # ...and impl='ref' is not a fallback, it is the requested path
+    dispatch.block_fwd(q, k, v, pos_batched, pos_batched, causal=True,
+                       impl="ref")
+    assert dispatch.pallas_fallbacks() == {}
+    # the backward fallback is keyed separately
+    do = jnp.ones_like(q)
+    lse = lse_pl
+    delta = jnp.sum(o_pl * do, axis=-1).swapaxes(1, 2).astype(jnp.float32)
+    dispatch.block_bwd(q, k, v, do, lse, delta, pos_batched, pos_batched,
+                       causal=True, impl="pallas")
+    assert dispatch.pallas_fallbacks() == {"block_bwd": 1}
+    dispatch.reset_pallas_fallbacks()
+
+
 def test_no_direct_kernel_imports():
     """Grep-enforced: no module outside kernels/ imports kernels.ref /
     kernels.ops / kernels.flash_attention / kernels.paged_decode directly —

@@ -35,6 +35,9 @@ BATCHES = {
     "engine_paged_kernel": [
         "paged_decode_dist", "engine_paged_kernel",
     ],
+    "gateway_serving": [
+        "gateway_prefix_cow", "gateway_replicas",
+    ],
     "plan_and_microbatch": [
         "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",
         "plan_constructs",

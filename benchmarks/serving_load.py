@@ -30,6 +30,15 @@ tokens/s and the analytical capacity pricing
 bit-identical cached-vs-cold tokens, hit rate > 0, >50% prefill-token
 savings, a tokens/s improvement, and zero recompiles after warmup.
 
+A fourth phase (``chunked`` section) replays a mixed long/short Poisson
+workload with chunked prefill ON vs OFF (one engine each, shared params).
+Step time is priced on an *analytical clock* (``plan.cost``): CPU wall
+time cannot see the shorter per-step critical path chunking buys, so each
+step costs its decode launch plus each ``engine.last_step_prefills`` entry
+priced by ``prefill_step_cost``. ``--check`` gates bit-identical tokens,
+zero recompiles after warmup, and a lower p99 inter-token gap with
+chunking ON.
+
   PYTHONPATH=src python benchmarks/serving_load.py --smoke
   PYTHONPATH=src python benchmarks/serving_load.py --smoke --check  # CI gate
 """
@@ -289,6 +298,138 @@ def run_prefix_phase(args):
     return stats
 
 
+def build_chunked_workload(vocab, args):
+    """Mixed long/short Poisson arrivals: short decode-heavy requests keep
+    the batch busy while occasional long prompts arrive mid-stream — the
+    regime where a monolithic prefill stalls every decoding neighbour."""
+    import numpy as np
+
+    from repro.engine import Request
+
+    rng = np.random.default_rng(args.seed + 13)
+    inter = rng.exponential(1.0 / max(args.rate, 0.1), args.chunk_requests)
+    arrivals = np.floor(np.cumsum(inter)).astype(int)
+    reqs = []
+    for i in range(args.chunk_requests):
+        if i % 3 == 2:                       # every third request is long
+            plen = args.long_prompt
+            gen = int(rng.integers(2, 5))
+        else:
+            plen = int(rng.integers(3, 9))
+            gen = int(rng.integers(8, 17))
+        reqs.append(Request(
+            uid=f"ck{i}", tokens=rng.integers(0, vocab, plen).tolist(),
+            max_new_tokens=gen, seed=args.seed + 200 + i))
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def run_analytical_clock(engine, workload, *, decode_s, prefill_s,
+                         max_steps=100_000):
+    """Drive the engine while accumulating an *analytical* per-step clock.
+
+    On CPU every device launch takes roughly constant wall time, so the
+    latency benefit of chunking (shorter per-step critical path on real
+    hardware) is invisible in wall seconds. Instead each step is priced
+    with the plan.cost model: the decode launch (if one ran) plus one
+    ``prefill_s(start, end)`` per entry in ``engine.last_step_prefills``.
+    Token emission times on this clock give per-request inter-token gaps.
+    """
+    pending = sorted(workload, key=lambda p: p[0])
+    clock = 0.0
+    token_times = {}
+    decode_steps0 = engine.metrics.decode_steps
+    i = 0
+    while pending or not engine.idle():
+        step = engine.metrics.steps
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            engine.add_request(req)
+        emitted = engine.step()
+        dt = sum(prefill_s(s, e) for s, e in engine.last_step_prefills)
+        if engine.metrics.decode_steps > decode_steps0:
+            dt += decode_s
+            decode_steps0 = engine.metrics.decode_steps
+        clock += dt
+        for uid, _ in emitted:
+            token_times.setdefault(uid, []).append(clock)
+        i += 1
+        if i > max_steps:
+            raise RuntimeError("chunked phase did not drain")
+    gaps = sorted(t1 - t0 for times in token_times.values()
+                  for t0, t1 in zip(times, times[1:]))
+    p99 = gaps[int(0.99 * (len(gaps) - 1))] if gaps else 0.0
+    return {
+        "model_s": clock,
+        "gaps": len(gaps),
+        "p99_gap_s": p99,
+        "max_gap_s": gaps[-1] if gaps else 0.0,
+        "mean_gap_s": sum(gaps) / len(gaps) if gaps else 0.0,
+    }, engine.collect()
+
+
+def run_chunked_phase(args):
+    """Mixed long/short workload, chunked prefill ON vs OFF.
+
+    Both engines share one parameter set and serve the identical workload;
+    each gets an untimed warmup pass (compiling every chunk/prefill/decode
+    bucket), a reset, then a replay on the analytical clock. Gates (under
+    --check): bit-identical tokens, zero recompiles after warmup, and a
+    *lower p99 inter-token gap* with chunking ON — long prompts no longer
+    stall their decoding neighbours for a whole monolithic prefill.
+    """
+    from repro.engine import EngineConfig, build_engine
+    from repro.plan import cost as plan_cost
+
+    common = dict(max_slots=args.max_slots, page_size=args.page_size,
+                  pages_per_shard=args.pages_per_shard, max_len=args.max_len)
+    engines = {}
+    engines["off"] = build_engine(
+        args.arch, smoke=args.smoke, c=args.c, eng=EngineConfig(**common))
+    engines["on"] = build_engine(
+        args.arch, smoke=args.smoke, c=args.c,
+        eng=EngineConfig(prefill_chunk=args.prefill_chunk, **common),
+        params=engines["off"].params)
+    workload = build_chunked_workload(engines["off"].cfg.vocab_size, args)
+
+    cfg = engines["off"].cfg
+    sp = engines["off"].sp
+    decode_s = plan_cost.decode_step_cost(
+        cfg, batch=args.max_slots, cache_len=args.max_len, sp=sp,
+        page_size=args.page_size, kernel="pallas")["total_s"]
+
+    def prefill_s(start, end):
+        return plan_cost.prefill_step_cost(
+            cfg, prompt_len=end, cached_len=start, sp=sp,
+            page_size=args.page_size)["total_s"]
+
+    stats = {}
+    outs = {}
+    for mode, engine in engines.items():
+        run_continuous(engine, workload)            # untimed warmup
+        engine.reset()
+        compiles0 = (engine.metrics.prefill_compiles,
+                     engine.metrics.decode_compiles)
+        rep, outs[mode] = run_analytical_clock(
+            engine, workload, decode_s=decode_s, prefill_s=prefill_s)
+        rep["compiles_after_warmup"] = compiles0 == (
+            engine.metrics.prefill_compiles, engine.metrics.decode_compiles)
+        rep["steps"] = engine.metrics.steps
+        rep["prefill_chunks"] = engine.metrics.prefill_chunks
+        rep["pallas_fallbacks"] = engine.pallas_fallbacks()
+        stats[mode] = rep
+    stats["outputs_identical"] = outs["on"] == outs["off"]
+    stats["p99_improvement"] = (
+        stats["off"]["p99_gap_s"] / stats["on"]["p99_gap_s"]
+        if stats["on"]["p99_gap_s"] else 0.0)
+    stats["requests"] = args.chunk_requests
+    stats["prefill_chunk"] = args.prefill_chunk
+    stats["long_prompt"] = args.long_prompt
+    stats["analytical"] = plan_cost.chunked_prefill_cost(
+        cfg, prompt_len=args.long_prompt, chunk=args.prefill_chunk, sp=sp,
+        page_size=args.page_size)
+    return stats
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
@@ -325,6 +466,13 @@ def main(argv=None):
     ap.add_argument("--prefix-reps", type=int, default=3,
                     help="timed replays per prefix sub-phase (best wall "
                          "wins — sub-second phases need noise rejection)")
+    ap.add_argument("--chunk-requests", type=int, default=9,
+                    help="requests in the chunked-prefill latency phase "
+                         "(0 disables it)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="chunk size (tokens) of the chunked-prefill phase")
+    ap.add_argument("--long-prompt", type=int, default=48,
+                    help="long-prompt length of the chunked-prefill phase")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/BENCH_serving.json")
     ap.add_argument("--check", action="store_true",
@@ -365,6 +513,8 @@ def main(argv=None):
                if args.kernel_requests > 0 else None)
     prefix = (run_prefix_phase(args)
               if args.prefix_requests > 0 else None)
+    chunked = (run_chunked_phase(args)
+               if args.chunk_requests > 0 else None)
 
     identical = cont_out == seq_out
     result = {
@@ -389,6 +539,7 @@ def main(argv=None):
         "compiles_after_warmup": compiles1 == compiles0,
         "kernels": kernels,
         "prefix": prefix,
+        "chunked": chunked,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -411,6 +562,12 @@ def main(argv=None):
               f"{prefix['cached']['hit_rate']:.2f}, prefill savings "
               f"{prefix['prefill_savings_frac']:.2f}, identical: "
               f"{prefix['outputs_identical']}")
+    if chunked is not None:
+        print(f"[serving_load] chunked prefill: p99 gap "
+              f"{chunked['on']['p99_gap_s']:.3g}s (on) vs "
+              f"{chunked['off']['p99_gap_s']:.3g}s (off) "
+              f"({chunked['p99_improvement']:.2f}x better), identical: "
+              f"{chunked['outputs_identical']}")
     if args.check:
         assert identical, "batched outputs diverged from solo serving"
         assert result["compiles_after_warmup"], "recompiled after warmup"
@@ -436,6 +593,16 @@ def main(argv=None):
             for mode in ("cached", "cold"):
                 assert prefix[mode]["compiles_after_warmup"], (
                     f"prefix phase ({mode}) recompiled after warmup")
+        if chunked is not None:
+            assert chunked["outputs_identical"], (
+                "chunked-prefill tokens diverged from monolithic prefill")
+            assert chunked["on"]["p99_gap_s"] < chunked["off"]["p99_gap_s"], (
+                f"chunking did not lower p99 decode gap: "
+                f"{chunked['on']['p99_gap_s']:.3g}s >= "
+                f"{chunked['off']['p99_gap_s']:.3g}s")
+            for mode in ("on", "off"):
+                assert chunked[mode]["compiles_after_warmup"], (
+                    f"chunked phase ({mode}) recompiled after warmup")
     return result
 
 

@@ -53,6 +53,12 @@ class EngineConfig:
     max_len: int = 512          # max prompt_len + max_new_tokens
     max_top_k: int = 64         # static top-k candidate bound
     max_steps: int = 100_000    # runaway guard for run()
+    prefill_chunk: int = 0      # 0 = monolithic prefill; > 0 = split long
+    #                             prompts into chunks of ~this many tokens
+    #                             (rounded up to a compile bucket), one
+    #                             chunk per driver step, interleaved with
+    #                             decode so a long prompt never stalls the
+    #                             decoding batch
 
 
 @dataclasses.dataclass
@@ -62,6 +68,8 @@ class EngineMetrics:
     prefills: int = 0
     finished: int = 0
     tokens_out: int = 0
+    prefill_chunks: int = 0     # device prefill launches (>= prefills when
+    #                             chunking is on)
     prefill_compiles: int = 0
     decode_compiles: int = 0
     occupancy_sum: float = 0.0
@@ -147,6 +155,30 @@ class Engine:
         self._pool_part = paged_cache.pool_partition(cfg)
         self._sc = sampling_lib.SamplingConfig(max_top_k=eng.max_top_k)
         self._prefill_base = math.lcm(self.sp, eng.page_size)
+        # chunked prefill: the chunk is itself a compile bucket (a multiple
+        # of lcm(sp, page_size) so every chunk boundary is page-aligned on
+        # every shard and intermediate chunks need no padding)
+        self._chunk = 0
+        if eng.prefill_chunk > 0:
+            self._chunk = bucket_pow2(
+                max(eng.prefill_chunk, self._prefill_base),
+                self._prefill_base)
+            if any(mlp == "moe"
+                   for _, mlp in transformer.layer_pattern(cfg)):
+                # same coupling that forbids prefix caching: a chunk's
+                # tokens compete for expert capacity without the rest of
+                # the prompt, so chunked != monolithic for MoE stacks
+                raise NotImplementedError(
+                    f"repro.engine: {cfg.name}: chunked prefill is unsound "
+                    "for MoE stacks (expert capacity couples a chunk's "
+                    "tokens to the rest of the prompt)")
+        self._prefilling: List[SlotState] = []
+        self.last_step_prefills: List[Tuple[int, int]] = []
+        # the dispatch fallback counter is process-global; snapshot it so
+        # pallas_fallbacks() reports only traces this engine caused
+        from repro.kernels import dispatch as _dispatch
+
+        self._fallback_base = dict(_dispatch.pallas_fallbacks())
         # all pool (re)initialisation goes through one jitted zeroing fn so
         # every pool entering a step fn is a jit output — device_put arrays
         # carry a differently-typed sharding and would retrace the first
@@ -205,8 +237,24 @@ class Engine:
         cache — the pools are zeroed); keep compiled fns."""
         self.pools = self._zero_pools(self.pools)
         self.scheduler = self._new_scheduler()
+        self._prefilling = []
+        self.last_step_prefills = []
         self.metrics.reset(keep_compiles=True)
         self.metrics.pages_total = self.scheduler.pages_total()
+
+    def pallas_fallbacks(self) -> Dict[str, int]:
+        """Trace-time pallas->ref fallback counts attributable to *this*
+        engine. ``kernels.dispatch`` keeps one process-global counter;
+        without the ``__init__`` snapshot a fresh engine would inherit
+        every fallback any earlier engine (or test) traced."""
+        from repro.kernels import dispatch as _dispatch
+
+        out = {}
+        for k, v in _dispatch.pallas_fallbacks().items():
+            d = v - self._fallback_base.get(k, 0)
+            if d > 0:
+                out[k] = d
+        return out
 
     # ---- compiled-step caches ------------------------------------------
     def _prefill_bucket(self, prompt_len: int) -> int:
@@ -362,70 +410,109 @@ class Engine:
         return key
 
     # ---- driver ---------------------------------------------------------
+    def _advance_prefill(self, st: SlotState):
+        """Run one prefill chunk for ``st`` (the whole remaining prompt
+        when chunking is off). Returns the first sampled token when the
+        prompt completes, else None.
+
+        A leading chunk (``prefill_pos == 0``) runs the dense full-forward
+        prefill; every later chunk is a *suffix* prefill with
+        ``cached_len = prefill_pos`` — the pages earlier chunks (or the
+        prefix cache) populated are read in place, so one jit bucket
+        serves prefix hits and chunk continuations alike. Only the final
+        chunk's token is kept; its sampling fold (request seed, position
+        ``prompt_len``) is the same as the monolithic path's, so chunking
+        never changes the emitted stream.
+        """
+        req = st.req
+        m = self.metrics
+        start = st.prefill_pos
+        end = req.prompt_len if not self._chunk \
+            else min(start + self._chunk, req.prompt_len)
+        final = end == req.prompt_len
+        sampled = final and req.temperature > 0.0
+        sampling_args = (
+            np.asarray([req.temperature], np.float32),
+            np.asarray([req.top_k], np.int32),
+            np.asarray([req.top_p], np.float32),
+            self._base_key(req.seed))
+        if start:
+            suffix = end - start
+            bucket = self._prefill_bucket(suffix)
+            fn = self._suffix_fn(bucket, sampled)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :suffix] = req.tokens[start:end]
+            tok, self.pools = fn(
+                self.params, tokens, np.asarray([end], np.int32),
+                np.asarray([start], np.int32), self.pools,
+                self.scheduler.table[st.slot].copy(), *sampling_args)
+        else:
+            bucket = self._prefill_bucket(end)
+            fn = self._prefill_fn(bucket, sampled)
+            tokens = np.zeros((1, bucket), np.int32)
+            tokens[0, :end] = req.tokens[:end]
+            tok, self.pools = fn(
+                self.params, tokens, np.asarray([end], np.int32),
+                self.pools, self.scheduler.table[st.slot].copy(),
+                *sampling_args)
+        st.prefill_pos = end
+        m.prefill_tokens_computed += end - start
+        m.prefill_chunks += 1
+        self.last_step_prefills.append((start, end))
+        return int(np.asarray(tok)[0, 0]) if final else None
+
+    def _complete_prefill(self, st: SlotState, tok: int, emitted) -> None:
+        m = self.metrics
+        self._prefilling.remove(st)
+        self.scheduler.register_prefix(st)
+        m.prefill_tokens_cached += st.cached_len
+        st.cache_len = st.req.prompt_len
+        st.out.append(tok)
+        st.first_token_step = m.steps
+        emitted.append((st.req.uid, tok))
+        m.prefills += 1
+        m.tokens_out += 1
+        if st.done:
+            self.scheduler.finish(st.slot, m.steps)
+            m.finished += 1
+
     def step(self) -> List[Tuple[str, int]]:
-        """One driver iteration: admit (prefill-insert) + one decode step.
+        """One driver iteration: admit, advance prefills (one chunk each),
+        one decode step for every decoding slot.
 
         Returns the (uid, token) pairs emitted this step.
         """
         t0 = time.monotonic()
         emitted: List[Tuple[str, int]] = []
         m = self.metrics
+        self.last_step_prefills = []
+
+        # in-flight chunked prefills admitted on earlier steps: one chunk
+        # each, *before* this step's admissions (FIFO progress)
+        for st in list(self._prefilling):
+            tok = self._advance_prefill(st)
+            if tok is not None:
+                self._complete_prefill(st, tok, emitted)
 
         while True:
             # one at a time: each admission registers its prompt blocks
             # before the next is matched, so same-step bursts sharing a
-            # prefix hit the cache
+            # prefix hit the cache (a *chunked* long prompt registers only
+            # when its last chunk lands, steps later)
             batch = self.scheduler.admit(m.steps, limit=1)
             if not batch:
                 break
             st = batch[0]
-            req = st.req
-            if st.cached_len:
-                # prefix hit: forward only the uncached suffix; the cached
-                # blocks are read in place from the shared pool pages
-                suffix = req.prompt_len - st.cached_len
-                bucket = self._prefill_bucket(suffix)
-                fn = self._suffix_fn(bucket, req.temperature > 0.0)
-                tokens = np.zeros((1, bucket), np.int32)
-                tokens[0, :suffix] = req.tokens[st.cached_len:]
-                tok, self.pools = fn(
-                    self.params, tokens,
-                    np.asarray([req.prompt_len], np.int32),
-                    np.asarray([st.cached_len], np.int32), self.pools,
-                    self.scheduler.table[st.slot].copy(),
-                    np.asarray([req.temperature], np.float32),
-                    np.asarray([req.top_k], np.int32),
-                    np.asarray([req.top_p], np.float32),
-                    self._base_key(req.seed))
-            else:
-                bucket = self._prefill_bucket(req.prompt_len)
-                fn = self._prefill_fn(bucket, req.temperature > 0.0)
-                tokens = np.zeros((1, bucket), np.int32)
-                tokens[0, :req.prompt_len] = req.tokens
-                tok, self.pools = fn(
-                    self.params, tokens,
-                    np.asarray([req.prompt_len], np.int32), self.pools,
-                    self.scheduler.table[st.slot].copy(),
-                    np.asarray([req.temperature], np.float32),
-                    np.asarray([req.top_k], np.int32),
-                    np.asarray([req.top_p], np.float32),
-                    self._base_key(req.seed))
-            self.scheduler.register_prefix(st)
-            m.prefill_tokens_computed += req.prompt_len - st.cached_len
-            m.prefill_tokens_cached += st.cached_len
-            st.cache_len = req.prompt_len
-            st.out.append(int(np.asarray(tok)[0, 0]))
-            st.first_token_step = m.steps
-            emitted.append((req.uid, st.out[-1]))
-            m.prefills += 1
-            m.tokens_out += 1
-            if st.done:
-                self.scheduler.finish(st.slot, m.steps)
-                m.finished += 1
+            self._prefilling.append(st)
+            tok = self._advance_prefill(st)
+            if tok is not None:
+                self._complete_prefill(st, tok, emitted)
         if self.scheduler.prefix_cache is not None:
             m.prefix_evictions = self.scheduler.prefix_cache.evicted_pages
 
-        active = self.scheduler.active()
+        # decode: slots whose prefill has completed (mid-chunk slots hold
+        # pages but have no token stream yet)
+        active = [st for st in self.scheduler.active() if st.cache_len > 0]
         if active:
             width = self.scheduler.decode_width()
             sampled = any(st.req.temperature > 0.0 for st in active)

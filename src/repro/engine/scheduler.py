@@ -64,6 +64,10 @@ class SlotState:
     cached_len: int = 0                # leading prompt tokens from the prefix
     #                                    cache (multiple of page_size); the
     #                                    engine prefills only the suffix
+    prefill_pos: int = 0               # prompt tokens whose KV has landed in
+    #                                    pool pages (chunked prefill cursor;
+    #                                    starts at cached_len, reaches
+    #                                    prompt_len when prefill completes)
     out: List[int] = dataclasses.field(default_factory=list)
     pages: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     hashes: List[int] = dataclasses.field(default_factory=list)
@@ -208,6 +212,7 @@ class Scheduler:
             self.queue.popleft()
             st = SlotState(req=req, slot=free_slot, arrived_step=step,
                            cached_len=len(hits) * self.page_size,
+                           prefill_pos=len(hits) * self.page_size,
                            hashes=hashes)
             st.pages = hits + fresh
             for b, (shard, page) in enumerate(st.pages):

@@ -168,6 +168,17 @@ class Gateway:
             pf, dc = pf + a, dc + b
         return pf, dc
 
+    def pallas_fallbacks(self) -> Dict[str, int]:
+        """Trace-time pallas->ref fallback counts summed over the replica
+        engines (each engine deltas against its own construction-time
+        snapshot, so fallbacks traced by other engines or earlier tests in
+        the process never leak in)."""
+        out: Dict[str, int] = {}
+        for e in self.engines:
+            for k, v in e.pallas_fallbacks().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
     def metrics_dict(self) -> Dict[str, object]:
         per = [e.metrics.to_dict() for e in self.engines]
         tokens = sum(m["tokens_out"] for m in per)
@@ -185,6 +196,7 @@ class Gateway:
             "prefix_evictions": sum(m["prefix_evictions"] for m in per),
             "routed": list(self.router.routed),
             "affinity_hits": self.router.affinity_hits,
+            "pallas_fallbacks": self.pallas_fallbacks(),
             "per_replica": per,
         }
 

@@ -6,7 +6,7 @@ Every attention call site in ``core/``, ``serve/``, ``engine/`` and
 importing ``kernels.ref`` / ``kernels.ops`` / ``kernels.flash_attention``
 directly. One ``impl`` knob — ``'ref'`` (pure jnp, XLA-fused; CPU default)
 or ``'pallas'`` (TPU kernels, interpret-mode on CPU) — selects the backend
-for all four entry points:
+for the entry points:
 
     block_fwd / block_bwd  — one (Q block x K/V block) pair of the ring
                              step (online-softmax partials + flash backward)
@@ -18,19 +18,25 @@ for all four entry points:
                              page-table-indexed pool (no dense gather);
                              'pallas' runs kernels/paged_decode.py, 'ref'
                              gathers the pages and reuses the jnp oracle
+    paged_prefill          — suffix-query block vs the cached-prefix pages
+                             (the prefix-cached / chunked prefill partial);
+                             'pallas' runs kernels/paged_prefill.py, 'ref'
+                             gathers the pages densely
 
 ``resolve_impl(None)`` picks the backend default: ``'pallas'`` when
 ``jax.default_backend()`` is TPU, ``'ref'`` otherwise — the rule
 ``plan.make_plan`` applies to unset ``block_impl`` / ``kernel_impl`` knobs.
 
-The Pallas block kernels take shared ``(S,)`` position vectors; call sites
-with *batched* ``(B, S)`` positions (per-sequence cache lengths) fall back
-to the reference implementation, which masks per row. The paged-decode
-kernel is the batched-positions fast path. The fallback is **explicit**:
-each occurrence is counted per entry point (``pallas_fallbacks()``) and
-logged once per entry point, so a serving path that silently lost its
-Pallas kernel shows up in logs and is assertable in tests (the counter
-ticks at *trace* time — once per jit compilation, not per step).
+The Pallas *training* block kernels take shared ``(S,)`` position vectors;
+forward calls with *batched* ``(B, S)`` positions (per-sequence cache
+lengths) run the scalar-prefetch ragged kernel
+(``kernels/ragged_prefill.py``) — they no longer fall back to the
+reference. The backward pass has no ragged kernel yet, so ``block_bwd``
+with batched positions still falls back, **explicitly**: each occurrence
+is counted per entry point (``pallas_fallbacks()``) and logged once per
+entry point, so a path that silently lost its Pallas kernel shows up in
+logs and is assertable in tests (the counter ticks at *trace* time — once
+per jit compilation, not per step).
 """
 
 from __future__ import annotations
@@ -100,7 +106,12 @@ def block_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
             return _ops.flash_attention_fwd(
                 q, k, v, pos_q, pos_k, causal=causal, window=window,
                 scale=scale, prefix_len=prefix_len)
-        _note_fallback("block_fwd")
+        # batched (B, S) positions: the scalar-prefetch ragged kernel
+        from repro.kernels import ragged_prefill as _ragged
+
+        return _ragged.ragged_prefill_fwd(
+            q, k, v, pos_q, pos_k, causal=causal, window=window,
+            scale=scale, prefix_len=prefix_len)
     return _ref.block_attention(
         q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
         prefix_len=prefix_len)
@@ -186,6 +197,51 @@ def paged_decode(q, pool_k, pool_v, table, cache_len, rank, *, sp: int,
     pos_q = cache_len[:, None]
     return decode(q, k_r, v_r, pos_q, pos_k, causal=True, window=window,
                   scale=scale, impl="ref")
+
+
+def paged_prefill(q, pool_k, pool_v, table, cached_len, rank, *, sp: int,
+                  page_size: int, window=None, scale=None,
+                  impl="ref") -> Tuple[jax.Array, jax.Array]:
+    """Suffix queries vs this shard's cached-prefix pages -> partial (o, lse).
+
+    q: (B, Sq, Hq, D) — row b's query i sits at global position
+    ``cached_len[b] + i`` (the prompt suffix, bucket-padded);
+    pool_k/pool_v: (pages_loc, page_size, Hkv, D); table: (B, W) local page
+    ids (-1 = unallocated); cached_len: (B,) tokens already in the pool;
+    rank: traced scalar SP rank. Keys at positions ``< cached_len`` are
+    visible (strict — the suffix scores itself through the dense partial),
+    page ``w`` covering ``[(w*sp + rank)*page_size, ...)`` (round-robin).
+
+    'pallas' streams page-table-indexed tiles through
+    ``kernels/paged_prefill.py``; 'ref' gathers the pages into a dense
+    (B, W*page_size) view and masks positionally — bit-for-bit the
+    suffix prefill's pre-dispatch behaviour.
+    """
+    if impl == "pallas":
+        from repro.kernels import paged_prefill as _paged_pre
+
+        return _paged_pre.paged_prefill_attention(
+            q, pool_k, pool_v, table, cached_len, rank, sp=sp,
+            page_size=page_size, window=window, scale=scale)
+
+    pages_loc = pool_k.shape[0]
+    B, W = table.shape
+    Sq = q.shape[1]
+    safe = jnp.clip(table, 0, pages_loc - 1)
+    k_r = pool_k[safe].reshape(B, W * page_size, *pool_k.shape[2:])
+    v_r = pool_v[safe].reshape(B, W * page_size, *pool_v.shape[2:])
+    pos = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * page_size)[:, None] \
+        + jnp.arange(page_size, dtype=jnp.int32)[None]
+    pos = pos.reshape(W * page_size)
+    valid = jnp.repeat(table >= 0, page_size, axis=1)
+    valid &= pos[None] < cached_len[:, None]
+    # invalid slots (unallocated, or suffix pages being written this very
+    # call) get pushed past every query position -> causally masked
+    pos_k = jnp.where(valid, pos[None], (cached_len + Sq)[:, None])
+    pos_q = cached_len[:, None] + jnp.arange(Sq, dtype=jnp.int32)[None]
+    return block_fwd(q, k_r.astype(q.dtype), v_r.astype(q.dtype), pos_q,
+                     pos_k, causal=True, window=window, scale=scale,
+                     impl="ref")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,189 @@
+"""Pallas TPU ragged flash-prefill kernel: batched per-row positions via
+scalar prefetch.
+
+The training kernel (``flash_attention.py``) takes *shared* ``(S,)``
+position vectors as array inputs — every row of the batch sees the same
+mask. Serving buckets are ragged: each row carries its own cache length,
+and the engine encodes validity positionally (``pos_k`` of an unfilled
+slot is pushed past the query so the causal mask kills it), which makes
+the positions ``(B, S)`` arrays. Those calls used to fall back to the jnp
+reference; this kernel retires that fallback.
+
+Following ``kernels/paged_decode.py``, the per-row position arrays ride in
+as *scalar-prefetch* operands (``pltpu.PrefetchScalarGridSpec``): they are
+available in SMEM before the tile DMAs land, so the kernel slices the
+current row's position window with ``pl.ds`` and both builds the per-tile
+mask and decides tile liveness (``pl.when`` skip of fully-masked tiles)
+without touching VMEM. Per-row *lengths* are the positional encoding of
+these arrays — a row with ``len`` valid keys has its remaining ``pos_k``
+entries pushed past every query.
+
+Layouts match ``repro.kernels.ref`` with batched positions:
+    q (B, Sq, Hq, D); k, v (B, Sk, Hkv, D); pos_q (B, Sq); pos_k (B, Sk)
+    o (B, Sq, Hq, D) f32; lse (B, Hq, Sq) f32
+GQA is native (K/V index maps divide the query head by G = Hq // Hkv).
+Rows whose every key is masked (len = 0) finalise to ``(o=0, lse=-inf)``
+— exact under ``core.combine.combine_pair``.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.block_attention``
+(tests/test_prefill_kernels.py); compiled path targets TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.combine import NEG_INF
+from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
+                                           _mask_tile, _tile_live)
+
+
+def choose_block(s: int, pref: int) -> int:
+    """Largest tile size <= pref dividing s (non-power-of-two rows tile
+    at their largest aligned divisor instead of raising)."""
+    for d in range(min(pref, s), 0, -1):
+        if s % d == 0:
+            return d
+    return s
+
+
+def _fwd_kernel(pos_q_ref, pos_k_ref,                    # scalar prefetch
+                q_ref, k_ref, v_ref,                     # inputs
+                o_ref, lse_ref,                          # outputs
+                acc_ref, m_ref, l_ref,                   # scratch
+                *, causal, window, scale, prefix_len, block_q, block_k, n_k):
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # this row's position window, straight from SMEM
+    pos_q = pos_q_ref[b, pl.ds(iq * block_q, block_q)]
+    pos_k = pos_k_ref[b, pl.ds(ik * block_k, block_k)]
+
+    @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)   # (bq, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)   # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        mask = _mask_tile(pos_q, pos_k, causal, window, prefix_len)
+        if mask is not None:
+            s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(m_cur <= NEG_INF / 2, 0.0, m_cur)
+        p = jnp.exp(s - m_safe[:, None])
+        if mask is not None:
+            p = p * mask
+        alpha = jnp.where(
+            m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_cur
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        m = m_ref[...]
+        l = l_ref[...]
+        dead = m <= NEG_INF / 2
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        lse_ref[0, 0, :] = jnp.where(
+            dead, NEG_INF, jnp.where(dead, 0.0, m) + jnp.log(l_safe)
+        ).astype(lse_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "prefix_len", "block_q",
+                     "block_k", "interpret"),
+)
+def ragged_prefill_fwd(
+    q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
+    prefix_len=None, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
+    interpret=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Batched-positions block flash attention -> (o, lse).
+
+    Same semantics as ``ref.block_attention`` with ``(B, Sq)`` / ``(B, Sk)``
+    positions (shared ``(S,)`` vectors are broadcast). The position arrays
+    are scalar-prefetch operands — per-row masks and tile-skip decisions
+    come from SMEM, never from an extra VMEM stream.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = 1.0 / (D ** 0.5)
+    pos_q = jnp.asarray(pos_q, jnp.int32)
+    pos_k = jnp.asarray(pos_k, jnp.int32)
+    if pos_q.ndim == 1:
+        pos_q = jnp.broadcast_to(pos_q[None], (B, Sq))
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None], (B, Sk))
+    block_q = choose_block(Sq, block_q)
+    block_k = choose_block(Sk, block_k)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    kernel = functools.partial(
+        _fwd_kernel, causal=causal, window=window, scale=scale,
+        prefix_len=prefix_len, block_q=block_q, block_k=block_k, n_k=n_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, iq, ik, pq, pk: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik, pq, pk: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, iq, ik, pq, pk: (b, ik, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, iq, ik, pq, pk: (b, iq, h, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda b, h, iq, ik, pq, pk: (b, h, iq)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+    )
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+
+    o, lse = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v)
+    return o, lse

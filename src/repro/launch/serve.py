@@ -111,7 +111,8 @@ def _engine_main(args, plan, cfg):
 
     model = build_model(cfg)
     engine = Engine(model, plan,
-                    EngineConfig(pages_per_shard=args.pages_per_shard))
+                    EngineConfig(pages_per_shard=args.pages_per_shard,
+                                 prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
     vocab = engine.cfg.vocab_size
     reqs = []
@@ -146,7 +147,8 @@ def _gateway_main(args, plan, cfg):
 
     model = build_model(cfg)
     gw = Gateway(model, plan,
-                 EngineConfig(pages_per_shard=args.pages_per_shard))
+                 EngineConfig(pages_per_shard=args.pages_per_shard,
+                              prefill_chunk=args.prefill_chunk))
     rng = np.random.default_rng(args.seed)
     vocab = cfg.vocab_size
     sys_len = args.system_prompt_len
@@ -268,6 +270,10 @@ def main(argv=None):
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--pages-per-shard", type=int, default=128)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split long prompts into ~this many tokens per "
+                         "driver step (rounded up to a compile bucket), "
+                         "interleaved with decode; 0 = monolithic prefill")
     ap.add_argument("--max-len", type=int, default=512)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)

@@ -22,6 +22,7 @@ paper-§3.4 topology scheduler at C > 1.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig, ShapeConfig
@@ -321,6 +322,69 @@ def prefill_step_cost(cfg: ModelConfig, *, prompt_len: int,
             "total_s": max(flops_s, bytes_s),
             "flops_saved": flops_cold - flops,
             "saved_frac": 1.0 - flops / flops_cold if flops_cold else 0.0}
+
+
+def chunked_prefill_cost(cfg: ModelConfig, *, prompt_len: int,
+                         cached_len: int = 0, chunk: int = 0, sp: int = 1,
+                         page_size: int = 8, dtype_bytes: int = 2,
+                         cluster: Optional[sch.ClusterModel] = None
+                         ) -> Dict[str, object]:
+    """Price a chunked prefill against the monolithic one.
+
+    Mirrors the engine's chunking rule: the chunk is rounded up to a
+    compile bucket (a power-of-two multiple of ``lcm(sp, page_size)``), and
+    chunk ``k`` runs as a suffix prefill with ``cached_len`` equal to the
+    tokens already landed — so its attention re-reads the earlier chunks'
+    K/V from the pool. Chunking therefore *costs* total time (the re-reads,
+    plus quadratic self-attention lost to the split) and *buys* latency:
+    the longest single device launch shrinks from the whole prompt to one
+    chunk, which is what bounds the decode stall a co-scheduled batch sees.
+
+    Returns ``{'chunks': [per-chunk prefill_step_cost + start/end],
+    'n_chunks', 'total_s', 'monolithic_s', 'overhead_frac', 'max_step_s',
+    'monolithic_step_s'}``; ``chunk=0`` degenerates to one chunk with zero
+    overhead. ``benchmarks/serving_load.py`` reports the measured p99
+    decode gap next to this model.
+    """
+    if not 0 <= cached_len <= prompt_len:
+        raise ValueError(f"cached_len={cached_len} outside "
+                         f"[0, {prompt_len}]")
+    base = math.lcm(sp, page_size)
+    step = 0
+    if chunk > 0:
+        step = base
+        while step < max(chunk, base):
+            step *= 2
+    bounds = []
+    start = cached_len
+    while start < prompt_len:
+        end = prompt_len if not step else min(start + step, prompt_len)
+        bounds.append((start, end))
+        start = end
+    if not bounds:                      # fully cached prompt
+        bounds = [(cached_len, prompt_len)]
+    chunks = []
+    for s, e in bounds:
+        c = prefill_step_cost(cfg, prompt_len=e, cached_len=s, sp=sp,
+                              page_size=page_size, dtype_bytes=dtype_bytes,
+                              cluster=cluster)
+        c["start"], c["end"] = s, e
+        chunks.append(c)
+    mono = prefill_step_cost(cfg, prompt_len=prompt_len,
+                             cached_len=cached_len, sp=sp,
+                             page_size=page_size, dtype_bytes=dtype_bytes,
+                             cluster=cluster)
+    total_s = sum(c["total_s"] for c in chunks)
+    return {
+        "chunks": chunks,
+        "n_chunks": len(chunks),
+        "total_s": total_s,
+        "monolithic_s": mono["total_s"],
+        "overhead_frac": (total_s / mono["total_s"] - 1.0
+                          if mono["total_s"] else 0.0),
+        "max_step_s": max(c["total_s"] for c in chunks),
+        "monolithic_step_s": mono["total_s"],
+    }
 
 
 def prefix_cache_value(cfg: ModelConfig, *, prompt_len: int,

@@ -106,7 +106,8 @@ def _attn_decode(rt: Runtime, p, x, cache, cfg: ModelConfig, cache_len,
         rt.st_cfg, causal=True, window=cfg.window, prefix_len=None)
     if rt.mode == "local":
         o = kernels.prefill(q, k_cache, v_cache, pos_new, pos_k,
-                            causal=True, window=cfg.window)
+                            causal=True, window=cfg.window,
+                            impl=rt.kernel_impl)
     else:
         o = st.decode_attention(q, k_cache, v_cache, pos_new, pos_k, cfg_st)
     out = jnp.einsum("bshk,hkd->bsd", o, wo)
@@ -482,11 +483,12 @@ def _attn_prefill_paged(rt: Runtime, p, x, pool_sub, cfg: ModelConfig,
     The same gathered suffix K/V is then scattered into this shard's owned
     pages, continuing the round-robin layout from block ``cached_len/ps``.
 
-    Attention here goes through the dispatch layer with ``impl='ref'``:
-    the Q/K sets are rectangular (S_loc x W*ps) with value-encoded
-    validity, which the square-block ring-step Pallas kernel does not
-    cover — prefill runs once per request, so this is not the serving hot
-    path (docs/SERVING.md, "known gaps").
+    Attention here goes through the dispatch layer with the runtime's
+    ``kernel_impl``: the cached-prefix partial dispatches to
+    ``kernels.paged_prefill`` (under 'pallas' the kernel DMAs prefix K/V
+    tiles straight off the page table — no dense gather), and the suffix
+    self-attention partial runs the shared-position flash kernel (its
+    positions are 1-D traced vectors).
     """
     B, S_loc = x.shape[0], x.shape[1]
     sp = rt.sp_size()
@@ -516,19 +518,10 @@ def _attn_prefill_paged(rt: Runtime, p, x, pool_sub, cfg: ModelConfig,
                                        keepdims=False)          # (W,)
     W = tbl.shape[0]
     pages_loc = pool_sub["k"].shape[0]
-    safe = jnp.clip(tbl, 0, pages_loc - 1)
-    kp = pool_sub["k"][safe].reshape(1, W * ps, *pool_sub["k"].shape[2:])
-    vp = pool_sub["v"][safe].reshape(1, W * ps, *pool_sub["v"].shape[2:])
-    pos_pg = ((jnp.arange(W, dtype=jnp.int32) * sp + rank) * ps)[:, None] \
-        + jnp.arange(ps, dtype=jnp.int32)[None]
-    pos_pg = pos_pg.reshape(W * ps)
-    valid = jnp.repeat(tbl >= 0, ps) & (pos_pg < cached_len)
-    # invalid slots (unallocated, or suffix pages being written this very
-    # call) get pushed past every query position -> causally masked
-    pos_pg = jnp.where(valid, pos_pg, cached_len + S_b)
-    o_pre, lse_pre = kernels.block_fwd(
-        qg, kp.astype(qg.dtype), vp.astype(qg.dtype), pos_all, pos_pg,
-        causal=True, window=cfg.window, impl="ref")
+    o_pre, lse_pre = kernels.paged_prefill(
+        qg, pool_sub["k"], pool_sub["v"], tbl[None],
+        jnp.reshape(cached_len, (1,)).astype(jnp.int32), rank, sp=sp,
+        page_size=ps, window=cfg.window, impl=rt.kernel_impl)
     o_pre, lse_pre = st.combine_partials_with_lse(o_pre, lse_pre,
                                                   rt.sp_axes)
     lo = rank * S_loc
@@ -538,7 +531,7 @@ def _attn_prefill_paged(rt: Runtime, p, x, pool_sub, cfg: ModelConfig,
     # --- suffix self-attention partial (local queries, gathered keys)
     o_suf, lse_suf = kernels.block_fwd(
         q, kg, vg, pos_loc, pos_all, causal=True, window=cfg.window,
-        impl="ref")
+        impl=rt.kernel_impl)
     o, _ = combine.combine_pair(o_pre, lse_pre, o_suf, lse_suf)
     x = x + jnp.einsum("bshk,hkd->bsd", o.astype(x.dtype), wo)
 

@@ -887,6 +887,68 @@ def check_gateway_replicas(arch="h2o-danube-1.8b"):
             f"{uid}: gateway {out[uid]} != solo cold {solo[uid]}")
 
 
+def check_chunked_prefill_dist(arch="h2o-danube-1.8b"):
+    """Acceptance (chunked prefill, C=2 mesh): splitting long prompts into
+    bucket-aligned chunks across driver steps emits bit-identical tokens
+    to monolithic prefill on the SP-sharded paged pool. Both engines run
+    kernel_impl='pallas' (interpret mode on CPU), so every suffix chunk
+    exercises the Pallas paged-prefill kernel against the sharded page
+    table and the dense chunk partial runs the ragged/flash kernels — with
+    zero pallas->ref fallbacks; a replay on the warm chunked engine must
+    add no compiles."""
+    from repro.engine import EngineConfig, Request, build_engine
+
+    common = dict(max_slots=2, page_size=4, pages_per_shard=16, max_len=64)
+
+    def workload(vocab):
+        rng = np.random.default_rng(5)
+        return [
+            Request(uid="long", tokens=rng.integers(0, vocab, 23).tolist(),
+                    max_new_tokens=3, seed=1),
+            Request(uid="short", tokens=rng.integers(0, vocab, 5).tolist(),
+                    max_new_tokens=4, temperature=0.8, top_k=8, top_p=0.9,
+                    seed=2),
+            Request(uid="mid", tokens=rng.integers(0, vocab, 13).tolist(),
+                    max_new_tokens=2, seed=3),
+        ]
+
+    outs = {}
+    engines = {}
+    params = None
+    for mode, chunk in (("mono", 0), ("chunked", 8)):
+        eng = build_engine(arch, smoke=True, c=2, data=1, kernel="pallas",
+                           eng=EngineConfig(prefill_chunk=chunk, **common),
+                           params=params)
+        params = eng.params
+        reqs = workload(eng.cfg.vocab_size)
+        eng.add_request(reqs[0])
+        eng.add_request(reqs[1])
+        eng.step()
+        eng.add_request(reqs[2])            # joins mid-stream
+        outs[mode] = eng.run()
+        assert eng.pallas_fallbacks() == {}, (
+            f"{mode}: pallas->ref fallbacks traced: "
+            f"{eng.pallas_fallbacks()}")
+        engines[mode] = eng
+    assert engines["chunked"].metrics.prefill_chunks > \
+        engines["chunked"].metrics.prefills, "long prompts did not chunk"
+    assert outs["chunked"] == outs["mono"], (
+        f"chunked tokens diverged from monolithic prefill:\n"
+        f"  mono:    {outs['mono']}\n  chunked: {outs['chunked']}")
+
+    eng = engines["chunked"]
+    pc, dc = eng.metrics.prefill_compiles, eng.metrics.decode_compiles
+    eng.reset()
+    reqs = workload(eng.cfg.vocab_size)
+    eng.add_request(reqs[0])
+    eng.add_request(reqs[1])
+    eng.step()
+    eng.add_request(reqs[2])
+    assert eng.run() == outs["chunked"], "chunked replay diverged"
+    assert (eng.metrics.prefill_compiles, eng.metrics.decode_compiles) == \
+        (pc, dc), "chunked engine recompiled on replay"
+
+
 CHECKS.update({
     "greedy_tie": check_greedy_tie,
     "engine_sampling": check_engine_sampling,
@@ -896,6 +958,7 @@ CHECKS.update({
     "engine_paged_kernel": check_engine_paged_kernel,
     "gateway_prefix_cow": check_gateway_prefix_cow,
     "gateway_replicas": check_gateway_replicas,
+    "chunked_prefill_dist": check_chunked_prefill_dist,
 })
 
 

@@ -217,3 +217,126 @@ def test_unserveable_request_rejected_at_enqueue():
         # 40 positions -> 10 blocks on the 1-shard pool of 4 pages: would
         # head-of-line block forever; must be rejected up front
         eng.add_request(Request("big", [1] * 30, 10))
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: schedule fuzzing + per-engine fallback accounting
+# ---------------------------------------------------------------------------
+
+_CHUNK_CTX = {}
+
+
+def _chunk_engine():
+    """One shared engine + request pool + monolithic baseline, built once:
+    every fuzz example reuses the compile caches and only varies the chunk
+    size and arrival order."""
+    if not _CHUNK_CTX:
+        from repro.engine import EngineConfig, build_engine
+
+        eng = build_engine("h2o-danube-1.8b", smoke=True, c=1, data=1,
+                           eng=EngineConfig(max_slots=2, page_size=4,
+                                            pages_per_shard=32, max_len=64))
+        rng = np.random.default_rng(7)
+        vocab = eng.cfg.vocab_size
+        reqs = [
+            Request("long", rng.integers(0, vocab, 23).tolist(), 3),
+            Request("short", rng.integers(0, vocab, 5).tolist(), 6),
+            Request("sampled", rng.integers(0, vocab, 17).tolist(), 4,
+                    temperature=0.8, top_k=8, top_p=0.9, seed=11),
+            Request("mid", rng.integers(0, vocab, 9).tolist(), 5),
+        ]
+        for r in reqs:
+            eng.add_request(r)
+        base = eng.run()
+        _CHUNK_CTX.update(eng=eng, reqs=reqs, base=base)
+    return _CHUNK_CTX
+
+
+def _run_with_invariants(eng, order):
+    """Drive the engine over staggered arrivals, asserting after every step
+    that no slot ever holds more pages than its admission reserved."""
+    reserved = {}
+    pending = list(order)
+    steps = 0
+    while pending or not eng.idle():
+        if pending:
+            eng.add_request(pending.pop(0))
+        eng.step()
+        live = eng.scheduler.active()
+        for st in live:
+            uid = st.req.uid
+            if uid not in reserved:
+                reserved[uid] = len(st.pages)
+            assert len(st.pages) == reserved[uid], (
+                f"{uid}: pages grew after admission "
+                f"({reserved[uid]} -> {len(st.pages)})")
+        assert eng.scheduler.pages_in_use() <= sum(
+            len(st.pages) for st in live), "pool holds unaccounted pages"
+        steps += 1
+        assert steps < 500, "engine did not drain"
+    return eng.collect()
+
+
+def test_chunked_prefill_schedule_property():
+    """Property: any chunk size x any arrival order produces tokens
+    bit-identical to the monolithic prefill, without ever exceeding the
+    page reservation made at admission (chunks never allocate)."""
+    import random as _random
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    ctx = _chunk_engine()
+    eng, reqs, base = ctx["eng"], ctx["reqs"], ctx["base"]
+
+    @settings(max_examples=8)
+    @given(st.sampled_from([0, 4, 8, 16]), st.integers(0, 7))
+    def prop(chunk, order_seed):
+        eng.reset()
+        # the knob the EngineConfig would have set (bucket-rounded)
+        eng._chunk = 0 if not chunk else bucket_pow2(
+            max(chunk, eng._prefill_base), eng._prefill_base)
+        order = list(reqs)
+        _random.Random(order_seed).shuffle(order)
+        out = _run_with_invariants(eng, order)
+        assert out == base, (
+            f"chunk={chunk} order_seed={order_seed} diverged from "
+            "monolithic prefill")
+        if eng._chunk and eng._chunk < 32:
+            assert eng.metrics.prefill_chunks > eng.metrics.prefills, \
+                "long prompts did not actually split into chunks"
+
+    prop()
+    eng._chunk = 0                           # restore for other tests
+
+
+def test_engine_pallas_fallbacks_per_instance():
+    """Regression: dispatch's fallback counter is process-global; each
+    engine must report only the fallbacks traced since *its* construction,
+    not inherit history from earlier engines or tests."""
+    from repro.engine import EngineConfig, build_engine
+    from repro.kernels import dispatch as kd
+
+    ctx = _chunk_engine()
+    eng = ctx["eng"]
+    base = eng.pallas_fallbacks()
+    # the whole engine suite so far: zero batched-positions prefill
+    # fallbacks (the ragged kernel serves that case now)
+    assert base.get("block_fwd", 0) == 0 and base.get("prefill", 0) == 0
+    kd._note_fallback("block_bwd")           # some other code traces one
+    try:
+        assert eng.pallas_fallbacks().get("block_bwd", 0) == \
+            base.get("block_bwd", 0) + 1
+        eng2 = build_engine("h2o-danube-1.8b", smoke=True, c=1, data=1,
+                            eng=EngineConfig(max_slots=2, page_size=4,
+                                             pages_per_shard=32, max_len=64),
+                            params=eng.params)
+        assert eng2.pallas_fallbacks() == {}, (
+            "a fresh engine inherited fallbacks traced before its "
+            "construction")
+        kd._note_fallback("block_bwd")
+        assert eng2.pallas_fallbacks() == {"block_bwd": 1}
+        assert eng.pallas_fallbacks().get("block_bwd", 0) == \
+            base.get("block_bwd", 0) + 2
+    finally:
+        kd._fallbacks["block_bwd"] -= 2      # undo the synthetic ticks

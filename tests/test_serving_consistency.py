@@ -117,3 +117,85 @@ def test_prefill_then_decode_matches_full_forward(arch):
         rt, p, c, t, cfg, S - 1))(params, cache, tokens[:, S - 1:S])
     assert int(np.asarray(tok_d)[0, 0]) == int(ref_argmax[S - 1]), (
         f"{arch}: decode next-token != full-forward argmax at {S - 1}")
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill: every paged-engine (attention-mixer) arch
+# ---------------------------------------------------------------------------
+
+def _paged_archs():
+    from repro.engine import paged_cache
+
+    out = []
+    for a in ARCHS:
+        cfg = registry.get_smoke(a)
+        if paged_cache.supported(cfg)[0] and cfg.moe is None:
+            out.append(a)
+    return out
+
+
+@pytest.mark.parametrize("arch", _paged_archs())
+def test_chunked_prefill_consistency(arch):
+    """Chunked == monolithic == train-path argmax, per attention-mixer
+    arch: a greedy request whose prompt splits into several chunks must
+    emit the same tokens as the unchunked engine, and every emitted token
+    must equal the full-forward greedy continuation."""
+    from repro.engine import EngineConfig, Request, build_engine
+
+    eng = build_engine(arch, smoke=True, c=1, data=1,
+                       eng=EngineConfig(max_slots=1, page_size=4,
+                                        pages_per_shard=32, max_len=64,
+                                        prefill_chunk=8))
+    cfg = eng.cfg
+    prompt = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(2), (S - 1,), 0, cfg.vocab_size, jnp.int32))
+    req = dict(uid="c", tokens=prompt.tolist(), max_new_tokens=3)
+
+    eng.add_request(Request(**req))
+    out_chunked = eng.run()["c"]
+    assert eng.metrics.prefill_chunks > eng.metrics.prefills, (
+        f"{arch}: the {S - 1}-token prompt did not split into chunks")
+
+    eng.reset()
+    eng._chunk = 0                           # same engine, monolithic
+    eng.add_request(Request(**req))
+    out_mono = eng.run()["c"]
+    assert out_chunked == out_mono, (
+        f"{arch}: chunked prefill diverged from monolithic: "
+        f"{out_chunked} != {out_mono}")
+
+    # train-path reference: greedy continuation via the full forward
+    seq = prompt.tolist()
+    for i, tok in enumerate(out_chunked):
+        s_ref = ((len(seq) + 7) // 8) * 8    # causal right-padding
+        padded = np.zeros((1, s_ref), np.int32)
+        padded[0, :len(seq)] = seq
+        ref = np.asarray(jax.jit(
+            lambda p, t: _full_logits(eng.model, p, t))(
+                eng.params, jnp.asarray(padded)))
+        want = int(ref.argmax(-1)[0, len(seq) - 1])
+        assert tok == want, (
+            f"{arch}: chunked token {i} = {tok} != train-path argmax {want}")
+        seq.append(tok)
+
+
+def test_chunked_prefill_rejected_for_moe():
+    """Expert capacity couples a chunk's tokens to the rest of the prompt —
+    the engine must refuse the knob rather than silently diverge."""
+    from repro.engine import EngineConfig, build_engine
+
+    moe = [a for a in ARCHS if registry.get_smoke(a).moe is not None
+           and _paged_supported(a)]
+    if not moe:
+        pytest.skip("no paged MoE arch assigned")
+    with pytest.raises(NotImplementedError, match="chunked prefill"):
+        build_engine(moe[0], smoke=True, c=1, data=1,
+                     eng=EngineConfig(max_slots=1, page_size=4,
+                                      pages_per_shard=32, max_len=64,
+                                      prefill_chunk=8))
+
+
+def _paged_supported(arch):
+    from repro.engine import paged_cache
+
+    return paged_cache.supported(registry.get_smoke(arch))[0]

@@ -33,7 +33,7 @@ BATCHES = {
         "greedy_tie", "engine_sampling", "engine_mixed", "engine_moe",
     ],
     "engine_paged_kernel": [
-        "paged_decode_dist", "engine_paged_kernel",
+        "paged_decode_dist", "engine_paged_kernel", "chunked_prefill_dist",
     ],
     "gateway_serving": [
         "gateway_prefix_cow", "gateway_replicas",

@@ -10,7 +10,12 @@ numbers compare *steady-state serving*, not jit time.
 
 Reports aggregate tokens/s, per-request latency (steps and seconds), batch
 occupancy and page utilization, and writes the result JSON (default
-``results/BENCH_serving.json``).
+``results/BENCH_serving.json``). Latency quantiles (TTFT and inter-token
+p50/p95/p99) come from the engine's ``repro.obs`` histograms — the same
+fixed-bucket series a Prometheus scrape would see — and the ``--check``
+zero-recompile gates likewise read the compile counters back off the
+*exported* metric surface (Prometheus text round-trip), not in-process
+attributes.
 
 A second, reduced phase compares the two paged-decode kernels on the same
 workload: ``kernel_impl='ref'`` (dense page gather + jnp oracle) vs
@@ -47,6 +52,22 @@ import argparse
 import json
 import os
 import time
+
+
+def exported_compiles(registry):
+    """(prefill, decode) bucket-compile totals read back off the *exported*
+    metric surface: render the obs registry to Prometheus text and parse
+    it, so the zero-recompile gate checks exactly what a scraper would
+    see rather than the in-process attribute shims. Sums over labels, so
+    a gateway's shared registry aggregates its replicas."""
+    from repro import obs
+
+    parsed = obs.parse_prometheus(registry.render_prometheus())
+    pf = sum(v for (name, _), v in parsed.items()
+             if name == "engine_prefill_compiles_total")
+    dc = sum(v for (name, _), v in parsed.items()
+             if name == "engine_decode_compiles_total")
+    return pf, dc
 
 
 def build_workload(engine, args):
@@ -103,6 +124,10 @@ def run_continuous(engine, workload, max_steps=100_000):
         "latency_steps_max": max(lat_steps),
         "decode_compiles": engine.metrics.decode_compiles,
         "prefill_compiles": engine.metrics.prefill_compiles,
+        # TTFT / inter-token p50/p95/p99 off the obs histograms (wall
+        # seconds; the engine reset before this phase cleared warmup's
+        # observations, so these are the timed phase's alone)
+        "latency": engine.metrics.latency_quantiles(),
     }, out
 
 
@@ -151,16 +176,15 @@ def run_kernel_compare(args, workload):
                              max_len=args.max_len))
         run_continuous(engine, sub)          # untimed warmup
         engine.reset()
-        compiles0 = (engine.metrics.prefill_compiles,
-                     engine.metrics.decode_compiles)
+        compiles0 = exported_compiles(engine.registry)
         timed, toks = run_continuous(engine, sub)
-        compiles1 = (engine.metrics.prefill_compiles,
-                     engine.metrics.decode_compiles)
+        compiles1 = exported_compiles(engine.registry)
         out[kern] = toks
         stats[kern] = {
             "tokens_per_s": timed["tokens_per_s"],
             "wall_s": timed["wall_s"],
             "tokens": timed["tokens"],
+            "latency": timed["latency"],
             "compiles_after_warmup": compiles1 == compiles0,
         }
         # analytical decode pricing at this phase's shape (per step)
@@ -224,6 +248,7 @@ def run_gateway(gw, workload, pins=None, max_steps=100_000):
         "hit_rate": m["prefix_hit_rate"],
         "prefix_evictions": m["prefix_evictions"],
         "routed": m["routed"],
+        "latency": gw.latency_quantiles(),
     }, out
 
 
@@ -259,7 +284,7 @@ def run_prefix_phase(args):
         run_gateway(gw, workload, pins=pins)         # untimed warmup
         if mode == "cached":
             pins = dict(gw._owner)                   # replay placements
-        compiles0[mode] = gw.compiles()
+        compiles0[mode] = exported_compiles(gw.registry)
         gws[mode] = gw
     # best-of-N timed replays, cached/cold INTERLEAVED so ambient machine
     # noise hits both modes equally (the phases run in fractions of a
@@ -275,7 +300,7 @@ def run_prefix_phase(args):
                 stats[mode] = rep
     for mode, gw in gws.items():
         stats[mode]["compiles_after_warmup"] = \
-            gw.compiles() == compiles0[mode]
+            exported_compiles(gw.registry) == compiles0[mode]
     total_prompt = (stats["cached"]["prefill_tokens_computed"]
                     + stats["cached"]["prefill_tokens_cached"])
     stats["outputs_identical"] = outs["cached"] == outs["cold"]
@@ -407,12 +432,12 @@ def run_chunked_phase(args):
     for mode, engine in engines.items():
         run_continuous(engine, workload)            # untimed warmup
         engine.reset()
-        compiles0 = (engine.metrics.prefill_compiles,
-                     engine.metrics.decode_compiles)
+        compiles0 = exported_compiles(engine.registry)
         rep, outs[mode] = run_analytical_clock(
             engine, workload, decode_s=decode_s, prefill_s=prefill_s)
-        rep["compiles_after_warmup"] = compiles0 == (
-            engine.metrics.prefill_compiles, engine.metrics.decode_compiles)
+        rep["compiles_after_warmup"] = \
+            compiles0 == exported_compiles(engine.registry)
+        rep["latency"] = engine.metrics.latency_quantiles()
         rep["steps"] = engine.metrics.steps
         rep["prefill_chunks"] = engine.metrics.prefill_chunks
         rep["pallas_fallbacks"] = engine.pallas_fallbacks()
@@ -500,14 +525,12 @@ def main(argv=None):
     # untimed warmup pass: populates every prefill/decode bucket
     warm, _ = run_continuous(engine, workload)
     engine.reset()
-    compiles0 = (engine.metrics.prefill_compiles,
-                 engine.metrics.decode_compiles)
+    compiles0 = exported_compiles(engine.registry)
 
     cont, cont_out = run_continuous(engine, workload)
     engine.reset()
     seq, seq_out = run_sequential(engine, workload)
-    compiles1 = (engine.metrics.prefill_compiles,
-                 engine.metrics.decode_compiles)
+    compiles1 = exported_compiles(engine.registry)
 
     kernels = (run_kernel_compare(args, workload)
                if args.kernel_requests > 0 else None)

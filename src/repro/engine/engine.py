@@ -32,17 +32,21 @@ position), never by slot or step index.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.dist.sharding import SP_AXES
 from repro.engine import paged_cache, sampling as sampling_lib
 from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
 from repro.models import transformer
 from repro.models.factory import Model
+
+_ENGINE_IDS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,35 +65,88 @@ class EngineConfig:
     #                             decoding batch
 
 
-@dataclasses.dataclass
 class EngineMetrics:
-    steps: int = 0
-    decode_steps: int = 0
-    prefills: int = 0
-    finished: int = 0
-    tokens_out: int = 0
-    prefill_chunks: int = 0     # device prefill launches (>= prefills when
-    #                             chunking is on)
-    prefill_compiles: int = 0
-    decode_compiles: int = 0
-    occupancy_sum: float = 0.0
-    peak_pages: int = 0
-    pages_total: int = 0
-    wall_s: float = 0.0
-    # prefix-cache accounting (zero when the cache is off)
-    prefill_tokens_computed: int = 0   # prompt tokens actually forwarded
-    prefill_tokens_cached: int = 0     # prompt tokens served from the cache
-    prefix_evictions: int = 0          # cache pages dropped under pressure
+    """Registry-backed engine metrics.
+
+    Keeps the attribute interface the driver and every existing consumer
+    use (``m.steps += 1``, ``to_dict()``, ``reset(keep_compiles=True)``)
+    while each field lives as a labeled series in an ``obs.Registry`` —
+    one scrape of the registry sees every engine (gateway replicas share
+    a registry, distinguished by a ``replica`` label). Counter-kind
+    fields render as ``engine_*_total`` counters, level-kind fields as
+    gauges; the TTFT / inter-token latency histograms ride in the same
+    registry (observed by the engine driver, not through this class).
+    """
+
+    # attribute -> (metric name, kind, python type)
+    _SPECS = {
+        "steps": ("engine_steps_total", "counter", int),
+        "decode_steps": ("engine_decode_steps_total", "counter", int),
+        "prefills": ("engine_prefills_total", "counter", int),
+        "finished": ("engine_requests_finished_total", "counter", int),
+        "tokens_out": ("engine_tokens_out_total", "counter", int),
+        # device prefill launches (>= prefills when chunking is on)
+        "prefill_chunks": ("engine_prefill_chunks_total", "counter", int),
+        "prefill_compiles": ("engine_prefill_compiles_total", "counter",
+                             int),
+        "decode_compiles": ("engine_decode_compiles_total", "counter", int),
+        "occupancy_sum": ("engine_occupancy_sum", "gauge", float),
+        "peak_pages": ("engine_peak_pages", "gauge", int),
+        "pages_total": ("engine_pages_total", "gauge", int),
+        "wall_s": ("engine_wall_seconds", "gauge", float),
+        # prefix-cache accounting (zero when the cache is off)
+        "prefill_tokens_computed": ("engine_prefill_tokens_computed_total",
+                                    "counter", int),
+        "prefill_tokens_cached": ("engine_prefill_tokens_cached_total",
+                                  "counter", int),
+        "prefix_evictions": ("engine_prefix_evictions", "gauge", int),
+    }
+    _HISTOGRAMS = ("serve_ttft_seconds", "serve_intertoken_seconds")
+
+    def __init__(self, registry: Optional[obs.Registry] = None,
+                 labels: Optional[Dict[str, str]] = None, **initial):
+        reg = registry if registry is not None else obs.Registry()
+        object.__setattr__(self, "registry", reg)
+        object.__setattr__(self, "labels", dict(labels or {}))
+        for name, (metric, kind, _) in self._SPECS.items():
+            if kind == "counter":
+                reg.counter(metric)
+            else:
+                reg.gauge(metric)
+        reg.histogram("serve_ttft_seconds",
+                      "Request admission -> first emitted token",
+                      buckets=obs.TTFT_BUCKETS)
+        reg.histogram("serve_intertoken_seconds",
+                      "Gap between consecutive emitted tokens of a request",
+                      buckets=obs.INTERTOKEN_BUCKETS)
+        for name, v in initial.items():
+            setattr(self, name, v)
+
+    def __getattr__(self, name):
+        spec = self._SPECS.get(name)
+        if spec is None:
+            raise AttributeError(name)
+        metric, _, typ = spec
+        return typ(self.registry.get(metric).value(**self.labels))
+
+    def __setattr__(self, name, value) -> None:
+        spec = self._SPECS.get(name)
+        if spec is None:
+            raise AttributeError(f"EngineMetrics has no field {name!r}")
+        metric, _, typ = spec
+        self.registry.get(metric).set(typ(value), **self.labels)
 
     def reset(self, keep_compiles: bool = True) -> None:
         pc, dc = self.prefill_compiles, self.decode_compiles
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, type(getattr(self, f.name))())
+        for name in self._SPECS:
+            setattr(self, name, 0)
+        for name in self._HISTOGRAMS:
+            self.registry.get(name).reset(**self.labels)
         if keep_compiles:
             self.prefill_compiles, self.decode_compiles = pc, dc
 
     def to_dict(self) -> Dict[str, float]:
-        d = dataclasses.asdict(self)
+        d = {name: getattr(self, name) for name in self._SPECS}
         d["occupancy"] = (self.occupancy_sum / self.decode_steps
                           if self.decode_steps else 0.0)
         d["page_utilization"] = (self.peak_pages / self.pages_total
@@ -100,6 +157,27 @@ class EngineMetrics:
         d["prefix_hit_rate"] = (self.prefill_tokens_cached / prompt
                                 if prompt else 0.0)
         return d
+
+    # latency histograms (driver-facing)
+    def observe_ttft(self, seconds: float) -> None:
+        self.registry.get("serve_ttft_seconds").observe(
+            seconds, **self.labels)
+
+    def observe_intertoken(self, seconds: float) -> None:
+        self.registry.get("serve_intertoken_seconds").observe(
+            seconds, **self.labels)
+
+    def latency_quantiles(self) -> Dict[str, float]:
+        """p50/p95/p99 TTFT and inter-token gap from the fixed buckets."""
+        out = {}
+        for short, metric in (("ttft", "serve_ttft_seconds"),
+                              ("intertoken", "serve_intertoken_seconds")):
+            h = self.registry.get(metric)
+            for q in (0.5, 0.95, 0.99):
+                out[f"{short}_p{int(q * 100)}_s"] = \
+                    h.quantile(q, **self.labels)
+            out[f"{short}_count"] = h.count(**self.labels)
+        return out
 
 
 class Engine:
@@ -112,7 +190,10 @@ class Engine:
     """
 
     def __init__(self, model: Model, plan,
-                 eng: EngineConfig = EngineConfig(), params=None, mesh=None):
+                 eng: EngineConfig = EngineConfig(), params=None, mesh=None,
+                 registry: Optional[obs.Registry] = None,
+                 labels: Optional[Dict[str, str]] = None,
+                 tracer: Optional[obs.Tracer] = None):
         import jax
         import jax.numpy as jnp
         import dataclasses as dc
@@ -174,11 +255,14 @@ class Engine:
                     "tokens to the rest of the prompt)")
         self._prefilling: List[SlotState] = []
         self.last_step_prefills: List[Tuple[int, int]] = []
-        # the dispatch fallback counter is process-global; snapshot it so
-        # pallas_fallbacks() reports only traces this engine caused
-        from repro.kernels import dispatch as _dispatch
-
-        self._fallback_base = dict(_dispatch.pallas_fallbacks())
+        # every step runs under this obs scope, so trace-time events in the
+        # process-global registry (dispatch's pallas->ref fallbacks) carry
+        # a scope label attributing them to this engine instance
+        self.obs_scope = f"engine{next(_ENGINE_IDS)}"
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
+        self._arrival: Dict[str, float] = {}     # uid -> enqueue time
+        self._last_emit: Dict[str, float] = {}   # uid -> last token time
+        self._req_spans: Dict[str, Optional[str]] = {}
         # all pool (re)initialisation goes through one jitted zeroing fn so
         # every pool entering a step fn is a jit output — device_put arrays
         # carry a differently-typed sharding and would retrace the first
@@ -205,7 +289,8 @@ class Engine:
         self._decode_fns: Dict[int, object] = {}
         self._base_keys: Dict[int, np.ndarray] = {}
         self.metrics = EngineMetrics(
-            pages_total=self.scheduler.pages_total())
+            registry, labels, pages_total=self.scheduler.pages_total())
+        self.registry = self.metrics.registry
 
     def _new_scheduler(self) -> Scheduler:
         sched = Scheduler(
@@ -226,6 +311,20 @@ class Engine:
     # ---- request lifecycle ---------------------------------------------
     def add_request(self, req: Request) -> None:
         self.scheduler.enqueue(req)
+        self._arrival[req.uid] = time.monotonic()
+        self._req_spans[req.uid] = self.tracer.async_begin(
+            "request", uid=req.uid, prompt_len=req.prompt_len,
+            max_new=req.max_new_tokens)
+
+    def _finish_request(self, st: SlotState) -> None:
+        """Bookkeeping common to every finish site (prefill or decode)."""
+        self.scheduler.finish(st.slot, self.metrics.steps)
+        self.metrics.finished += 1
+        uid = st.req.uid
+        self._arrival.pop(uid, None)
+        self._last_emit.pop(uid, None)
+        self.tracer.async_end("request", self._req_spans.pop(uid, None),
+                              tokens=len(st.out))
 
     def collect(self) -> Dict[str, List[int]]:
         """uid -> generated tokens, for every finished request."""
@@ -239,22 +338,21 @@ class Engine:
         self.scheduler = self._new_scheduler()
         self._prefilling = []
         self.last_step_prefills = []
+        self._arrival.clear()
+        self._last_emit.clear()
+        self._req_spans.clear()
         self.metrics.reset(keep_compiles=True)
         self.metrics.pages_total = self.scheduler.pages_total()
 
     def pallas_fallbacks(self) -> Dict[str, int]:
         """Trace-time pallas->ref fallback counts attributable to *this*
-        engine. ``kernels.dispatch`` keeps one process-global counter;
-        without the ``__init__`` snapshot a fresh engine would inherit
-        every fallback any earlier engine (or test) traced."""
+        engine: the dispatch layer's labeled registry counters, filtered
+        by this engine's ``obs.scope`` (every ``step()`` runs under it) —
+        a fresh engine has a fresh scope, so it never inherits fallbacks
+        earlier engines or tests traced."""
         from repro.kernels import dispatch as _dispatch
 
-        out = {}
-        for k, v in _dispatch.pallas_fallbacks().items():
-            d = v - self._fallback_base.get(k, 0)
-            if d > 0:
-                out[k] = d
-        return out
+        return _dispatch.pallas_fallbacks(scope=self.obs_scope)
 
     # ---- compiled-step caches ------------------------------------------
     def _prefill_bucket(self, prompt_len: int) -> int:
@@ -472,9 +570,13 @@ class Engine:
         emitted.append((st.req.uid, tok))
         m.prefills += 1
         m.tokens_out += 1
+        now = time.monotonic()
+        arrived = self._arrival.get(st.req.uid)
+        if arrived is not None:
+            m.observe_ttft(now - arrived)
+        self._last_emit[st.req.uid] = now
         if st.done:
-            self.scheduler.finish(st.slot, m.steps)
-            m.finished += 1
+            self._finish_request(st)
 
     def step(self) -> List[Tuple[str, int]]:
         """One driver iteration: admit, advance prefills (one chunk each),
@@ -482,15 +584,25 @@ class Engine:
 
         Returns the (uid, token) pairs emitted this step.
         """
+        with obs.scope(self.obs_scope), \
+                self.tracer.span("engine/step", cat="engine",
+                                 scope=self.obs_scope,
+                                 step=self.metrics.steps):
+            return self._step_inner()
+
+    def _step_inner(self) -> List[Tuple[str, int]]:
         t0 = time.monotonic()
         emitted: List[Tuple[str, int]] = []
         m = self.metrics
+        tracer = self.tracer
         self.last_step_prefills = []
 
         # in-flight chunked prefills admitted on earlier steps: one chunk
         # each, *before* this step's admissions (FIFO progress)
         for st in list(self._prefilling):
-            tok = self._advance_prefill(st)
+            with tracer.span("engine/prefill_chunk", cat="engine",
+                             uid=st.req.uid, start=st.prefill_pos):
+                tok = self._advance_prefill(st)
             if tok is not None:
                 self._complete_prefill(st, tok, emitted)
 
@@ -504,7 +616,10 @@ class Engine:
                 break
             st = batch[0]
             self._prefilling.append(st)
-            tok = self._advance_prefill(st)
+            with tracer.span("engine/prefill", cat="engine",
+                             uid=st.req.uid, prompt_len=st.req.prompt_len,
+                             cached_len=st.cached_len):
+                tok = self._advance_prefill(st)
             if tok is not None:
                 self._complete_prefill(st, tok, emitted)
         if self.scheduler.prefix_cache is not None:
@@ -516,37 +631,46 @@ class Engine:
         if active:
             width = self.scheduler.decode_width()
             sampled = any(st.req.temperature > 0.0 for st in active)
-            fn = self._decode_fn(width, sampled)
-            B = self.eng.max_slots
-            tokens = np.zeros((B, 1), np.int32)
-            cache_len = np.zeros((B,), np.int32)
-            temp = np.zeros((B,), np.float32)
-            top_k = np.zeros((B,), np.int32)
-            top_p = np.ones((B,), np.float32)
-            keys = np.zeros((B, 2), np.uint32)
-            act = np.zeros((B,), bool)
-            for st in active:
-                i = st.slot
-                tokens[i, 0] = st.out[-1]
-                cache_len[i] = st.cache_len
-                temp[i] = st.req.temperature
-                top_k[i] = st.req.top_k
-                top_p[i] = st.req.top_p
-                keys[i] = self._base_key(st.req.seed)
-                act[i] = True
-            table = np.ascontiguousarray(self.scheduler.table[:, :, :width])
-            tok, self.pools = fn(self.params, self.pools, tokens, cache_len,
-                                 table, temp, top_k, top_p, keys, act)
-            tok = np.asarray(tok)
+            with tracer.span("engine/decode", cat="engine",
+                             width=width, active=len(active)):
+                fn = self._decode_fn(width, sampled)
+                B = self.eng.max_slots
+                tokens = np.zeros((B, 1), np.int32)
+                cache_len = np.zeros((B,), np.int32)
+                temp = np.zeros((B,), np.float32)
+                top_k = np.zeros((B,), np.int32)
+                top_p = np.ones((B,), np.float32)
+                keys = np.zeros((B, 2), np.uint32)
+                act = np.zeros((B,), bool)
+                for st in active:
+                    i = st.slot
+                    tokens[i, 0] = st.out[-1]
+                    cache_len[i] = st.cache_len
+                    temp[i] = st.req.temperature
+                    top_k[i] = st.req.top_k
+                    top_p[i] = st.req.top_p
+                    keys[i] = self._base_key(st.req.seed)
+                    act[i] = True
+                table = np.ascontiguousarray(
+                    self.scheduler.table[:, :, :width])
+                tok, self.pools = fn(self.params, self.pools, tokens,
+                                     cache_len, table, temp, top_k, top_p,
+                                     keys, act)
+                tok = np.asarray(tok)
+            now = time.monotonic()
             for st in active:
                 t = int(tok[st.slot, 0])
                 st.out.append(t)
                 st.cache_len += 1
                 emitted.append((st.req.uid, t))
                 m.tokens_out += 1
+                uid = st.req.uid
+                last = self._last_emit.get(uid)
+                if last is not None:
+                    m.observe_intertoken(now - last)
+                self._last_emit[uid] = now
                 if st.done:
-                    self.scheduler.finish(st.slot, m.steps)
-                    m.finished += 1
+                    self._finish_request(st)
             m.decode_steps += 1
             m.occupancy_sum += len(active) / self.eng.max_slots
 
@@ -580,7 +704,9 @@ class Engine:
 def build_engine(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
                  data: int = 1, eng: EngineConfig = EngineConfig(),
                  params=None, init_seed: int = 0,
-                 kernel: Optional[str] = None, plan=None) -> Engine:
+                 kernel: Optional[str] = None, plan=None,
+                 registry: Optional[obs.Registry] = None,
+                 tracer: Optional[obs.Tracer] = None) -> Engine:
     """Convenience constructor: resolve a serve plan, build the engine.
 
     With ``plan=None`` a ``kind='decode'`` ExecutionPlan is made from the
@@ -591,11 +717,11 @@ def build_engine(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
     """
     import jax
 
-    from repro.configs import registry
+    from repro.configs import registry as arch_registry
     from repro.models.factory import build_model
     from repro.plan import make_serve_plan
 
-    cfg = registry.get_smoke(arch) if smoke else registry.get(arch)
+    cfg = arch_registry.get_smoke(arch) if smoke else arch_registry.get(arch)
     model = build_model(cfg)
     if plan is None:
         plan = make_serve_plan(
@@ -604,4 +730,4 @@ def build_engine(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
             max_len=eng.max_len, mesh_kind="local", kernel_impl=kernel)
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
-    return Engine(model, plan, eng, params)
+    return Engine(model, plan, eng, params, registry=registry, tracer=tracer)

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.engine import Engine, EngineConfig, Request
 from repro.gateway.router import Router
 
@@ -60,11 +61,16 @@ class Gateway:
     """add_request / step / take / collect driver over N engine replicas."""
 
     def __init__(self, model, plan, eng: EngineConfig = EngineConfig(),
-                 params=None):
+                 params=None, registry: Optional[obs.Registry] = None,
+                 tracer: Optional[obs.Tracer] = None):
         import jax
 
         self.plan = plan
         self.replicas = max(int(getattr(plan, "replicas", 1)), 1)
+        # one shared registry; replicas write the same metric families
+        # under distinguishing {replica=i} labels
+        self.registry = registry if registry is not None else obs.Registry()
+        self.tracer = tracer if tracer is not None else obs.NULL_TRACER
         if params is None:
             params = model.init(jax.random.PRNGKey(0))
         if self.replicas == 1:
@@ -72,7 +78,10 @@ class Gateway:
         else:
             meshes = replica_meshes(plan, self.replicas)
         self.engines: List[Engine] = [
-            Engine(model, plan, eng, params, mesh=m) for m in meshes]
+            Engine(model, plan, eng, params, mesh=m,
+                   registry=self.registry, labels={"replica": str(i)},
+                   tracer=self.tracer)
+            for i, m in enumerate(meshes)]
         self.cfg = self.engines[0].cfg
         self.router = Router(self.engines,
                              prefix_aware=bool(plan.prefix_cache))
@@ -88,9 +97,14 @@ class Gateway:
         """Route and enqueue; returns the replica index. ``replica`` pins
         the choice (the benchmark replays recorded placements so cache-on
         and cache-off phases compare the same per-replica workloads)."""
-        i = self.router.route(req, session) if replica is None else replica
+        with self.tracer.span("gateway/route", cat="gateway", uid=req.uid):
+            i = self.router.route(req, session) if replica is None \
+                else replica
         if replica is not None:
             self.router.routed[i] += 1
+        self.registry.counter(
+            "gateway_requests_routed_total",
+            "Requests routed to each replica").inc(replica=str(i))
         self.engines[i].add_request(req)
         self._owner[req.uid] = i
         self._streams[req.uid] = []
@@ -102,12 +116,16 @@ class Gateway:
         (uid, token) emissions (also appended to the per-request streams)."""
         t0 = time.monotonic()
         emitted: List[Tuple[str, int]] = []
-        for engine in self.engines:
-            if not engine.idle():
-                emitted.extend(engine.step())
+        with self.tracer.span("gateway/step", cat="gateway"):
+            for engine in self.engines:
+                if not engine.idle():
+                    emitted.extend(engine.step())
         for uid, tok in emitted:
             self._streams[uid].append(tok)
         self.wall_s += time.monotonic() - t0
+        self.registry.gauge(
+            "gateway_wall_seconds",
+            "Host wall time spent inside gateway.step()").set(self.wall_s)
         return emitted
 
     def take(self, uid: str) -> List[int]:
@@ -170,13 +188,26 @@ class Gateway:
 
     def pallas_fallbacks(self) -> Dict[str, int]:
         """Trace-time pallas->ref fallback counts summed over the replica
-        engines (each engine deltas against its own construction-time
-        snapshot, so fallbacks traced by other engines or earlier tests in
-        the process never leak in)."""
+        engines (each engine filters the dispatch layer's labeled counters
+        by its own obs scope, so fallbacks traced by other engines or
+        earlier tests in the process never leak in)."""
         out: Dict[str, int] = {}
         for e in self.engines:
             for k, v in e.pallas_fallbacks().items():
                 out[k] = out.get(k, 0) + v
+        return out
+
+    def latency_quantiles(self) -> Dict[str, float]:
+        """Gateway-wide p50/p95/p99 TTFT and inter-token gap: the replicas
+        share one registry, so histogram quantiles with no label filter
+        aggregate every replica's buckets."""
+        out: Dict[str, float] = {}
+        for short, metric in (("ttft", "serve_ttft_seconds"),
+                              ("intertoken", "serve_intertoken_seconds")):
+            h = self.registry.get(metric)
+            for q in (0.5, 0.95, 0.99):
+                out[f"{short}_p{int(q * 100)}_s"] = h.quantile(q)
+            out[f"{short}_count"] = h.count()
         return out
 
     def metrics_dict(self) -> Dict[str, object]:
@@ -206,17 +237,18 @@ def build_gateway(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
                   prefix_cache: bool = True,
                   eng: EngineConfig = EngineConfig(), params=None,
                   init_seed: int = 0, kernel: Optional[str] = None,
-                  plan=None) -> Gateway:
+                  plan=None, registry: Optional[obs.Registry] = None,
+                  tracer: Optional[obs.Tracer] = None) -> Gateway:
     """Convenience constructor mirroring ``engine.build_engine``: resolve a
     serve plan whose ``n_devices`` is the per-replica share of the local
     devices, then build the gateway on it."""
     import jax
 
-    from repro.configs import registry
+    from repro.configs import registry as arch_registry
     from repro.models.factory import build_model
     from repro.plan import make_serve_plan
 
-    cfg = registry.get_smoke(arch) if smoke else registry.get(arch)
+    cfg = arch_registry.get_smoke(arch) if smoke else arch_registry.get(arch)
     model = build_model(cfg)
     if plan is None:
         n_dev = len(jax.devices()) // max(replicas, 1)
@@ -227,4 +259,5 @@ def build_gateway(arch: str, *, smoke: bool = True, c: Optional[int] = 1,
             replicas=replicas, prefix_cache=prefix_cache)
     if params is None:
         params = model.init(jax.random.PRNGKey(init_seed))
-    return Gateway(model, plan, eng, params)
+    return Gateway(model, plan, eng, params, registry=registry,
+                   tracer=tracer)

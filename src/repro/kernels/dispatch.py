@@ -41,7 +41,6 @@ per jit compilation, not per step).
 
 from __future__ import annotations
 
-import collections
 import logging
 from typing import Dict, Optional, Tuple
 
@@ -49,33 +48,67 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.obs import registry as _obs
 
 IMPLS = ("ref", "pallas")
 
+FALLBACK_METRIC = "dispatch_pallas_fallback_total"
+
 _log = logging.getLogger(__name__)
-_fallbacks: collections.Counter = collections.Counter()
+_warned = set()
 
 
-def _note_fallback(entry: str) -> None:
-    """Record a pallas->ref fallback (batched per-row positions)."""
-    if not _fallbacks[entry]:
+def _fallback_counter() -> _obs.Counter:
+    return _obs.global_registry().counter(
+        FALLBACK_METRIC,
+        "Trace-time pallas->ref fallbacks by entry point, with provenance "
+        "(reason, q shape) and the obs scope active at trace time")
+
+
+def _note_fallback(entry: str, *, reason: str = "batched_positions",
+                   shape=None) -> None:
+    """Record a pallas->ref fallback as a labeled counter.
+
+    Ticks at *trace* time — once per jit compilation, not per step. The
+    ``scope`` label carries the active ``obs.scope(...)`` (engines trace
+    under their own scope), so per-instance attribution is a label filter
+    instead of the process-global snapshot-delta arithmetic this replaced.
+    """
+    if entry not in _warned:
+        _warned.add(entry)
         _log.warning(
-            "kernels.dispatch.%s: impl='pallas' requested with batched "
-            "(B, S) positions — falling back to the reference "
-            "implementation (the Pallas block kernels take shared (S,) "
-            "position vectors; see docs/SERVING.md, 'known gaps'). "
-            "Logged once; occurrences are counted in pallas_fallbacks().",
-            entry)
-    _fallbacks[entry] += 1
+            "kernels.dispatch.%s: impl='pallas' requested but falling back "
+            "to the reference implementation (reason=%s; see "
+            "docs/SERVING.md, 'known gaps'). Logged once; occurrences are "
+            "counted in the %s metric and pallas_fallbacks().",
+            entry, reason, FALLBACK_METRIC)
+    _fallback_counter().inc(
+        entry=entry, reason=reason,
+        shape="x".join(str(d) for d in shape) if shape is not None else "",
+        scope=_obs.current_scope())
 
 
-def pallas_fallbacks() -> Dict[str, int]:
-    """Trace-time pallas->ref fallback counts, keyed by entry point."""
-    return dict(_fallbacks)
+def pallas_fallbacks(scope: Optional[str] = None) -> Dict[str, int]:
+    """Trace-time pallas->ref fallback counts, keyed by entry point.
+
+    ``scope`` filters to counts recorded under one ``obs.scope(...)``
+    (e.g. a single engine instance); None sums every scope.
+    """
+    counter = _obs.global_registry().get(FALLBACK_METRIC)
+    if counter is None:
+        return {}
+    out: Dict[str, int] = {}
+    labels = {"scope": scope} if scope is not None else {}
+    for key, v in counter.series(**labels).items():
+        entry = dict(key).get("entry", "?")
+        out[entry] = out.get(entry, 0) + int(v)
+    return {k: v for k, v in out.items() if v}
 
 
-def reset_pallas_fallbacks() -> None:
-    _fallbacks.clear()
+def reset_pallas_fallbacks(scope: Optional[str] = None) -> None:
+    counter = _obs.global_registry().get(FALLBACK_METRIC)
+    if counter is not None:
+        counter.reset(**({"scope": scope} if scope is not None else {}))
 
 
 def resolve_impl(impl: Optional[str] = None) -> str:
@@ -127,7 +160,8 @@ def block_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,
             return _ops.flash_attention_bwd(
                 q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
                 window=window, scale=scale, prefix_len=prefix_len)
-        _note_fallback("block_bwd")
+        _note_fallback("block_bwd", reason="batched_positions",
+                       shape=jnp.shape(q))
     return _ref.block_attention_bwd(
         q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
         scale=scale, prefix_len=prefix_len)

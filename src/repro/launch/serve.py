@@ -103,7 +103,7 @@ def _legacy_main(args, plan, cfg):
     return out
 
 
-def _engine_main(args, plan, cfg):
+def _engine_main(args, plan, cfg, registry=None, tracer=None):
     import numpy as np
 
     from repro.engine import Engine, EngineConfig, Request
@@ -112,7 +112,8 @@ def _engine_main(args, plan, cfg):
     model = build_model(cfg)
     engine = Engine(model, plan,
                     EngineConfig(pages_per_shard=args.pages_per_shard,
-                                 prefill_chunk=args.prefill_chunk))
+                                 prefill_chunk=args.prefill_chunk),
+                    registry=registry, tracer=tracer)
     rng = np.random.default_rng(args.seed)
     vocab = engine.cfg.vocab_size
     reqs = []
@@ -137,7 +138,7 @@ def _engine_main(args, plan, cfg):
     return out
 
 
-def _gateway_main(args, plan, cfg):
+def _gateway_main(args, plan, cfg, registry=None, tracer=None):
     import numpy as np
 
     from repro.engine import EngineConfig, Request
@@ -148,7 +149,8 @@ def _gateway_main(args, plan, cfg):
     model = build_model(cfg)
     gw = Gateway(model, plan,
                  EngineConfig(pages_per_shard=args.pages_per_shard,
-                              prefill_chunk=args.prefill_chunk))
+                              prefill_chunk=args.prefill_chunk),
+                 registry=registry, tracer=tracer)
     rng = np.random.default_rng(args.seed)
     vocab = cfg.vocab_size
     sys_len = args.system_prompt_len
@@ -279,6 +281,17 @@ def main(argv=None):
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
+    # observability (repro.obs; all off by default = near-zero overhead)
+    ap.add_argument("--metrics-dump", default=None,
+                    help="write the obs registry here after the run "
+                         "(Prometheus text; .json suffix -> JSON dump)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-format JSON timeline of "
+                         "request/engine/gateway spans here")
+    ap.add_argument("--comm-report", default=None,
+                    help="compile the plan's attention island, parse its "
+                         "HLO collectives, and write the measured-vs-"
+                         "analytical comm-volume report (JSON) here")
     args = ap.parse_args(argv)
     if not args.plan and not args.arch:
         ap.error("--arch is required (unless --plan carries it)")
@@ -307,11 +320,36 @@ def main(argv=None):
         path = plan.save(args.save_plan)
         print(f"[serve] plan saved -> {path}")
 
+    from repro import obs
+
+    registry = obs.Registry()
+    tracer = obs.Tracer(enabled=bool(args.trace_out))
     if args.legacy:
-        return _legacy_main(args, plan, cfg)
-    if plan.replicas > 1 or plan.prefix_cache:
-        return _gateway_main(args, plan, cfg)
-    return _engine_main(args, plan, cfg)
+        out = _legacy_main(args, plan, cfg)
+    elif plan.replicas > 1 or plan.prefix_cache:
+        out = _gateway_main(args, plan, cfg, registry=registry,
+                            tracer=tracer)
+    else:
+        out = _engine_main(args, plan, cfg, registry=registry,
+                           tracer=tracer)
+
+    if args.metrics_dump:
+        fmt = "json" if args.metrics_dump.endswith(".json") else "prometheus"
+        registry.dump(args.metrics_dump, fmt=fmt)
+        print(f"[serve] metrics dump -> {args.metrics_dump} ({fmt})")
+    if args.trace_out:
+        tracer.dump(args.trace_out)
+        print(f"[serve] trace ({len(tracer.events())} events) -> "
+              f"{args.trace_out}")
+    if args.comm_report:
+        from repro.obs import commlog
+
+        rep = commlog.comm_report(cfg, plan)
+        commlog.dump_report(rep, args.comm_report)
+        ratios = {k: v["ratio"] for k, v in rep["per_collective"].items()}
+        print(f"[serve] comm report -> {args.comm_report} "
+              f"within_tolerance={rep['within_tolerance']} ratios={ratios}")
+    return out
 
 
 if __name__ == "__main__":

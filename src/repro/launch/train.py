@@ -48,6 +48,15 @@ def main(argv=None):
     ap.add_argument("--metrics", default=None)
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rules", default="default")
+    # observability (repro.obs; all off by default = near-zero overhead)
+    ap.add_argument("--metrics-dump", default=None,
+                    help="write the obs registry (incl. per-collective "
+                         "comm_bytes_total from the plan's arrangement) "
+                         "here after the run (Prometheus text; .json "
+                         "suffix -> JSON dump)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace-format JSON timeline of "
+                         "train/data, train/step and train/ckpt spans here")
     args = ap.parse_args(argv)
     if not args.plan and not args.arch:
         ap.error("--arch is required (unless --plan carries it)")
@@ -114,7 +123,21 @@ def main(argv=None):
     tcfg = trainer_lib.TrainerConfig(
         num_steps=args.steps, ckpt_every=max(args.steps // 2, 1),
         ckpt_dir=args.ckpt_dir, metrics_path=args.metrics, log_every=5)
-    metrics = trainer_lib.train(model, plan, adam_cfg, tcfg)
+
+    from repro import obs
+
+    obs_registry = obs.Registry() if args.metrics_dump else None
+    tracer = obs.Tracer(enabled=True) if args.trace_out else None
+    metrics = trainer_lib.train(model, plan, adam_cfg, tcfg,
+                                tracer=tracer, registry=obs_registry)
+    if args.metrics_dump:
+        fmt = "json" if args.metrics_dump.endswith(".json") else "prometheus"
+        obs_registry.dump(args.metrics_dump, fmt=fmt)
+        print(f"[train] metrics dump -> {args.metrics_dump} ({fmt})")
+    if args.trace_out:
+        tracer.dump(args.trace_out)
+        print(f"[train] trace ({len(tracer.events())} events) -> "
+              f"{args.trace_out}")
     print(f"[train] done: {metrics}")
     return metrics
 

@@ -1,0 +1,268 @@
+"""Per-step communication accounting: measured-vs-analytical bytes per
+collective for the plan's resolved arrangement.
+
+Three layers:
+
+  * ``analytical_wire_volumes(cfg, plan)`` — the `plan/cost.comm_volumes`
+    closed forms (paper eqs. 2–4) regrouped by HLO collective kind:
+    team all-gather, placement + sub-ring ppermute (collective-permute),
+    lse-combine reduce-scatter, Ulysses all-to-all.
+  * ``measure_attention_island(cfg, plan)`` — compile the actual attention
+    island on ``plan.build_mesh()`` with unrolled ring scans and parse the
+    compiled HLO's collective result buffers
+    (``roofline/hlo.collective_bytes``), converting result bytes to wire
+    bytes per device per collective's algorithm.
+  * ``comm_report(cfg, plan)`` — per-kind measured/analytical/ratio table
+    with a single ``within_tolerance`` verdict; this is the artifact the
+    CI ``obs-smoke`` job gates within 5% on the C=2 smoke mesh.
+
+Result-bytes → wire-bytes conversion (per device, per op):
+
+  ===================  =========  =======================================
+  op                   factor     why
+  ===================  =========  =======================================
+  all-gather           (c-1)/c    result is the full gathered tensor; a
+                                  device sends/receives (c-1) of c shards
+  reduce-scatter       (c-1)      result is the scattered *shard*; each
+                                  device moves (c-1) shard-sized messages
+  collective-permute   1          result == the message
+  all-to-all           (p-1)/p    a device keeps its own 1/p slice
+  ===================  =========  =======================================
+
+The lse-combine ``pmax``/``psum`` all-reduces (numerics glue, not a paper
+term) are *unmodelled*: reported under ``unmodelled_allreduce_bytes`` but
+excluded from the tolerance gate.
+
+Wire dtype: the CPU backend legalises bf16 to f32 (dtype_bytes=4, as
+``benchmarks/comm_volume.py`` and EXPERIMENTS.md document); on TPU the
+wire dtype is bf16 (dtype_bytes=2). ``_wire_dtype_bytes()`` picks by
+backend so measured and analytical always use the same width.
+
+``CommLog`` is the trainer-facing face: it prices one train step's
+attention communication once at construction (analytical wire bytes ×
+attention-layer count, ×3 for fwd + bwd's two passes over the same
+collectives) and ticks ``comm_bytes_total{collective=...}`` registry
+counters per step — bookkeeping only, no device sync.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.plan import cost
+
+#: HLO op kind <- cost.comm_volumes component mapping.
+KIND_FROM_COMPONENTS = {
+    "all-gather": ("team_allgather",),
+    "collective-permute": ("placement_p2p", "ring_p2p"),
+    "reduce-scatter": ("combine_rs",),
+    "all-to-all": ("all_to_all",),
+}
+
+
+def _wire_dtype_bytes() -> int:
+    import jax
+
+    return 4 if jax.default_backend() == "cpu" else 2
+
+
+def _arrangement(plan) -> "cost.Arrangement":
+    return cost.Arrangement(plan.scheme, plan.c, plan.r,
+                            placement=plan.placement)
+
+
+def analytical_wire_volumes(cfg: ModelConfig, plan, *,
+                            batch: int = 1,
+                            seq_len: Optional[int] = None,
+                            dtype_bytes: Optional[int] = None,
+                            ) -> Dict[str, float]:
+    """Per-device wire bytes per attention layer, keyed by HLO op kind."""
+    n = seq_len or plan.seq_len
+    shape = ShapeConfig(plan.shape, seq_len=n, global_batch=batch,
+                        kind="train")
+    vols = cost.comm_volumes(
+        cfg, shape, plan.sp_size, _arrangement(plan), batch=batch,
+        dtype_bytes=_wire_dtype_bytes() if dtype_bytes is None
+        else dtype_bytes)
+    return {kind: sum(vols[c] for c in comps)
+            for kind, comps in KIND_FROM_COMPONENTS.items()}
+
+
+# result-bytes -> wire-bytes factors; group size filled per plan
+def _wire_factors(plan) -> Dict[str, float]:
+    c = plan.c
+    p = plan.sp_size
+    return {
+        "all-gather": (c - 1) / c if c > 1 else 0.0,
+        "reduce-scatter": float(c - 1),
+        "collective-permute": 1.0,
+        "all-to-all": (p - 1) / p if p > 1 else 0.0,
+    }
+
+
+def measure_attention_island(cfg: ModelConfig, plan, *,
+                             batch: int = 1,
+                             seq_len: Optional[int] = None,
+                             ) -> Dict[str, object]:
+    """Compile one attention layer's island on the plan's mesh and parse
+    its HLO collectives into per-device wire bytes by kind.
+
+    ``unroll=True`` so every sub-ring ppermute appears in the HLO (XLA
+    counts a while-loop body once otherwise). Requires the process to have
+    ``plan.n_devices`` (forced-host on CPU) devices available.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import startrail as st
+    from repro.core import ulysses as ul
+    from repro.roofline import hlo as hlo_lib
+
+    n = seq_len or plan.seq_len
+    st_cfg = st.StarTrailConfig(seq_len=n, seq_scheme=plan.seq_scheme,
+                                causal=True, unroll=True)
+    mesh = plan.build_mesh()
+    spec = P(None, st_cfg.axes, None, None)
+
+    if plan.scheme == "ulysses":
+        def local(q, k, v):
+            return ul.ulysses_attention(q, k, v, st_cfg)
+    else:
+        def local(q, k, v):
+            return st.startrail_attention(q, k, v, st_cfg)
+
+    f = jax.jit(jax.shard_map(local, mesh=mesh, in_specs=(spec,) * 3,
+                              out_specs=spec, check_vma=False))
+    dh = cfg.head_dim_
+    args = [jax.ShapeDtypeStruct((batch, n, h, dh), jnp.bfloat16)
+            for h in (cfg.num_heads, cfg.num_kv_heads, cfg.num_kv_heads)]
+    compiled = f.lower(*args).compile()
+    parsed = hlo_lib.collective_bytes(compiled.as_text())
+    by_kind = parsed["bytes_by_kind"]
+
+    factors = _wire_factors(plan)
+    wire = {kind: by_kind.get(kind, 0) * factors[kind]
+            for kind in KIND_FROM_COMPONENTS}
+    return {
+        "wire_bytes_by_kind": wire,
+        "result_bytes_by_kind": dict(by_kind),
+        "count_by_kind": dict(parsed["count_by_kind"]),
+        "unmodelled_allreduce_bytes": by_kind.get("all-reduce", 0),
+    }
+
+
+def island_wire_volumes(cfg: ModelConfig, plan, *,
+                        batch: int = 1,
+                        seq_len: Optional[int] = None) -> Dict[str, float]:
+    """What the *forward-only* compiled island should show.
+
+    Identical to ``analytical_wire_volumes`` except collective-permute: in
+    the forward pass each K/V chunk makes exactly one full sub-ring tour —
+    R hops — whether the first hop is the placement exchange (C>1, where
+    the final ring step's fetch is dead and XLA DCEs it) or a plain ring
+    step (C=1, all R live). The per-step convention's extra placement hop
+    (placement_p2p + R·chunk) pairs with the backward's reuse of the
+    placement, so it belongs in ``CommLog`` pricing but not in a
+    forward-island HLO comparison.
+    """
+    n = seq_len or plan.seq_len
+    shape = ShapeConfig(plan.shape, seq_len=n, global_batch=batch,
+                        kind="train")
+    vols = cost.comm_volumes(cfg, shape, plan.sp_size, _arrangement(plan),
+                             batch=batch, dtype_bytes=_wire_dtype_bytes())
+    out = {kind: sum(vols[c] for c in comps)
+           for kind, comps in KIND_FROM_COMPONENTS.items()}
+    out["collective-permute"] = vols["ring_p2p"]  # R hops, no placement
+    return out
+
+
+def comm_report(cfg: ModelConfig, plan, *, batch: int = 1,
+                seq_len: Optional[int] = None,
+                tolerance: float = 0.05) -> Dict[str, object]:
+    """Measured-vs-analytical per-collective report for one attention
+    layer on the plan's arrangement. ``within_tolerance`` covers every
+    kind with non-zero analytical volume."""
+    n = seq_len or plan.seq_len
+    analytical = island_wire_volumes(cfg, plan, batch=batch, seq_len=n)
+    measured = measure_attention_island(cfg, plan, batch=batch, seq_len=n)
+
+    kinds = {}
+    ok = True
+    for kind, a in analytical.items():
+        m = measured["wire_bytes_by_kind"][kind]
+        ratio = (m / a) if a else (None if m == 0 else float("inf"))
+        within = ratio is None or abs(ratio - 1.0) <= tolerance
+        ok = ok and within
+        kinds[kind] = {"measured_bytes": m, "analytical_bytes": a,
+                       "ratio": ratio, "within_tolerance": within}
+    return {
+        "arrangement": {"scheme": plan.scheme, "c": plan.c, "r": plan.r,
+                        "sp": plan.sp_size, "placement": plan.placement,
+                        "seq_scheme": plan.seq_scheme},
+        "shape": {"batch": batch, "seq_len": n,
+                  "num_heads": cfg.num_heads,
+                  "num_kv_heads": cfg.num_kv_heads,
+                  "head_dim": cfg.head_dim_,
+                  "dtype_bytes": _wire_dtype_bytes()},
+        "per_collective": kinds,
+        "unmodelled_allreduce_bytes":
+            measured["unmodelled_allreduce_bytes"],
+        "collective_counts": measured["count_by_kind"],
+        "tolerance": tolerance,
+        "within_tolerance": ok,
+    }
+
+
+def within_tolerance(report: Dict[str, object]) -> bool:
+    return bool(report["within_tolerance"])
+
+
+def dump_report(report: Dict[str, object], path) -> None:
+    import pathlib
+
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(report, indent=2, sort_keys=True))
+
+
+class CommLog:
+    """Registry-backed per-train-step communication accounting.
+
+    Prices the plan's per-layer analytical wire volumes once, then
+    ``record_step`` ticks ``comm_bytes_total{collective=...}`` counters —
+    host-side dict adds only, safe inside the trainer's async pipeline.
+    The fwd+bwd multiplier is 3: the backward re-runs the gather/ring
+    collectives for both dK/dV accumulation and dQ (the ring tour is
+    re-traversed, rematerialising K/V), matching `plan/cost`'s train-step
+    convention.
+    """
+
+    TRAIN_STEP_MULTIPLIER = 3
+
+    def __init__(self, registry, cfg: ModelConfig, plan, *,
+                 batch: Optional[int] = None, train: bool = True):
+        b = batch if batch is not None else plan.global_batch
+        per_layer = analytical_wire_volumes(cfg, plan, batch=max(b, 1))
+        layers = cost.num_attention_layers(cfg)
+        mult = self.TRAIN_STEP_MULTIPLIER if train else 1
+        self._per_step = {kind: v * layers * mult
+                          for kind, v in per_layer.items()}
+        self._counter = registry.counter(
+            "comm_bytes_total",
+            "Analytical per-device bytes per collective kind, accumulated "
+            "per step (plan/cost eqs. 2-4 at the resolved arrangement)")
+        self._steps = registry.counter(
+            "comm_steps_total", "Steps priced by the comm log")
+
+    @property
+    def per_step(self) -> Dict[str, float]:
+        return dict(self._per_step)
+
+    def record_step(self, n: int = 1) -> None:
+        for kind, v in self._per_step.items():
+            if v:
+                self._counter.inc(v * n, collective=kind)
+        self._steps.inc(n)

@@ -1130,11 +1130,59 @@ def check_plan_constructs():
               f"r={plan.r} lowered", flush=True)
 
 
+def check_commlog_c2(arch="h2o-danube-1.8b", seq=64):
+    """obs.commlog on the C=2 smoke mesh: the compiled attention island's
+    HLO collectives match the eq. 2-4 analytical wire volumes per kind
+    (within the 5% gate — exactly 1.0 here), and ``CommLog.record_step``
+    ticks the registry counters by precisely per_step bytes x steps."""
+    from repro import obs
+    from repro.configs import registry as arch_registry
+    from repro.obs import commlog
+    from repro.plan import cost as plan_cost
+    from repro.plan import make_serve_plan
+
+    cfg = arch_registry.get_smoke(arch)
+    plan = make_serve_plan(cfg, arch=arch, n_devices=8, data=1, c=2,
+                           mesh_kind="local")
+    assert plan.c == 2 and plan.sp_size == 8, plan
+
+    rep = commlog.comm_report(cfg, plan, seq_len=seq)
+    assert rep["within_tolerance"], rep["per_collective"]
+    live = [k for k, row in rep["per_collective"].items()
+            if row["analytical_bytes"]]
+    # C=2 exercises every paper term except Ulysses' all-to-all
+    assert set(live) == {"all-gather", "collective-permute",
+                         "reduce-scatter"}, rep["per_collective"]
+    for kind in live:
+        row = rep["per_collective"][kind]
+        assert abs(row["ratio"] - 1.0) <= rep["tolerance"], (kind, row)
+    print(f"  commlog_c2: ratios "
+          f"{ {k: rep['per_collective'][k]['ratio'] for k in live} }",
+          flush=True)
+
+    # CommLog prices per-layer volumes x layers x fwd+bwd multiplier and
+    # ticks the counters by exactly that per step
+    reg = obs.Registry()
+    log = commlog.CommLog(reg, cfg, plan, batch=2)
+    per_layer = commlog.analytical_wire_volumes(cfg, plan, batch=2)
+    mult = plan_cost.num_attention_layers(cfg) * log.TRAIN_STEP_MULTIPLIER
+    assert log.per_step == {k: v * mult for k, v in per_layer.items()}
+    steps = 3
+    for _ in range(steps):
+        log.record_step()
+    counter = reg.get("comm_bytes_total")
+    for kind, v in log.per_step.items():
+        if v:
+            assert counter.value(collective=kind) == v * steps, kind
+    assert reg.value("comm_steps_total") == steps
+
+
 CHECKS.update({
     "microbatch_equiv": check_microbatch_equiv,
     "scheme_crosscheck": check_scheme_crosscheck,
     "ulysses_rejected": check_ulysses_rejected,
     "plan_constructs": check_plan_constructs,
+    "commlog_c2": check_commlog_c2,
 })
 
 if __name__ == "__main__":

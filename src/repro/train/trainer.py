@@ -24,10 +24,12 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
 
+from repro import obs
 from repro.data.pipeline import Prefetcher, SyntheticLM
 from repro.dist import checkpoint, elastic
 from repro.models.factory import Model
@@ -47,9 +49,16 @@ class TrainerConfig:
 
 def train(model: Model, plan: ExecutionPlan, adam_cfg: adamw.AdamWConfig,
           tcfg: TrainerConfig, data_source=None, params=None,
-          mesh=None) -> Dict:
+          mesh=None, tracer: Optional[obs.Tracer] = None,
+          registry: Optional[obs.Registry] = None) -> Dict:
     """Run the loop; returns final metrics. Restores from ckpt_dir if a
-    checkpoint exists (fault-tolerant restart)."""
+    checkpoint exists (fault-tolerant restart).
+
+    ``tracer`` spans the loop phases (train/data, train/step, train/ckpt);
+    ``registry`` additionally gets per-step analytical comm-volume
+    counters (``obs.commlog.CommLog``). Both default to disabled/off.
+    """
+    tracer = tracer if tracer is not None else obs.NULL_TRACER
     mesh = mesh if mesh is not None else plan.build_mesh()
     shape = plan.shape_config()
     jstep, sh = plan.build_train_step(model, adam_cfg, mesh=mesh)
@@ -89,17 +98,26 @@ def train(model: Model, plan: ExecutionPlan, adam_cfg: adamw.AdamWConfig,
     metrics_f = open(tcfg.metrics_path, "a") if tcfg.metrics_path else None
     pending_ckpt = None
     last_metrics: Dict = {}
-    # (step_i, on-device metrics, straggler flag) buffered between flushes —
-    # float() conversion is the only host sync in the loop
-    pending_metrics: List[Tuple[int, Dict, bool]] = []
+    commlog = None
+    if registry is not None:
+        from repro.obs.commlog import CommLog
+
+        commlog = CommLog(registry, model.cfg, plan)
+    # (step_i, on-device metrics, straggler flag, host phase timings)
+    # buffered between flushes — float() conversion of the *device*
+    # metrics is the only host sync in the loop; the phase timings are
+    # plain perf_counter floats (the step phase measures dispatch + the
+    # wait on the previous step's loss, i.e. the one-deep pipeline's
+    # steady-state step duration shifted by one step — no extra sync)
+    pending_metrics: List[Tuple[int, Dict, bool, Dict[str, float]]] = []
 
     def flush_metrics() -> Dict:
         nonlocal last_metrics
-        for si, dev_m, straggling in pending_metrics:
+        for si, dev_m, straggling, phases in pending_metrics:
             m = {k: float(v) for k, v in dev_m.items()}
             if straggling:
                 m["straggler_flag"] = 1.0
-            last_metrics = {"step": si + 1, **m}
+            last_metrics = {"step": si + 1, **m, **phases}
             if metrics_f:
                 metrics_f.write(json.dumps(last_metrics) + "\n")
         if metrics_f and pending_metrics:
@@ -111,20 +129,48 @@ def train(model: Model, plan: ExecutionPlan, adam_cfg: adamw.AdamWConfig,
     try:
         for step_i in range(start, tcfg.num_steps):
             detector.step_start()
-            _, batch_np = prefetch.next()
-            batch = jax.device_put(batch_np, sh["batch"])
-            params, opt, metrics = jstep(params, opt, batch)
-            # one-deep pipeline: dispatch is async, so wait on the
-            # *previous* step's (on-device, transfer-free) loss — the
-            # device is already busy with this step, and the detector's
-            # window sees real step durations (shifted by one step)
-            if prev_loss is not None:
-                jax.block_until_ready(prev_loss)
+            t0 = time.perf_counter()
+            with tracer.span("train/data", cat="train", step=step_i + 1):
+                _, batch_np = prefetch.next()
+                batch = jax.device_put(batch_np, sh["batch"])
+            t1 = time.perf_counter()
+            with tracer.span("train/step", cat="train", step=step_i + 1):
+                params, opt, metrics = jstep(params, opt, batch)
+                # one-deep pipeline: dispatch is async, so wait on the
+                # *previous* step's (on-device, transfer-free) loss — the
+                # device is already busy with this step, and the detector's
+                # window sees real step durations (shifted by one step)
+                if prev_loss is not None:
+                    jax.block_until_ready(prev_loss)
+            t2 = time.perf_counter()
             prev_loss = metrics["loss"]
             straggling = detector.step_end()
-            pending_metrics.append((step_i, metrics, straggling))
+            if commlog is not None:
+                commlog.record_step()
+            phases = {"data_s": t1 - t0, "step_s": t2 - t1, "ckpt_s": 0.0}
+            pending_metrics.append((step_i, metrics, straggling, phases))
             ckpt_boundary = (tcfg.ckpt_dir
                              and (step_i + 1) % tcfg.ckpt_every == 0)
+            if ckpt_boundary:
+                # before the boundary flush, so the launch cost (join the
+                # previous pair + snapshot-to-host) lands in this step's
+                # jsonl record
+                t3 = time.perf_counter()
+                with tracer.span("train/ckpt", cat="train",
+                                 step=step_i + 1):
+                    for t in pending_ckpt or ():
+                        t.join()
+                    # both writes async: save() snapshots to host in this
+                    # thread before returning, and restore takes the latest
+                    # step common to both trees, so a crash mid-write only
+                    # costs the torn step, never consistency
+                    pending_ckpt = [
+                        checkpoint.save(tcfg.ckpt_dir, step_i + 1, params,
+                                        blocking=False),
+                        checkpoint.save(pathlib.Path(tcfg.ckpt_dir) / "opt",
+                                        step_i + 1, opt, blocking=False),
+                    ]
+                phases["ckpt_s"] = time.perf_counter() - t3
             if ((step_i + 1) % tcfg.log_every == 0 or step_i == start
                     or ckpt_boundary or step_i + 1 == tcfg.num_steps):
                 m = flush_metrics()
@@ -132,19 +178,6 @@ def train(model: Model, plan: ExecutionPlan, adam_cfg: adamw.AdamWConfig,
                     print(f"[trainer] step {step_i + 1} "
                           f"loss={m['loss']:.4f} "
                           f"gnorm={m['grad_norm']:.3f}", flush=True)
-            if ckpt_boundary:
-                for t in pending_ckpt or ():
-                    t.join()
-                # both writes async: save() snapshots to host in this
-                # thread before returning, and restore takes the latest
-                # step common to both trees, so a crash mid-write only
-                # costs the torn step, never consistency
-                pending_ckpt = [
-                    checkpoint.save(tcfg.ckpt_dir, step_i + 1, params,
-                                    blocking=False),
-                    checkpoint.save(pathlib.Path(tcfg.ckpt_dir) / "opt",
-                                    step_i + 1, opt, blocking=False),
-                ]
     finally:
         prefetch.stop()
         flush_metrics()

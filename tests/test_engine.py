@@ -311,10 +311,12 @@ def test_chunked_prefill_schedule_property():
 
 
 def test_engine_pallas_fallbacks_per_instance():
-    """Regression: dispatch's fallback counter is process-global; each
-    engine must report only the fallbacks traced since *its* construction,
-    not inherit history from earlier engines or tests."""
-    from repro.engine import EngineConfig, build_engine
+    """Regression: each engine must report only the fallbacks traced under
+    *its* obs scope (every step runs inside ``obs.scope(engine.obs_scope)``)
+    — never history from earlier engines, tests, or scope-less traces.
+    The scope-labeled registry counters replaced the process-global
+    snapshot-delta arithmetic engines used to carry."""
+    from repro import obs
     from repro.kernels import dispatch as kd
 
     ctx = _chunk_engine()
@@ -323,20 +325,30 @@ def test_engine_pallas_fallbacks_per_instance():
     # the whole engine suite so far: zero batched-positions prefill
     # fallbacks (the ragged kernel serves that case now)
     assert base.get("block_fwd", 0) == 0 and base.get("prefill", 0) == 0
-    kd._note_fallback("block_bwd")           # some other code traces one
+    other_scope = "test-fallback-attribution"
     try:
+        # a fallback traced outside every engine's scope: attributed to
+        # its own scope, inherited by no engine
+        with obs.scope(other_scope):
+            kd._note_fallback("block_bwd")
+        assert eng.pallas_fallbacks().get("block_bwd", 0) == \
+            base.get("block_bwd", 0)
+        assert kd.pallas_fallbacks(scope=other_scope) == {"block_bwd": 1}
+        # the process-wide view still sums every scope
+        assert kd.pallas_fallbacks().get("block_bwd", 0) >= 1
+        # a fallback traced under this engine's scope lands on it alone,
+        # with provenance labels (entry/reason/shape/scope) on the series
+        with obs.scope(eng.obs_scope):
+            kd._note_fallback("block_bwd", reason="batched_positions",
+                              shape=(2, 1, 4, 8))
         assert eng.pallas_fallbacks().get("block_bwd", 0) == \
             base.get("block_bwd", 0) + 1
-        eng2 = build_engine("h2o-danube-1.8b", smoke=True, c=1, data=1,
-                            eng=EngineConfig(max_slots=2, page_size=4,
-                                             pages_per_shard=32, max_len=64),
-                            params=eng.params)
-        assert eng2.pallas_fallbacks() == {}, (
-            "a fresh engine inherited fallbacks traced before its "
-            "construction")
-        kd._note_fallback("block_bwd")
-        assert eng2.pallas_fallbacks() == {"block_bwd": 1}
-        assert eng.pallas_fallbacks().get("block_bwd", 0) == \
-            base.get("block_bwd", 0) + 2
+        counter = obs.global_registry().get(kd.FALLBACK_METRIC)
+        assert counter.sum(entry="block_bwd", reason="batched_positions",
+                           shape="2x1x4x8", scope=eng.obs_scope) == 1
+        # fresh engines get fresh scopes -> empty fallback reports
+        assert eng.obs_scope != other_scope
     finally:
-        kd._fallbacks["block_bwd"] -= 2      # undo the synthetic ticks
+        # undo the synthetic ticks (scope-targeted reset leaves the rest)
+        kd.reset_pallas_fallbacks(scope=other_scope)
+        kd.reset_pallas_fallbacks(scope=eng.obs_scope)

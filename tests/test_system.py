@@ -40,7 +40,7 @@ BATCHES = {
     ],
     "plan_and_microbatch": [
         "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",
-        "plan_constructs",
+        "plan_constructs", "commlog_c2",
     ],
 }
 
@@ -102,3 +102,10 @@ def test_train_driver_end_to_end(tmp_path):
     recs = [json.loads(l) for l in metrics.read_text().splitlines()]
     assert [r["step"] for r in recs] == list(range(1, 7)) + [7, 8]
     assert all("loss" in r and "grad_norm" in r for r in recs)
+    # per-phase wall-time breakdown from the obs span layer (host
+    # perf_counter only — no per-step device sync): every record carries
+    # data/step/ckpt seconds, and the ckpt launch cost lands on boundaries
+    assert all({"data_s", "step_s", "ckpt_s"} <= r.keys() for r in recs)
+    assert all(r["data_s"] >= 0 and r["step_s"] > 0 for r in recs)
+    ckpt_steps = [r["step"] for r in recs if r["ckpt_s"] > 0]
+    assert ckpt_steps and set(ckpt_steps) <= {3, 6, 4, 8}, ckpt_steps

@@ -17,6 +17,16 @@ as the target, so this benchmark has three parts:
              (ring / StarTrail-2 / Ulysses), cross-checked against the
              autotuner's pick; writes results/BENCH_plan.json and fails if
              the autotuned pick is the slowest measured arrangement.
+  (overlap)  ``--overlap-sweep``: the pipelined double-buffered ring scan
+             A/B — baseline (compute-then-permute) vs pipelined at
+             comm_chunks 1/2/4 on the C=2 smoke mesh. Per cell: measured
+             tokens/s, the HLO-derived overlap fraction
+             (``obs.commlog.overlap_report``), the analytical prediction,
+             and a one-train-step bit-identity comparison against the
+             baseline. Writes results/BENCH_throughput.json; ``--check``
+             gates bit-identity, overlap > 0, no tokens/s regression and
+             zero pallas block_bwd fallbacks (the CI ``train-bench-smoke``
+             job).
 """
 
 import json
@@ -167,6 +177,147 @@ def compare_arrangements(emit, *, arch="h2o-danube-1.8b", seq=128, batch=4,
     return record
 
 
+OVERLAP_CELLS = [
+    # name, pipeline_scan, comm_chunks
+    ("baseline", False, 1),
+    ("pipelined", True, 1),
+    ("pipelined_cc2", True, 2),
+    ("pipelined_cc4", True, 4),
+]
+
+
+def overlap_sweep(emit, *, arch="h2o-danube-1.8b", seq=128, batch=4,
+                  steps=3, check=False, slack=0.10):
+    """Pipelined-ring A/B on the C=2 smoke mesh (8 host devices).
+
+    Every cell trains the same smoke model from the same init; the
+    pipelined cells must be *bit-identical* to the baseline after one
+    optimizer step (the reorder changes op issue order, not math). CPU
+    wall-clocks are noisy, so the tokens/s gate allows ``slack``
+    regression on the best pipelined cell vs baseline.
+    """
+    from repro.configs import registry
+    from repro.core import zigzag as zz
+    from repro.kernels import dispatch
+    from repro.models.factory import build_model
+    from repro.obs import commlog
+    from repro.optim import adamw
+
+    if len(jax.devices()) < 8:
+        emit("bench_overlap", 0, "skipped=needs 8 devices")
+        return None
+    cfg = registry.get_smoke(arch)
+    shape = ShapeConfig("bench", seq_len=seq, global_batch=batch,
+                        kind="train")
+    model = build_model(cfg)
+    adam_cfg = adamw.AdamWConfig(warmup_steps=0)
+
+    plans = {name: make_plan(
+        cfg, shape, arch=arch, n_devices=8, data=1, c=2, scheme="startrail",
+        mesh_kind="local", pipeline_scan=pipe, comm_chunks=cc)
+        for name, pipe, cc in OVERLAP_CELLS}
+    mesh = plans["baseline"].build_mesh()
+
+    def one_step(plan):
+        """Params after one optimizer step from the shared init/batch."""
+        jstep, sh = plan.build_train_step(model, adam_cfg, mesh=mesh)
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw.init_state(params, adam_cfg)
+        b = model.make_batch(jax.random.PRNGKey(1), shape)
+        perm = zz.make_positions(seq, plan.sp_size,
+                                 plan.run_config().seq_scheme).reshape(-1)
+        b = {k: jnp.take(v, perm, axis=1) for k, v in b.items()}
+        params = jax.device_put(params, sh["params"])
+        opt = jax.device_put(opt, sh["opt"])
+        b = jax.device_put(b, sh["batch"])
+        params, _, metrics = jstep(params, opt, b)
+        return ([np.asarray(x) for x in jax.tree.leaves(params)],
+                float(metrics["loss"]))
+
+    base_params, base_loss = one_step(plans["baseline"])
+    cells = []
+    for name, pipe, cc in OVERLAP_CELLS:
+        plan = plans[name]
+        t = autotune_lib.measure_plan(model, plan, steps=steps,
+                                      adam_cfg=adam_cfg, mesh=mesh)
+        tok_s = batch * seq / t
+        ov = commlog.overlap_report(cfg, plan, batch=1)
+        analytical = cost.arrangement_time(
+            cfg, shape, 8, cost.Arrangement("startrail", 2, 2,
+                                            placement=plan.placement),
+            batch=batch, overlap_frac=ov["overlap_fraction"],
+            comm_chunks=cc)
+        if name == "baseline":
+            bit_identical = True
+        else:
+            p_leaves, loss = one_step(plan)
+            bit_identical = (loss == base_loss and
+                             len(p_leaves) == len(base_params) and
+                             all(np.array_equal(a, b) for a, b in
+                                 zip(p_leaves, base_params)))
+        cells.append({
+            "cell": name, "pipeline_scan": pipe, "comm_chunks": cc,
+            "step_time_s": t, "tokens_per_s": tok_s,
+            "overlap_fraction": ov["overlap_fraction"],
+            "permutes_with_overlap_window":
+                ov["permutes_with_overlap_window"],
+            "analytical_s": analytical,
+            "bit_identical_to_baseline": bit_identical,
+        })
+        emit(f"bench_overlap_{name}", tok_s,
+             f"step_us={t*1e6:.0f},overlap={ov['overlap_fraction']:.3f},"
+             f"bit_identical={bit_identical}")
+
+    # the ragged backward kernels retired the block_bwd pallas->ref
+    # fallback: probe it directly (batched per-row positions)
+    dispatch.reset_pallas_fallbacks()
+    pos = jnp.stack([jnp.arange(8, dtype=jnp.int32),
+                     jnp.arange(8, dtype=jnp.int32) + 1])
+    key = jax.random.PRNGKey(0)
+    qp = jax.random.normal(key, (2, 8, 2, 16), jnp.float32)
+    op, lsep = dispatch.block_fwd(qp, qp, qp, pos, pos, causal=True,
+                                  impl="pallas")
+    delta = jnp.sum(op * qp, axis=-1).swapaxes(1, 2).astype(jnp.float32)
+    dispatch.block_bwd(qp, qp, qp, qp, lsep, delta, pos, pos, causal=True,
+                       impl="pallas")
+    fallbacks = dispatch.pallas_fallbacks()
+
+    base = cells[0]
+    best_piped = max((c for c in cells if c["pipeline_scan"]),
+                     key=lambda c: c["tokens_per_s"])
+    record = {
+        "arch": arch, "seq_len": seq, "batch": batch, "steps_timed": steps,
+        "c": 2, "sp": 8, "cells": cells,
+        "baseline_tokens_per_s": base["tokens_per_s"],
+        "best_pipelined_cell": best_piped["cell"],
+        "best_pipelined_tokens_per_s": best_piped["tokens_per_s"],
+        "pallas_fallbacks": fallbacks,
+        "slack": slack,
+    }
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / "BENCH_throughput.json").write_text(
+        json.dumps(record, indent=2))
+
+    if check:
+        bad = [c["cell"] for c in cells
+               if not c["bit_identical_to_baseline"]]
+        assert not bad, f"pipelined cells not bit-identical: {bad}"
+        piped = [c for c in cells if c["pipeline_scan"]]
+        assert all(c["overlap_fraction"] > 0 for c in piped), (
+            "no comm/compute overlap window measured in the pipelined "
+            f"cells: { {c['cell']: c['overlap_fraction'] for c in piped} }")
+        assert best_piped["tokens_per_s"] >= \
+            base["tokens_per_s"] * (1 - slack), (
+            f"pipelined throughput regressed: best "
+            f"{best_piped['tokens_per_s']:.0f} tok/s vs baseline "
+            f"{base['tokens_per_s']:.0f} (slack {slack:.0%})")
+        assert fallbacks == {}, (
+            f"pallas fallbacks traced (block_bwd ragged kernel should "
+            f"have retired them): {fallbacks}")
+        emit("bench_overlap_check", 1, "all gates passed")
+    return record
+
+
 def run(emit):
     model_part(emit)
     wall_part(emit)
@@ -178,5 +329,7 @@ if __name__ == "__main__":
 
     if "--compare-arrangements" in sys.argv:
         compare_arrangements(_emit)
+    elif "--overlap-sweep" in sys.argv:
+        overlap_sweep(_emit, check="--check" in sys.argv)
     else:
         run(_emit)

@@ -132,6 +132,12 @@ class RunConfig:
     sharding_rules: str = "default"
     # unroll inner scans so cost_analysis counts every iteration (dry-run)
     unroll_scans: bool = False
+    # double-buffered ring scans: issue step s+1's ppermute before step s's
+    # block kernel (bit-identical; off = legacy compute-then-permute order)
+    pipeline_scan: bool = True
+    # split each ring transfer into this many sequence sub-chunks (must
+    # divide the team-local sequence length C*N/P)
+    comm_chunks: int = 1
 
 
 def model_flops_per_token(cfg: ModelConfig) -> float:

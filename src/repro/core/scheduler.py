@@ -18,8 +18,13 @@ attention-parallel size C (bf16, bytes):
     ring steps:                                 P / C^2
     attention compute per device:               2 * (2*N^2*Hq*dh/P)  flops
 
-Overlap: per ring step, XLA overlaps the permute with the block compute;
-the exposed time is max(compute_step, comm_step) + per-step latency. The
+Overlap: per ring step, XLA overlaps the permute with the block compute.
+The model is parameterized by a *measured* overlap fraction f (default 1.0
+= perfect hiding; ``obs.commlog.overlap_report`` measures the real one
+from the compiled HLO's collective placement) and by ``comm_chunks`` n
+(sub-chunked transfers: the exposed wire time divides by n, the per-step
+message latency multiplies by n). At f=1, n=1 the exposed time per step is
+max(compute_step, wire_step) + latency — the old perfect-overlap form. The
 placement option decides which axis gets the fast links: 'team_inner'
 (Collect_intra) gives the team collectives the short hops; 'ring_inner'
 (P2P_intra) favours the permutes. We model it as a bandwidth discount on
@@ -59,8 +64,25 @@ class ClusterModel:
 
 
 def attention_step_cost(w: AttnWorkload, cl: ClusterModel, c: int,
-                        placement: str) -> Dict[str, float]:
-    """Analytic per-block cost (seconds) for attention-parallel size c."""
+                        placement: str, *, overlap_frac: float = 1.0,
+                        comm_chunks: int = 1) -> Dict[str, float]:
+    """Analytic per-block cost (seconds) for attention-parallel size c.
+
+    ``overlap_frac`` f is the measured fraction of each ring transfer's
+    wire time that hides under the block compute (1.0 = the perfect
+    hiding the model used to assume; ``obs.commlog.overlap_report``
+    measures it from the compiled HLO's collective placement).
+    ``comm_chunks`` n splits each transfer into n sub-chunk messages: the
+    *exposed* (un-hidden) wire time shrinks ~n-fold — the next step's
+    kernel starts once chunk 0 lands — at the price of n per-message
+    latencies. Chunking therefore wins on bandwidth-bound shapes (large
+    transfers, low f) and loses on latency-bound ones.
+    """
+    if not 0.0 <= overlap_frac <= 1.0:
+        raise ValueError(f"overlap_frac must be in [0, 1], "
+                         f"got {overlap_frac}")
+    if comm_chunks < 1:
+        raise ValueError(f"comm_chunks must be >= 1, got {comm_chunks}")
     p = cl.sp_size
     r = p // (c * c)
     causal_frac = 0.5 if w.causal else 1.0
@@ -87,11 +109,19 @@ def attention_step_cost(w: AttnWorkload, cl: ClusterModel, c: int,
         bw_coll = cl.link_bw / cl.far_penalty
 
     t_coll = coll_bytes / bw_coll
-    t_ring_step = ring_step_bytes / bw_ring + cl.step_latency
+    t_wire_step = ring_step_bytes / bw_ring
+    t_lat_step = comm_chunks * cl.step_latency
     t_compute_step = t_compute / max(r, 1)
-    # per-step overlap of permute with block compute
-    t_ring_exposed = max(r - 1, 0) * max(t_ring_step, t_compute_step)
+    # per-step overlap of the permute with the block compute: a fraction
+    # overlap_frac of the wire time (up to the compute available) hides;
+    # the exposed remainder is pipelined across the comm_chunks sub-chunk
+    # transfers (compute on chunk 0 overlaps the wire of chunks 1..n)
+    hidden = overlap_frac * min(t_wire_step, t_compute_step)
+    t_step_exposed = (t_compute_step + (t_wire_step - hidden) / comm_chunks
+                      + t_lat_step)
+    t_ring_exposed = max(r - 1, 0) * t_step_exposed
     t_ring_exposed += t_compute_step  # last step has no permute to hide
+    t_ring_step = t_wire_step + t_lat_step
     # team collectives overlap with the qkv matmuls only partially (paper:
     # "up to two-thirds"); expose one third
     t_total = t_ring_exposed + t_coll / 3.0
@@ -100,7 +130,20 @@ def attention_step_cost(w: AttnWorkload, cl: ClusterModel, c: int,
         "c": c, "placement": placement, "total_s": t_total,
         "compute_s": t_compute, "collective_bytes": coll_bytes,
         "ring_bytes": ring_bytes, "ring_steps": r,
+        "compute_step_s": t_compute_step, "ring_step_s": t_ring_step,
+        "overlap_frac": overlap_frac, "comm_chunks": comm_chunks,
     }
+
+
+def choose_comm_chunks(w: AttnWorkload, cl: ClusterModel, c: int,
+                       placement: str, *, overlap_frac: float = 1.0,
+                       grid: Tuple[int, ...] = (1, 2, 4)) -> int:
+    """Smallest-cost comm_chunks under the overlap model (ties -> fewer
+    chunks: every extra chunk is an extra message to schedule)."""
+    best = min(grid, key=lambda n: (attention_step_cost(
+        w, cl, c, placement, overlap_frac=overlap_frac,
+        comm_chunks=n)["total_s"], n))
+    return int(best)
 
 
 def schedule(w: AttnWorkload, cl: ClusterModel,

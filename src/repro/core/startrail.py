@@ -13,11 +13,16 @@ computed as:
   2. one ppermute over the joint SP axes with the Alg.-2 placement
      permutation                                 (paper: initial K/V dispatch)
   3. a ``jax.lax.scan`` of R ring steps: flash-attention block accumulate
-     (online softmax) + ppermute of K/V along ``sp_ring``
-                                                 (paper: concentric rings;
-                                                 XLA overlaps the
-                                                 collective-permute with the
-                                                 block compute)
+     (online softmax, merged into the running (o, lse) accumulator — fused
+     into the Pallas kernel epilogue on ``block_impl='pallas'``) + ppermute
+     of K/V along ``sp_ring``                    (paper: concentric rings;
+                                                 with ``pipeline=True`` the
+                                                 step-s+1 transfer is issued
+                                                 before the step-s block
+                                                 kernel — double-buffered —
+                                                 optionally split into
+                                                 ``comm_chunks`` sub-chunk
+                                                 transfers)
   4. log-sum-exp combine across ``sp_team`` + psum_scatter
                                                  (paper: ReduceScatter_combine)
 
@@ -44,7 +49,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import topology as topo_lib
-from repro.core.combine import NEG_INF, combine_pair
+from repro.core.combine import NEG_INF
 from repro.kernels import dispatch as kernels
 
 
@@ -62,7 +67,16 @@ class StarTrailConfig:
       block_impl: 'ref' (pure-jnp / XLA; CPU + dry-run default) or 'pallas'
         (TPU kernel; validated in interpret mode on CPU).
       block_skip: skip fully-masked ring steps with lax.cond (wins for SWA
-        with contiguous layout).
+        with contiguous layout; applies to forward *and* backward scans).
+      pipeline: double-buffered ring scans — issue the step-s+1 ppermute
+        *before* the step-s block kernel in program order, carrying the
+        in-flight buffer through the scan, so the scheduler overlaps the
+        wire time with the block compute. Same ops as the non-pipelined
+        scan, reordered issue: bit-identical results.
+      comm_chunks: split each ring transfer into this many sequence
+        sub-chunks (independent ppermutes), letting compute on chunk 0
+        overlap the wire time of chunks 1..n. 1 = whole-tensor transfers.
+        Values are bit-exact for any chunking (pure data movement).
     """
 
     seq_len: int
@@ -77,6 +91,8 @@ class StarTrailConfig:
     block_skip: bool = False
     unroll: bool = False   # unroll ring scans (dry-run cost accounting:
                            # XLA cost_analysis counts while-loop bodies once)
+    pipeline: bool = True
+    comm_chunks: int = 1
 
     @property
     def grp_axis(self) -> str:
@@ -126,6 +142,15 @@ def _block_fwd(cfg: StarTrailConfig, q, k, v, pos_q, pos_k):
     )
 
 
+def _block_fwd_merge(cfg: StarTrailConfig, q, k, v, o_acc, lse_acc,
+                     pos_q, pos_k):
+    return kernels.block_fwd_merge(
+        q, k, v, o_acc, lse_acc, pos_q, pos_k, causal=cfg.causal,
+        window=cfg.window, scale=cfg.scale, prefix_len=cfg.prefix_len,
+        impl=cfg.block_impl,
+    )
+
+
 def _block_bwd(cfg: StarTrailConfig, q, k, v, do, lse, delta, pos_q, pos_k):
     return kernels.block_bwd(
         q, k, v, do, lse, delta, pos_q, pos_k,
@@ -148,6 +173,25 @@ def _fully_masked(cfg: StarTrailConfig, pos_q, pos_k):
         # any key inside the prefix keeps the tile alive
         dead = dead & (jnp.min(pos_k) >= cfg.prefix_len)
     return dead
+
+
+def _chunked_ppermute(x, axes, perm, n_chunks: int, axis: int):
+    """ppermute ``x``, optionally as ``n_chunks`` independent sequence
+    sub-chunk transfers along ``axis``.
+
+    Chunking is pure data movement — values are bit-exact for any n — but
+    lets the scheduler start the step-s+1 block kernel after chunk 0 lands
+    instead of waiting for the whole tensor (see docs/TUNING.md).
+    """
+    if n_chunks <= 1 or jnp.ndim(x) == 0:
+        return jax.lax.ppermute(x, axes, perm)
+    if x.shape[axis] % n_chunks:
+        raise ValueError(
+            f"comm_chunks={n_chunks} must divide the permuted sequence "
+            f"axis (got length {x.shape[axis]})")
+    parts = jnp.split(x, n_chunks, axis=axis)
+    return jnp.concatenate(
+        [jax.lax.ppermute(p, axes, perm) for p in parts], axis=axis)
 
 
 # ---------------------------------------------------------------------------
@@ -212,18 +256,36 @@ def _make_attention(cfg: StarTrailConfig):
 
         ring_perm = tp.ring_permutation()
 
-        # 3. concentric-ring scan
+        # 3. concentric-ring scan (double-buffered when cfg.pipeline: the
+        # step-s+1 K/V transfer is issued *before* the step-s block kernel,
+        # carrying the in-flight buffer through the carry — same ops as the
+        # issue-after order, so results are bit-identical)
         def step(carry, s):
             k_cur, v_cur, o_acc, lse_acc = carry
             kv_team = ((ji + s) % r) * c + ti
             pos_k = team_positions(kv_team, c, cfg.seq_len, p, cfg.seq_scheme)
+
+            def rotate():
+                # rotate K/V for the next step (also on the last step: the
+                # chunks end back in placement order, which the backward
+                # reuses).
+                with jax.named_scope("ring_permute_issue"):
+                    k_nxt = _chunked_ppermute(k_cur, cfg.axes, ring_perm,
+                                              cfg.comm_chunks, 1)
+                    v_nxt = _chunked_ppermute(v_cur, cfg.axes, ring_perm,
+                                              cfg.comm_chunks, 1)
+                return k_nxt, v_nxt
+
+            if cfg.pipeline:
+                k_nxt, v_nxt = rotate()
             # barrier: stops XLA hoisting the f32 upcast through the
             # ppermute (keeps K/V bf16 on the wire)
             k_use, v_use = jax.lax.optimization_barrier((k_cur, v_cur))
 
             def compute(o_acc, lse_acc):
-                o_s, lse_s = _block_fwd(cfg, q_team, k_use, v_use, pos_q, pos_k)
-                return combine_pair(o_acc, lse_acc, o_s, lse_s)
+                with jax.named_scope("ring_block_compute"):
+                    return _block_fwd_merge(cfg, q_team, k_use, v_use,
+                                            o_acc, lse_acc, pos_q, pos_k)
 
             if cfg.block_skip:
                 o_acc, lse_acc = jax.lax.cond(
@@ -236,10 +298,8 @@ def _make_attention(cfg: StarTrailConfig):
             else:
                 o_acc, lse_acc = compute(o_acc, lse_acc)
 
-            # rotate K/V for the next step (also on the last step: the chunks
-            # end back in placement order, which the backward reuses).
-            k_nxt = jax.lax.ppermute(k_cur, cfg.axes, ring_perm)
-            v_nxt = jax.lax.ppermute(v_cur, cfg.axes, ring_perm)
+            if not cfg.pipeline:
+                k_nxt, v_nxt = rotate()
             return (k_nxt, v_nxt, o_acc, lse_acc), None
 
         o0 = jnp.zeros((B, c * S, Hq, D), jnp.float32)
@@ -298,17 +358,36 @@ def _make_attention(cfg: StarTrailConfig):
         dk_acc = jnp.zeros((B, CS, Hkv, D), jnp.float32)
         dv_acc = jnp.zeros((B, CS, Hkv, D), jnp.float32)
 
+        # seq axis each circulating leaf chunks along (team is a scalar)
+        pack_axis = dict(q=1, do=1, delta=2, lse=2, dq=1, team=None)
+
+        def _pack_permute(name, a):
+            ax = pack_axis[name]
+            return _chunked_ppermute(a, cfg.axes, ring_perm,
+                                     cfg.comm_chunks if ax is not None else 1,
+                                     ax if ax is not None else 0)
+
+        # double-buffered like the forward: the step-s+1 Q-pack transfer of
+        # the *input* leaves (q, do, delta, lse, team) is issued before the
+        # step-s block gradients; dq — produced by the compute — permutes
+        # after. Same six leaf permutes as the issue-after order.
         def step(carry, _):
             pack, dk_acc, dv_acc = carry
             pos_q = team_positions(pack["team"], c, cfg.seq_len, p, cfg.seq_scheme)
+
+            if cfg.pipeline:
+                with jax.named_scope("ring_permute_issue"):
+                    pack_nxt = {n: _pack_permute(n, a)
+                                for n, a in pack.items() if n != "dq"}
             q_use, do_use = jax.lax.optimization_barrier(
                 (pack["q"], pack["do"]))  # keep the circulating pack bf16
 
             def compute(pack_dq, dk_acc, dv_acc):
-                dq_c, dk_c, dv_c = _block_bwd(
-                    cfg, q_use, k0, v0, do_use, pack["lse"],
-                    pack["delta"], pos_q, pos_k,
-                )
+                with jax.named_scope("ring_block_compute"):
+                    dq_c, dk_c, dv_c = _block_bwd(
+                        cfg, q_use, k0, v0, do_use, pack["lse"],
+                        pack["delta"], pos_q, pos_k,
+                    )
                 return pack_dq + dq_c, dk_acc + dk_c, dv_acc + dv_c
 
             if cfg.block_skip:
@@ -323,8 +402,11 @@ def _make_attention(cfg: StarTrailConfig):
             else:
                 dq_new, dk_acc, dv_acc = compute(pack["dq"], dk_acc, dv_acc)
 
-            pack = dict(pack, dq=dq_new)
-            pack = jax.tree.map(lambda a: jax.lax.ppermute(a, cfg.axes, ring_perm), pack)
+            if cfg.pipeline:
+                pack = dict(pack_nxt, dq=_pack_permute("dq", dq_new))
+            else:
+                pack = dict(pack, dq=dq_new)
+                pack = {n: _pack_permute(n, a) for n, a in pack.items()}
             return (pack, dk_acc, dv_acc), None
 
         (pack, dk_acc, dv_acc), _ = jax.lax.scan(

@@ -28,15 +28,21 @@ for the entry points:
 ``plan.make_plan`` applies to unset ``block_impl`` / ``kernel_impl`` knobs.
 
 The Pallas *training* block kernels take shared ``(S,)`` position vectors;
-forward calls with *batched* ``(B, S)`` positions (per-sequence cache
-lengths) run the scalar-prefetch ragged kernel
-(``kernels/ragged_prefill.py``) — they no longer fall back to the
-reference. The backward pass has no ragged kernel yet, so ``block_bwd``
-with batched positions still falls back, **explicitly**: each occurrence
-is counted per entry point (``pallas_fallbacks()``) and logged once per
-entry point, so a path that silently lost its Pallas kernel shows up in
-logs and is assertable in tests (the counter ticks at *trace* time — once
-per jit compilation, not per step).
+calls with *batched* ``(B, S)`` positions (per-sequence cache lengths) run
+the scalar-prefetch ragged kernels — ``kernels/ragged_prefill.py`` forward
+and the ragged ``flash_attention_bwd`` path backward — so neither
+direction falls back to the reference any more. The fallback *accounting*
+stays: any future pallas->ref fallback must go through
+``_note_fallback`` so it is counted per entry point
+(``pallas_fallbacks()``) and logged once, assertable in tests (the counter
+ticks at *trace* time — once per jit compilation, not per step).
+
+``block_fwd_merge`` is the ring-scan entry: it folds one block's partials
+into the running ``(o_acc, lse_acc)`` accumulator. On 'pallas' the combine
+is fused into the flash kernel's epilogue (no separate full-array pass
+over the f32 accumulator); on 'ref' it stays the explicit two-step
+``block_attention`` + ``combine_pair`` form — the oracle the fused kernel
+is validated against.
 """
 
 from __future__ import annotations
@@ -48,6 +54,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
+from repro.core.combine import combine_pair as _combine_pair
 from repro.obs import registry as _obs
 
 IMPLS = ("ref", "pallas")
@@ -150,18 +157,42 @@ def block_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
         prefix_len=prefix_len)
 
 
+def block_fwd_merge(q, k, v, o_acc, lse_acc, pos_q, pos_k, *, causal=True,
+                    window=None, scale=None, prefix_len=None,
+                    impl="ref") -> Tuple[jax.Array, jax.Array]:
+    """One ring step: block attention merged into the running accumulator.
+
+    Semantically ``combine_pair(o_acc, lse_acc, *block_fwd(...))``. The
+    'pallas' path with shared positions fuses the combine into the flash
+    kernel epilogue, saving the extra HBM pass over the f32 accumulator;
+    every other path keeps the explicit two-step form (the oracle).
+    """
+    if impl == "pallas" and not _batched_positions(pos_q, pos_k):
+        from repro.kernels import ops as _ops
+
+        return _ops.flash_attention_fwd(
+            q, k, v, pos_q, pos_k, o_acc=o_acc, lse_acc=lse_acc,
+            causal=causal, window=window, scale=scale,
+            prefix_len=prefix_len)
+    o_s, lse_s = block_fwd(q, k, v, pos_q, pos_k, causal=causal,
+                           window=window, scale=scale,
+                           prefix_len=prefix_len, impl=impl)
+    return _combine_pair(o_acc, lse_acc, o_s, lse_s)
+
+
 def block_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,
               window=None, scale=None, prefix_len=None, impl="ref"):
-    """Flash backward for one block pair -> (dq, dk, dv) in float32."""
-    if impl == "pallas":
-        if not _batched_positions(pos_q, pos_k):
-            from repro.kernels import ops as _ops
+    """Flash backward for one block pair -> (dq, dk, dv) in float32.
 
-            return _ops.flash_attention_bwd(
-                q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
-                window=window, scale=scale, prefix_len=prefix_len)
-        _note_fallback("block_bwd", reason="batched_positions",
-                       shape=jnp.shape(q))
+    Batched (B, S) positions run the scalar-prefetch ragged backward
+    kernels — no pallas->ref fallback on this entry point any more.
+    """
+    if impl == "pallas":
+        from repro.kernels import ops as _ops
+
+        return _ops.flash_attention_bwd(
+            q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
+            window=window, scale=scale, prefix_len=prefix_len)
     return _ref.block_attention_bwd(
         q, k, v, do, lse, delta, pos_q, pos_k, causal=causal, window=window,
         scale=scale, prefix_len=prefix_len)

@@ -68,25 +68,22 @@ def _tile_live(pos_q, pos_k, causal, window, prefix_len=None):
     return live
 
 
+def choose_block(s: int, pref: int) -> int:
+    """Largest tile size <= pref dividing s (non-power-of-two rows tile
+    at their largest aligned divisor instead of raising)."""
+    for d in range(min(pref, s), 0, -1):
+        if s % d == 0:
+            return d
+    return s
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
 
-def _fwd_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
-                o_ref, lse_ref,                              # outputs
-                acc_ref, m_ref, l_ref,                       # scratch
-                *, causal, window, scale, prefix_len, n_k):
-    ik = pl.program_id(3)
-
-    @pl.when(ik == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-
-    pos_q = pos_q_ref[...]
-    pos_k = pos_k_ref[...]
-
+def _fwd_accumulate(pos_q, pos_k, q_ref, k_ref, v_ref, acc_ref, m_ref,
+                    l_ref, *, causal, window, scale, prefix_len):
+    """One K/V tile's online-softmax update of the (acc, m, l) scratch."""
     @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)   # (bq, D)
@@ -112,15 +109,83 @@ def _fwd_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
             preferred_element_type=jnp.float32)
         m_ref[...] = m_cur
 
+
+def _block_partial(acc_ref, m_ref, l_ref):
+    """(o_blk, lse_blk) f32 of the accumulated tiles; dead rows -> lse=-inf."""
+    m = m_ref[...]
+    l = l_ref[...]
+    dead = m <= NEG_INF / 2
+    l_safe = jnp.where(l == 0.0, 1.0, l)
+    o_blk = acc_ref[...] / l_safe[:, None]
+    lse_blk = jnp.where(
+        dead, NEG_INF, jnp.where(dead, 0.0, m) + jnp.log(l_safe))
+    return o_blk, lse_blk
+
+
+def _fwd_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
+                o_ref, lse_ref,                              # outputs
+                acc_ref, m_ref, l_ref,                       # scratch
+                *, causal, window, scale, prefix_len, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    _fwd_accumulate(pos_q_ref[...], pos_k_ref[...], q_ref, k_ref, v_ref,
+                    acc_ref, m_ref, l_ref, causal=causal, window=window,
+                    scale=scale, prefix_len=prefix_len)
+
     @pl.when(ik == n_k - 1)
     def _finalize():
-        m = m_ref[...]
-        l = l_ref[...]
-        dead = m <= NEG_INF / 2
-        l_safe = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, :, 0, :] = (acc_ref[...] / l_safe[:, None]).astype(o_ref.dtype)
+        o_blk, lse_blk = _block_partial(acc_ref, m_ref, l_ref)
+        o_ref[0, :, 0, :] = o_blk.astype(o_ref.dtype)
+        lse_ref[0, 0, :] = lse_blk.astype(lse_ref.dtype)
+
+
+def _fwd_merge_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,
+                      o_acc_ref, lse_acc_ref,                # running acc in
+                      o_ref, lse_ref,                        # merged acc out
+                      acc_ref, m_ref, l_ref,                 # scratch
+                      *, causal, window, scale, prefix_len, n_k):
+    """``_fwd_kernel`` with the ring-step combine fused into the epilogue.
+
+    Instead of writing the block partial and paying a separate full-array
+    ``combine_pair`` pass over the f32 accumulator, the finalize reads the
+    running ``(o_acc, lse_acc)`` tile and emits the rescaled merge directly
+    — the exact op sequence of ``core.combine.combine_pair``, in-register.
+    """
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    _fwd_accumulate(pos_q_ref[...], pos_k_ref[...], q_ref, k_ref, v_ref,
+                    acc_ref, m_ref, l_ref, causal=causal, window=window,
+                    scale=scale, prefix_len=prefix_len)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        o_blk, lse_blk = _block_partial(acc_ref, m_ref, l_ref)
+        o_prev = o_acc_ref[0, :, 0, :].astype(jnp.float32)
+        lse_prev = lse_acc_ref[0, 0, :].astype(jnp.float32)
+        # combine_pair(o_prev, lse_prev, o_blk, lse_blk), op for op
+        m2 = jnp.maximum(lse_prev, lse_blk)
+        both_dead = m2 <= NEG_INF / 2
+        m2_safe = jnp.where(both_dead, 0.0, m2)
+        w1 = jnp.exp(lse_prev - m2_safe)
+        w2 = jnp.exp(lse_blk - m2_safe)
+        denom = w1 + w2
+        denom_safe = jnp.where(denom == 0.0, 1.0, denom)
+        o_ref[0, :, 0, :] = ((w1[:, None] * o_prev + w2[:, None] * o_blk)
+                             / denom_safe[:, None]).astype(o_ref.dtype)
         lse_ref[0, 0, :] = jnp.where(
-            dead, NEG_INF, jnp.where(dead, 0.0, m) + jnp.log(l_safe)
+            both_dead, NEG_INF, m2_safe + jnp.log(denom_safe)
         ).astype(lse_ref.dtype)
 
 
@@ -130,11 +195,20 @@ def _fwd_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref,  # inputs
                      "block_k", "interpret"),
 )
 def flash_attention_fwd(
-    q, k, v, pos_q, pos_k, *, causal=True, window=None, scale=None,
-    prefix_len=None, block_q=DEFAULT_BLOCK_Q, block_k=DEFAULT_BLOCK_K,
-    interpret=None,
+    q, k, v, pos_q, pos_k, o_acc=None, lse_acc=None, *, causal=True,
+    window=None, scale=None, prefix_len=None, block_q=DEFAULT_BLOCK_Q,
+    block_k=DEFAULT_BLOCK_K, interpret=None,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Block flash attention -> (o, lse). Same semantics as ref.block_attention."""
+    """Block flash attention -> (o, lse). Same semantics as ref.block_attention.
+
+    With ``(o_acc, lse_acc)`` — a running partial accumulator of shapes
+    ``(B, Sq, Hq, D)`` / ``(B, Hq, Sq)`` — the per-ring-step combine is
+    fused into the kernel epilogue: the result is
+    ``combine_pair(o_acc, lse_acc, *flash_attention_fwd(...))`` without the
+    separate full-array pass over the f32 accumulator.
+    """
+    if (o_acc is None) != (lse_acc is None):
+        raise ValueError("o_acc and lse_acc must be passed together")
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     G = Hq // Hkv
@@ -149,27 +223,38 @@ def flash_attention_fwd(
         interpret = jax.default_backend() == "cpu"
 
     grid = (B, Hq, n_q, n_k)
+    merge = o_acc is not None
     kernel = functools.partial(
-        _fwd_kernel, causal=causal, window=window, scale=scale,
-        prefix_len=prefix_len, n_k=n_k)
+        _fwd_merge_kernel if merge else _fwd_kernel, causal=causal,
+        window=window, scale=scale, prefix_len=prefix_len, n_k=n_k)
 
     params = {}
     if not interpret:
         params["compiler_params"] = pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"))
 
+    in_specs = [
+        pl.BlockSpec((block_q,), lambda b, h, iq, ik: (iq,)),
+        pl.BlockSpec((block_k,), lambda b, h, iq, ik: (ik,)),
+        pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
+        pl.BlockSpec((1, block_k, 1, D),
+                     lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        pl.BlockSpec((1, block_k, 1, D),
+                     lambda b, h, iq, ik: (b, ik, h // G, 0)),
+    ]
+    inputs = [pos_q, pos_k, q, k, v]
+    if merge:
+        in_specs += [
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
+        ]
+        inputs += [o_acc.astype(jnp.float32), lse_acc.astype(jnp.float32)]
+
     o, lse = pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_q,), lambda b, h, iq, ik: (iq,)),
-            pl.BlockSpec((block_k,), lambda b, h, iq, ik: (ik,)),
-            pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
-            pl.BlockSpec((1, block_k, 1, D),
-                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
-            pl.BlockSpec((1, block_k, 1, D),
-                         lambda b, h, iq, ik: (b, ik, h // G, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, block_q, 1, D), lambda b, h, iq, ik: (b, iq, h, 0)),
             pl.BlockSpec((1, 1, block_q), lambda b, h, iq, ik: (b, h, iq)),
@@ -185,7 +270,7 @@ def flash_attention_fwd(
         ],
         interpret=interpret,
         **params,
-    )(pos_q, pos_k, q, k, v)
+    )(*inputs)
     return o, lse
 
 
@@ -193,18 +278,9 @@ def flash_attention_fwd(
 # backward: dq kernel (accumulate over K/V blocks)
 # ---------------------------------------------------------------------------
 
-def _bwd_dq_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
-                   lse_ref, delta_ref, dq_ref, dq_acc, *, causal, window,
-                   scale, prefix_len, n_k):
-    ik = pl.program_id(3)
-
-    @pl.when(ik == 0)
-    def _init():
-        dq_acc[...] = jnp.zeros_like(dq_acc)
-
-    pos_q = pos_q_ref[...]
-    pos_k = pos_k_ref[...]
-
+def _bwd_dq_accumulate(pos_q, pos_k, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                       delta_ref, dq_acc, *, causal, window, scale,
+                       prefix_len):
     @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)
@@ -229,6 +305,45 @@ def _bwd_dq_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
         dq_acc[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
+
+def _bwd_dq_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
+                   lse_ref, delta_ref, dq_ref, dq_acc, *, causal, window,
+                   scale, prefix_len, n_k):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    _bwd_dq_accumulate(pos_q_ref[...], pos_k_ref[...], q_ref, k_ref, v_ref,
+                       do_ref, lse_ref, delta_ref, dq_acc, causal=causal,
+                       window=window, scale=scale, prefix_len=prefix_len)
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
+
+
+def _bwd_dq_ragged_kernel(pos_q_ref, pos_k_ref,          # scalar prefetch
+                          q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dq_ref, dq_acc, *, causal, window, scale,
+                          prefix_len, block_q, block_k, n_k):
+    """``_bwd_dq_kernel`` with per-row (B, S) positions from SMEM
+    (the ``ragged_prefill.py`` scalar-prefetch pattern)."""
+    b = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        dq_acc[...] = jnp.zeros_like(dq_acc)
+
+    pos_q = pos_q_ref[b, pl.ds(iq * block_q, block_q)]
+    pos_k = pos_k_ref[b, pl.ds(ik * block_k, block_k)]
+    _bwd_dq_accumulate(pos_q, pos_k, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                       delta_ref, dq_acc, causal=causal, window=window,
+                       scale=scale, prefix_len=prefix_len)
+
     @pl.when(ik == n_k - 1)
     def _finalize():
         dq_ref[0, :, 0, :] = dq_acc[...].astype(dq_ref.dtype)
@@ -238,19 +353,9 @@ def _bwd_dq_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
 # backward: dk/dv kernel (accumulate over the G * n_q combined dimension)
 # ---------------------------------------------------------------------------
 
-def _bwd_dkv_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
-                    lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc,
-                    *, causal, window, scale, prefix_len, n_t):
-    it = pl.program_id(3)
-
-    @pl.when(it == 0)
-    def _init():
-        dk_acc[...] = jnp.zeros_like(dk_acc)
-        dv_acc[...] = jnp.zeros_like(dv_acc)
-
-    pos_q = pos_q_ref[...]
-    pos_k = pos_k_ref[...]
-
+def _bwd_dkv_accumulate(pos_q, pos_k, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                        delta_ref, dk_acc, dv_acc, *, causal, window, scale,
+                        prefix_len):
     @pl.when(_tile_live(pos_q, pos_k, causal, window, prefix_len))
     def _compute():
         q = q_ref[0, :, 0, :].astype(jnp.float32)
@@ -278,6 +383,49 @@ def _bwd_dkv_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
         dk_acc[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
                                            preferred_element_type=jnp.float32)
 
+
+def _bwd_dkv_kernel(pos_q_ref, pos_k_ref, q_ref, k_ref, v_ref, do_ref,
+                    lse_ref, delta_ref, dk_ref, dv_ref, dk_acc, dv_acc,
+                    *, causal, window, scale, prefix_len, n_t):
+    it = pl.program_id(3)
+
+    @pl.when(it == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    _bwd_dkv_accumulate(pos_q_ref[...], pos_k_ref[...], q_ref, k_ref, v_ref,
+                        do_ref, lse_ref, delta_ref, dk_acc, dv_acc,
+                        causal=causal, window=window, scale=scale,
+                        prefix_len=prefix_len)
+
+    @pl.when(it == n_t - 1)
+    def _finalize():
+        dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
+        dv_ref[0, :, 0, :] = dv_acc[...].astype(dv_ref.dtype)
+
+
+def _bwd_dkv_ragged_kernel(pos_q_ref, pos_k_ref,         # scalar prefetch
+                           q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                           dk_ref, dv_ref, dk_acc, dv_acc, *, causal,
+                           window, scale, prefix_len, block_q, block_k,
+                           n_q, n_t):
+    """``_bwd_dkv_kernel`` with per-row (B, S) positions from SMEM."""
+    b = pl.program_id(0)
+    ik = pl.program_id(2)
+    it = pl.program_id(3)
+
+    @pl.when(it == 0)
+    def _init():
+        dk_acc[...] = jnp.zeros_like(dk_acc)
+        dv_acc[...] = jnp.zeros_like(dv_acc)
+
+    pos_q = pos_q_ref[b, pl.ds((it % n_q) * block_q, block_q)]
+    pos_k = pos_k_ref[b, pl.ds(ik * block_k, block_k)]
+    _bwd_dkv_accumulate(pos_q, pos_k, q_ref, k_ref, v_ref, do_ref, lse_ref,
+                        delta_ref, dk_acc, dv_acc, causal=causal,
+                        window=window, scale=scale, prefix_len=prefix_len)
+
     @pl.when(it == n_t - 1)
     def _finalize():
         dk_ref[0, :, 0, :] = dk_acc[...].astype(dk_ref.dtype)
@@ -297,18 +445,28 @@ def flash_attention_bwd(
     """Flash backward for one (Q x K/V) block pair using the global lse.
 
     Returns (dq, dk, dv) in float32 (shapes of q, k, v). Semantics match
-    ``ref.block_attention_bwd``.
+    ``ref.block_attention_bwd``. Batched ``(B, S)`` positions (per-row
+    cache lengths) route to the scalar-prefetch ragged kernels — the same
+    SMEM pattern as ``ragged_prefill.py`` — so serving backward paths no
+    longer fall back to the reference.
     """
     B, Sq, Hq, D = q.shape
     _, Sk, Hkv, _ = k.shape
     G = Hq // Hkv
     if scale is None:
         scale = 1.0 / (D ** 0.5)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    if jnp.ndim(pos_q) > 1 or jnp.ndim(pos_k) > 1:
+        return _flash_attention_bwd_ragged(
+            q, k, v, do, lse, delta, pos_q, pos_k, causal=causal,
+            window=window, scale=scale, prefix_len=prefix_len,
+            block_q=block_q, block_k=block_k, interpret=interpret)
+
     block_q = min(block_q, Sq)
     block_k = min(block_k, Sk)
     n_q, n_k = Sq // block_q, Sk // block_k
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
 
     params = {}
     if not interpret:
@@ -368,6 +526,96 @@ def flash_attention_bwd(
         scratch_shapes=[
             pltpu.VMEM((block_k, D), jnp.float32),
             pltpu.VMEM((block_k, D), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v, do, lse, delta)
+
+    return dq, dk, dv
+
+
+def _flash_attention_bwd_ragged(q, k, v, do, lse, delta, pos_q, pos_k, *,
+                                causal, window, scale, prefix_len, block_q,
+                                block_k, interpret):
+    """Backward with per-row (B, S) positions via scalar prefetch.
+
+    Mirrors ``ragged_prefill.ragged_prefill_fwd``: the position arrays ride
+    in SMEM ahead of the tile DMAs, each kernel instance slices its row's
+    window with ``pl.ds``, and tile liveness/skip comes from those slices.
+    Shared ``(S,)`` vectors are broadcast to ``(B, S)``.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    pos_q = jnp.asarray(pos_q, jnp.int32)
+    pos_k = jnp.asarray(pos_k, jnp.int32)
+    if pos_q.ndim == 1:
+        pos_q = jnp.broadcast_to(pos_q[None], (B, Sq))
+    if pos_k.ndim == 1:
+        pos_k = jnp.broadcast_to(pos_k[None], (B, Sk))
+    block_q = choose_block(Sq, block_q)
+    block_k = choose_block(Sk, block_k)
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
+
+    q_spec = pl.BlockSpec((1, block_q, 1, D),
+                          lambda b, h, iq, ik, pq, pk: (b, iq, h, 0))
+    kv_spec = pl.BlockSpec((1, block_k, 1, D),
+                           lambda b, h, iq, ik, pq, pk: (b, ik, h // G, 0))
+    row_spec = pl.BlockSpec((1, 1, block_q),
+                            lambda b, h, iq, ik, pq, pk: (b, h, iq))
+
+    # ---- dq: grid (B, Hq, n_q, n_k), accumulate over ik ----
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_ragged_kernel, causal=causal,
+                          window=window, scale=scale, prefix_len=prefix_len,
+                          block_q=block_q, block_k=block_k, n_k=n_k),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hq, n_q, n_k),
+            in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+            out_specs=q_spec,
+            scratch_shapes=[pltpu.VMEM((block_q, D), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), jnp.float32),
+        interpret=interpret,
+        **params,
+    )(pos_q, pos_k, q, k, v, do, lse, delta)
+
+    # ---- dk/dv: grid (B, Hkv, n_k, G * n_q); t = g * n_q + iq ----
+    n_t = G * n_q
+    qg_spec = pl.BlockSpec(
+        (1, block_q, 1, D),
+        lambda b, h, ik, t, pq, pk: (b, t % n_q, h * G + t // n_q, 0))
+    kvg_spec = pl.BlockSpec((1, block_k, 1, D),
+                            lambda b, h, ik, t, pq, pk: (b, ik, h, 0))
+    rowg_spec = pl.BlockSpec(
+        (1, 1, block_q),
+        lambda b, h, ik, t, pq, pk: (b, h * G + t // n_q, t % n_q))
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_ragged_kernel, causal=causal,
+                          window=window, scale=scale, prefix_len=prefix_len,
+                          block_q=block_q, block_k=block_k, n_q=n_q,
+                          n_t=n_t),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(B, Hkv, n_k, n_t),
+            in_specs=[qg_spec, kvg_spec, kvg_spec, qg_spec, rowg_spec,
+                      rowg_spec],
+            out_specs=[kvg_spec, kvg_spec],
+            scratch_shapes=[
+                pltpu.VMEM((block_k, D), jnp.float32),
+                pltpu.VMEM((block_k, D), jnp.float32),
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Sk, Hkv, D), jnp.float32),
         ],
         interpret=interpret,
         **params,

@@ -21,17 +21,17 @@ from repro.kernels import flash_attention as fa
 from repro.kernels import ref as ref_kernels
 
 
-def flash_attention_fwd(q, k, v, pos_q, pos_k, *, causal=True, window=None,
-                        scale=None, prefix_len=None, block_q=None,
-                        block_k=None):
+def flash_attention_fwd(q, k, v, pos_q, pos_k, *, o_acc=None, lse_acc=None,
+                        causal=True, window=None, scale=None,
+                        prefix_len=None, block_q=None, block_k=None):
     kw = {}
     if block_q is not None:
         kw["block_q"] = block_q
     if block_k is not None:
         kw["block_k"] = block_k
     return fa.flash_attention_fwd(
-        q, k, v, pos_q, pos_k, causal=causal, window=window, scale=scale,
-        prefix_len=prefix_len, **kw)
+        q, k, v, pos_q, pos_k, o_acc, lse_acc, causal=causal, window=window,
+        scale=scale, prefix_len=prefix_len, **kw)
 
 
 def flash_attention_bwd(q, k, v, do, lse, delta, pos_q, pos_k, *, causal=True,

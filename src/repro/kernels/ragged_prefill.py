@@ -41,16 +41,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.combine import NEG_INF
 from repro.kernels.flash_attention import (DEFAULT_BLOCK_K, DEFAULT_BLOCK_Q,
-                                           _mask_tile, _tile_live)
-
-
-def choose_block(s: int, pref: int) -> int:
-    """Largest tile size <= pref dividing s (non-power-of-two rows tile
-    at their largest aligned divisor instead of raising)."""
-    for d in range(min(pref, s), 0, -1):
-        if s % d == 0:
-            return d
-    return s
+                                           _mask_tile, _tile_live,
+                                           choose_block)
 
 
 def _fwd_kernel(pos_q_ref, pos_k_ref,                    # scalar prefetch

@@ -26,7 +26,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.combine import NEG_INF
+from repro.core.combine import NEG_INF, combine_pair
 
 
 def make_mask(
@@ -116,6 +116,32 @@ def block_attention(
         o.reshape(B, Sq, Hq, D),
         lse.reshape(B, Hq, Sq),
     )
+
+
+def block_attention_merge(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    o_acc: jax.Array,
+    lse_acc: jax.Array,
+    pos_q: jax.Array,
+    pos_k: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    prefix_len: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """One ring step's block attention merged into a running accumulator.
+
+    The explicit two-step form — ``block_attention`` then
+    ``combine_pair`` — kept as the oracle for the fused-epilogue Pallas
+    kernel (``flash_attention._fwd_merge_kernel``).
+    """
+    o_s, lse_s = block_attention(q, k, v, pos_q, pos_k, causal=causal,
+                                 window=window, scale=scale,
+                                 prefix_len=prefix_len)
+    return combine_pair(o_acc, lse_acc, o_s, lse_s)
 
 
 def block_attention_bwd(

@@ -36,6 +36,12 @@ def main(argv=None):
                     choices=["team_inner", "ring_inner"])
     ap.add_argument("--microbatches", type=int, default=None,
                     help="grad-accumulation microbatches (default: plan)")
+    ap.add_argument("--comm-chunks", type=int, default=None,
+                    help="ring-transfer sub-chunks (default: overlap-model "
+                         "pick; must divide the team seq length C*N/P)")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="disable the double-buffered ring scan (debug A/B;"
+                         " bit-identical either way)")
     ap.add_argument("--plan", default=None,
                     help="load a persisted ExecutionPlan json")
     ap.add_argument("--autotune", action="store_true",
@@ -111,7 +117,9 @@ def main(argv=None):
                 cfg, shape, arch=args.arch, n_devices=n_devices, data=data,
                 pod=pod, scheme=args.scheme, c=args.c,
                 placement=args.placement, microbatches=args.microbatches,
-                mesh_kind=mesh_kind, sharding_rules=args.rules)
+                mesh_kind=mesh_kind, sharding_rules=args.rules,
+                pipeline_scan=not args.no_pipeline,
+                comm_chunks=args.comm_chunks)
     print(f"[train] plan: P_sp={plan.sp_size} scheme={plan.scheme} "
           f"C={plan.c} R={plan.r} data={plan.data} "
           f"microbatches={plan.microbatches}")
@@ -127,7 +135,11 @@ def main(argv=None):
     from repro import obs
 
     obs_registry = obs.Registry() if args.metrics_dump else None
-    tracer = obs.Tracer(enabled=True) if args.trace_out else None
+    # annotate=True wraps each host span in jax.profiler.TraceAnnotation,
+    # so train/step lines up with the in-graph ring_permute_issue /
+    # ring_block_compute scopes when a device profile is captured alongside
+    tracer = (obs.Tracer(enabled=True, annotate=True)
+              if args.trace_out else None)
     metrics = trainer_lib.train(model, plan, adam_cfg, tcfg,
                                 tracer=tracer, registry=obs_registry)
     if args.metrics_dump:

@@ -102,28 +102,25 @@ def _wire_factors(plan) -> Dict[str, float]:
     }
 
 
-def measure_attention_island(cfg: ModelConfig, plan, *,
-                             batch: int = 1,
-                             seq_len: Optional[int] = None,
-                             ) -> Dict[str, object]:
-    """Compile one attention layer's island on the plan's mesh and parse
-    its HLO collectives into per-device wire bytes by kind.
-
-    ``unroll=True`` so every sub-ring ppermute appears in the HLO (XLA
-    counts a while-loop body once otherwise). Requires the process to have
-    ``plan.n_devices`` (forced-host on CPU) devices available.
-    """
+def _compile_island_text(cfg: ModelConfig, plan, *, batch: int = 1,
+                         seq_len: Optional[int] = None) -> str:
+    """Optimized HLO text of one attention layer's island on the plan's
+    mesh, with the plan's pipeline/comm_chunks knobs honoured and
+    ``unroll=True`` so every sub-ring ppermute appears as its own
+    instruction (XLA keeps a while-loop body once otherwise). Requires the
+    process to have ``plan.n_devices`` (forced-host on CPU) devices."""
     import jax
     import jax.numpy as jnp
     from jax.sharding import PartitionSpec as P
 
     from repro.core import startrail as st
     from repro.core import ulysses as ul
-    from repro.roofline import hlo as hlo_lib
 
     n = seq_len or plan.seq_len
-    st_cfg = st.StarTrailConfig(seq_len=n, seq_scheme=plan.seq_scheme,
-                                causal=True, unroll=True)
+    st_cfg = st.StarTrailConfig(
+        seq_len=n, seq_scheme=plan.seq_scheme, causal=True, unroll=True,
+        pipeline=getattr(plan, "pipeline_scan", True),
+        comm_chunks=getattr(plan, "comm_chunks", 1))
     mesh = plan.build_mesh()
     spec = P(None, st_cfg.axes, None, None)
 
@@ -139,8 +136,20 @@ def measure_attention_island(cfg: ModelConfig, plan, *,
     dh = cfg.head_dim_
     args = [jax.ShapeDtypeStruct((batch, n, h, dh), jnp.bfloat16)
             for h in (cfg.num_heads, cfg.num_kv_heads, cfg.num_kv_heads)]
-    compiled = f.lower(*args).compile()
-    parsed = hlo_lib.collective_bytes(compiled.as_text())
+    return f.lower(*args).compile().as_text()
+
+
+def measure_attention_island(cfg: ModelConfig, plan, *,
+                             batch: int = 1,
+                             seq_len: Optional[int] = None,
+                             ) -> Dict[str, object]:
+    """Compile one attention layer's island on the plan's mesh and parse
+    its HLO collectives into per-device wire bytes by kind."""
+    from repro.roofline import hlo as hlo_lib
+
+    n = seq_len or plan.seq_len
+    parsed = hlo_lib.collective_bytes(
+        _compile_island_text(cfg, plan, batch=batch, seq_len=n))
     by_kind = parsed["bytes_by_kind"]
 
     factors = _wire_factors(plan)
@@ -152,6 +161,72 @@ def measure_attention_island(cfg: ModelConfig, plan, *,
         "count_by_kind": dict(parsed["count_by_kind"]),
         "unmodelled_allreduce_bytes": by_kind.get("all-reduce", 0),
     }
+
+
+#: In-graph ring-scan spans (``jax.named_scope`` in ``core/startrail``).
+#: They survive lowering into HLO instruction metadata (``op_name``) and
+#: are what a device profiler groups the per-ring-step timeline by.
+RING_SCOPES = ("ring_permute_issue", "ring_block_compute")
+
+
+def ring_scope_counts(hlo_text: str) -> Dict[str, int]:
+    """Instructions carrying each ring-scan scope in their HLO metadata.
+
+    A zero ``ring_permute_issue`` count on a ring plan means the pipelined
+    issue path was compiled out (e.g. ``pipeline_scan=False``); the
+    overlap fraction should then be read as the scheduler's doing, not the
+    double-buffered scan's.
+    """
+    import re
+
+    counts = {s: 0 for s in RING_SCOPES}
+    for m in re.finditer(r'op_name="([^"]*)"', hlo_text):
+        for s in RING_SCOPES:
+            if s in m.group(1):
+                counts[s] += 1
+    return counts
+
+
+def overlap_report(cfg: ModelConfig, plan, *, batch: int = 1,
+                   seq_len: Optional[int] = None,
+                   registry=None) -> Dict[str, object]:
+    """Measured comm/compute overlap fraction for the plan's attention
+    island (``roofline/hlo.collective_overlap`` over the optimized HLO).
+
+    The fraction is the share of dot instructions scheduled inside a
+    collective-permute's issue→first-use window — the overlap the
+    pipelined ring scan creates, and the number to feed back into the
+    analytical model (``make_plan(..., overlap_frac=...)``,
+    ``autotune(..., overlap_frac=...)``) in place of its perfect-hiding
+    default. When ``registry`` is given, sets the
+    ``attention_overlap_fraction`` gauge labelled by arrangement.
+    """
+    from repro.roofline import hlo as hlo_lib
+
+    n = seq_len or plan.seq_len
+    text = _compile_island_text(cfg, plan, batch=batch, seq_len=n)
+    ov = hlo_lib.collective_overlap(text)
+    report = {
+        "ring_scope_instructions": ring_scope_counts(text),
+        "arrangement": {"scheme": plan.scheme, "c": plan.c, "r": plan.r,
+                        "sp": plan.sp_size, "placement": plan.placement,
+                        "seq_scheme": plan.seq_scheme,
+                        "pipeline_scan": getattr(plan, "pipeline_scan", True),
+                        "comm_chunks": getattr(plan, "comm_chunks", 1)},
+        "shape": {"batch": batch, "seq_len": n},
+        **ov,
+    }
+    if registry is not None:
+        registry.gauge(
+            "attention_overlap_fraction",
+            "Share of HLO dot instructions scheduled inside a "
+            "collective-permute issue->first-use window (measured "
+            "comm/compute overlap for the attention island)",
+        ).set(ov["overlap_fraction"],
+              scheme=plan.scheme, c=str(plan.c),
+              pipeline=str(report["arrangement"]["pipeline_scan"]),
+              comm_chunks=str(report["arrangement"]["comm_chunks"]))
+    return report
 
 
 def island_wire_volumes(cfg: ModelConfig, plan, *,

@@ -63,6 +63,8 @@ def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
              top_k: int = 3, steps: int = 3, microbatches: Optional[int] = 1,
              out_dir=None, cluster=None,
              arrangements: Optional[Sequence[cost.Arrangement]] = None,
+             overlap_frac: float = 1.0,
+             comm_chunk_grid: Sequence[int] = (1,),
              ) -> Dict[str, object]:
     """Measure the analytical top-k (plus the analytical worst) and persist
     the winner.
@@ -70,6 +72,13 @@ def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
     Returns {"plan": ExecutionPlan, "measured": [...], "analytical": [...],
     "path": written json path}. The measured list is sorted fastest-first;
     the winner is by construction never the slowest measured arrangement.
+
+    ``overlap_frac`` parameterizes the analytical overlap model used for
+    the ranking (pass the measured fraction from
+    ``obs.commlog.overlap_report``); ``comm_chunk_grid`` widens the search
+    to sub-chunked ring transfers — each candidate arrangement is measured
+    once per legal grid entry (illegal entries, i.e. chunk counts that do
+    not divide the team sequence length, are skipped).
     """
     from repro.models.factory import build_model
 
@@ -77,7 +86,8 @@ def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
     sp = n_devices // data
     ranking = cost.rank_arrangements(
         cfg, shape, sp, batch=max(shape.global_batch // data, 1),
-        cluster=cluster, arrangements=arrangements)
+        cluster=cluster, arrangements=arrangements,
+        overlap_frac=overlap_frac)
     cands = list(ranking[:top_k])
     if ranking[-1] not in cands:
         cands.append(ranking[-1])   # anchor: the analytical worst
@@ -86,17 +96,30 @@ def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
     measured: List[Dict[str, object]] = []
     for entry in cands:
         arr: cost.Arrangement = entry["arrangement"]
-        plan = make_plan(
-            cfg, shape, arch=arch, n_devices=n_devices, data=data,
-            scheme=arr.scheme, c=arr.c,
-            placement=arr.placement if arr.c > 1 else None,
-            microbatches=microbatches, mesh_kind=mesh_kind, cluster=cluster)
-        key = (plan.c, plan.r, plan.data)
-        if key not in mesh_cache:
-            mesh_cache[key] = plan.build_mesh()
-        t = measure_plan(model, plan, steps=steps, mesh=mesh_cache[key])
-        measured.append({"arrangement": arr, "plan": plan,
-                         "measured_s": t, "analytical_s": entry["total_s"]})
+        for n_chunks in dict.fromkeys(comm_chunk_grid):
+            s_team = arr.c * shape.seq_len // sp
+            if arr.scheme == "ulysses" and n_chunks > 1:
+                continue            # no ring scan to chunk
+            if n_chunks > 1 and s_team % n_chunks:
+                continue
+            try:
+                plan = make_plan(
+                    cfg, shape, arch=arch, n_devices=n_devices, data=data,
+                    scheme=arr.scheme, c=arr.c,
+                    placement=arr.placement if arr.c > 1 else None,
+                    microbatches=microbatches, mesh_kind=mesh_kind,
+                    comm_chunks=n_chunks, overlap_frac=overlap_frac,
+                    cluster=cluster)
+            except ValueError:
+                continue
+            key = (plan.c, plan.r, plan.data)
+            if key not in mesh_cache:
+                mesh_cache[key] = plan.build_mesh()
+            t = measure_plan(model, plan, steps=steps, mesh=mesh_cache[key])
+            measured.append({"arrangement": arr, "plan": plan,
+                             "comm_chunks": n_chunks,
+                             "measured_s": t,
+                             "analytical_s": entry["total_s"]})
     measured.sort(key=lambda e: e["measured_s"])
     winner: ExecutionPlan = measured[0]["plan"]
 
@@ -105,8 +128,10 @@ def autotune(cfg: ModelConfig, shape: ShapeConfig, *, arch: str,
     record = {
         "plan": winner.to_dict(),
         "measured": [{"arrangement": e["arrangement"].key,
+                      "comm_chunks": e.get("comm_chunks", 1),
                       "measured_s": e["measured_s"],
                       "analytical_s": e["analytical_s"]} for e in measured],
+        "overlap_frac": overlap_frac,
         "analytical": [{"arrangement": e["arrangement"].key,
                         "total_s": e["total_s"],
                         "volumes": e["volumes"]} for e in ranking],

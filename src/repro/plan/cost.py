@@ -147,13 +147,23 @@ def _workload(cfg: ModelConfig, shape: ShapeConfig, batch: int) -> sch.AttnWorkl
 
 def arrangement_time(cfg: ModelConfig, shape: ShapeConfig, sp: int,
                      arr: Arrangement, *, batch: Optional[int] = None,
-                     cluster: Optional[sch.ClusterModel] = None) -> float:
-    """Estimated seconds for one attention layer under `arr`."""
+                     cluster: Optional[sch.ClusterModel] = None,
+                     overlap_frac: float = 1.0,
+                     comm_chunks: int = 1) -> float:
+    """Estimated seconds for one attention layer under `arr`.
+
+    ``overlap_frac``/``comm_chunks`` parameterize the ring-scheme overlap
+    model (`core/scheduler.attention_step_cost`): pass the measured
+    fraction from ``obs.commlog.overlap_report`` so the ranking stops
+    over-promising on bandwidth-bound shapes.
+    """
     b = shape.global_batch if batch is None else batch
     w = _workload(cfg, shape, b)
     cl = cluster or sch.ClusterModel(sp_size=sp)
     if arr.scheme in ("ring", "startrail"):
-        return sch.attention_step_cost(w, cl, arr.c, arr.placement)["total_s"]
+        return sch.attention_step_cost(
+            w, cl, arr.c, arr.placement, overlap_frac=overlap_frac,
+            comm_chunks=comm_chunks)["total_s"]
     # Ulysses: fully-local attention between two all-to-all pairs; the
     # all-to-alls cannot overlap with the attention itself.
     vols = comm_volumes(cfg, shape, sp, arr, batch=b,
@@ -169,11 +179,15 @@ def rank_arrangements(cfg: ModelConfig, shape: ShapeConfig, sp: int, *,
                       batch: Optional[int] = None,
                       cluster: Optional[sch.ClusterModel] = None,
                       arrangements: Optional[Sequence[Arrangement]] = None,
+                      overlap_frac: float = 1.0,
+                      comm_chunks: int = 1,
                       ) -> List[Dict[str, object]]:
     """All legal arrangements priced and sorted fastest-first.
 
     Each entry: {"arrangement": Arrangement, "total_s": float,
     "volumes": per-layer byte breakdown, "model_s": whole-model estimate}.
+    ``overlap_frac`` (measured via ``obs.commlog.overlap_report``) and
+    ``comm_chunks`` parameterize the ring overlap model.
     """
     cands = list(arrangements) if arrangements is not None \
         else enumerate_arrangements(cfg, sp)
@@ -181,7 +195,8 @@ def rank_arrangements(cfg: ModelConfig, shape: ShapeConfig, sp: int, *,
     out = []
     for arr in cands:
         t = arrangement_time(cfg, shape, sp, arr, batch=batch,
-                             cluster=cluster)
+                             cluster=cluster, overlap_frac=overlap_frac,
+                             comm_chunks=comm_chunks)
         out.append({
             "arrangement": arr,
             "total_s": t,
@@ -190,6 +205,29 @@ def rank_arrangements(cfg: ModelConfig, shape: ShapeConfig, sp: int, *,
         })
     out.sort(key=lambda e: e["total_s"])
     return out
+
+
+def choose_comm_chunks(cfg: ModelConfig, shape: ShapeConfig, sp: int,
+                       arr: Arrangement, *, batch: Optional[int] = None,
+                       cluster: Optional[sch.ClusterModel] = None,
+                       overlap_frac: float = 1.0,
+                       grid: Sequence[int] = (1, 2, 4)) -> int:
+    """Resolve the ring-transfer sub-chunk count for one arrangement.
+
+    Argmin of the overlap model over ``grid``, constrained to chunk counts
+    that divide the per-device team sequence length (c * N / P — the axis
+    `core/startrail._chunked_ppermute` splits). Non-ring schemes have no
+    transfers to chunk -> 1.
+    """
+    if arr.scheme not in ("ring", "startrail"):
+        return 1
+    s_team = arr.c * shape.seq_len // sp
+    legal = tuple(n for n in grid if n >= 1 and s_team % n == 0) or (1,)
+    b = shape.global_batch if batch is None else batch
+    w = _workload(cfg, shape, b)
+    cl = cluster or sch.ClusterModel(sp_size=sp)
+    return sch.choose_comm_chunks(w, cl, arr.c, arr.placement,
+                                  overlap_frac=overlap_frac, grid=legal)
 
 
 # ---------------------------------------------------------------------------

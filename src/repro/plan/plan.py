@@ -54,6 +54,10 @@ class ExecutionPlan:
     grad_compression: str = "none"
     mesh_kind: str = "local"       # 'local' (forced-host) | 'production'
     unroll_scans: bool = False
+    # double-buffered ring scans (issue the next transfer before the block
+    # kernel) + ring-transfer sub-chunking; see core/startrail.py
+    pipeline_scan: bool = True
+    comm_chunks: int = 1
     # ---- serving face (kind='decode' plans consumed by repro.engine) -----
     decode_batch: int = 0          # engine decode slots (0 = not a serve plan)
     page_size: int = 0             # KV page tokens (0 = not a serve plan)
@@ -105,6 +109,14 @@ class ExecutionPlan:
                 f"seq_len={self.seq_len}, P={sp}")
         if self.microbatches < 1:
             raise ValueError("microbatches must be >= 1")
+        if self.comm_chunks < 1:
+            raise ValueError("comm_chunks must be >= 1")
+        s_team = self.c * self.seq_len // sp
+        if self.comm_chunks > 1 and s_team % self.comm_chunks:
+            raise ValueError(
+                f"comm_chunks={self.comm_chunks} must divide the team "
+                f"sequence length C*N/P = {s_team} (the axis the chunked "
+                f"ring ppermute splits)")
         from repro.kernels.dispatch import IMPLS
 
         for knob, val in (("block_impl", self.block_impl),
@@ -148,7 +160,8 @@ class ExecutionPlan:
             block_skip=self.block_skip, multi_pod=self.pod > 1,
             remat=self.remat, grad_compression=self.grad_compression,
             sharding_rules=self.sharding_rules, unroll_scans=self.unroll_scans,
-            attention_scheme=self.scheme, microbatches=self.microbatches)
+            attention_scheme=self.scheme, microbatches=self.microbatches,
+            pipeline_scan=self.pipeline_scan, comm_chunks=self.comm_chunks)
 
     def build_mesh(self):
         """The refined `( [pod,] data, sp_grp, sp_ring, sp_team )` mesh."""
@@ -209,6 +222,9 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
               kernel_impl: Optional[str] = None,
               remat: str = "attn_out", sharding_rules: str = "default",
               grad_compression: str = "none", unroll_scans: bool = False,
+              pipeline_scan: bool = True,
+              comm_chunks: Optional[int] = None,
+              overlap_frac: float = 1.0,
               cluster=None) -> ExecutionPlan:
     """Resolve one run into a validated ExecutionPlan.
 
@@ -218,6 +234,10 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
     exactly as `core/ulysses.py` would at trace time). Unset
     `block_impl`/`kernel_impl` resolve per backend: the Pallas kernels on
     TPU, the jnp reference on CPU (`kernels.dispatch.resolve_impl`).
+    Unset ``comm_chunks`` resolves via the overlap model
+    (`cost.choose_comm_chunks`) at ``overlap_frac`` — pass the measured
+    fraction from ``obs.commlog.overlap_report`` to stop the model
+    assuming perfect comm/compute hiding.
     """
     from repro.kernels.dispatch import resolve_impl
 
@@ -266,6 +286,11 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
         else:
             microbatches = 1
 
+    if comm_chunks is None:
+        comm_chunks = cost.choose_comm_chunks(
+            cfg, shape, sp, picked, batch=max(shape.global_batch // dp, 1),
+            cluster=cluster, overlap_frac=overlap_frac)
+
     return ExecutionPlan(
         arch=arch or cfg.name, shape=shape.name, seq_len=shape.seq_len,
         global_batch=shape.global_batch, n_devices=n_devices,
@@ -277,7 +302,8 @@ def make_plan(cfg: ModelConfig, shape: ShapeConfig, *, arch: Optional[str]
         block_skip=cfg.window is not None and seq_scheme == "contiguous",
         remat=remat, microbatches=microbatches,
         sharding_rules=sharding_rules, grad_compression=grad_compression,
-        mesh_kind=mesh_kind, unroll_scans=unroll_scans)
+        mesh_kind=mesh_kind, unroll_scans=unroll_scans,
+        pipeline_scan=pipeline_scan, comm_chunks=comm_chunks)
 
 
 def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,

@@ -70,6 +70,105 @@ def _tuple_bytes(line: str) -> int:
     return sum(shapes)
 
 
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?(?P<name>%?[\w.-]+)\s*=")
+_DOT_RE = re.compile(r"=\s*[^=]*?\bdot\(")
+_PERMUTE_DEF_RE = re.compile(r"\bcollective-permute(?:-start)?\(")
+
+
+def collective_overlap(hlo_text: str) -> Dict[str, object]:
+    """Comm/compute overlap evidence from the *optimized* HLO's
+    instruction order.
+
+    The CPU backend emits synchronous ``collective-permute`` (no
+    -start/-done pair), so async hiding is invisible in op *kinds*; what
+    the scheduler does encode is *placement*. A permute issued early —
+    with dot instructions scheduled between its definition and the first
+    dot that actually consumes its data — overlaps those dots on any
+    backend with async transfers (TPU rewrites exactly that window into a
+    start/done pair). The consuming dot is found by tracing the permute's
+    users transitively through converts/copies/fusions, but *not* through
+    a later collective-permute (that is the data being forwarded around
+    the ring, not computed on). ``overlap_fraction`` is the share of all
+    dots sitting in at least one such window. The pipelined ring scan
+    exists to widen these windows; ``overlap_fraction == 0`` means every
+    transfer lands immediately before its consuming kernel (nothing can
+    hide).
+    """
+    total_dots = 0
+    overlapped_dots = 0
+    permutes = 0
+    permutes_with_window = 0
+
+    def flush(instrs):
+        nonlocal total_dots, overlapped_dots, permutes, permutes_with_window
+        dots = {i for i, (_, line) in enumerate(instrs)
+                if _DOT_RE.search(line)}
+        total_dots += len(dots)
+        if not instrs:
+            return
+        # name -> consumer indices (operands are %-prefixed on the RHS)
+        users: Dict[str, list] = defaultdict(list)
+        for j, (_, line) in enumerate(instrs):
+            rhs = line.split("=", 1)[-1]
+            for op_name in re.findall(r"%([\w.-]+)", rhs):
+                users[op_name].append(j)
+        comp_overlapped: set = set()
+        for i, (name, line) in enumerate(instrs):
+            if not (name and _PERMUTE_DEF_RE.search(line)):
+                continue
+            permutes += 1
+            # first dot that (transitively) consumes this transfer's data,
+            # tracing through converts/copies/fusions but NOT through a
+            # later permute (that's the data being forwarded, not used)
+            close = len(instrs)
+            frontier = [name.lstrip("%")]
+            seen = set(frontier)
+            while frontier:
+                nxt = []
+                for nm in frontier:
+                    for j in users.get(nm, ()):
+                        if j <= i:
+                            continue
+                        jn, jline = instrs[j]
+                        if j in dots:
+                            close = min(close, j)
+                            continue
+                        if _PERMUTE_DEF_RE.search(jline):
+                            continue
+                        jn = jn.lstrip("%")
+                        if jn and jn not in seen:
+                            seen.add(jn)
+                            nxt.append(jn)
+                frontier = nxt
+            window = {j for j in dots if i < j < close}
+            if window:
+                permutes_with_window += 1
+                comp_overlapped |= window
+        overlapped_dots += len(comp_overlapped)
+
+    instrs: list = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{"):        # new computation body begins
+            flush(instrs)
+            instrs = []
+            continue
+        if "=" not in stripped:
+            continue
+        m = _NAME_RE.match(stripped)
+        instrs.append((m.group("name") if m else "", stripped))
+    flush(instrs)
+
+    return {
+        "overlap_fraction": (overlapped_dots / total_dots
+                             if total_dots else 0.0),
+        "dots_total": total_dots,
+        "dots_overlapped": overlapped_dots,
+        "permutes_total": permutes,
+        "permutes_with_overlap_window": permutes_with_window,
+    }
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, object]:
     """Per-op-kind per-device byte counts + op counts from HLO text."""
     by_kind_bytes: Dict[str, int] = defaultdict(int)

@@ -1177,12 +1177,102 @@ def check_commlog_c2(arch="h2o-danube-1.8b", seq=64):
     assert reg.value("comm_steps_total") == steps
 
 
+def check_pipelined_bitexact(c=2, p=8, seq=64, batch=2, hq=4, hkv=2, d=8):
+    """Acceptance (pipelined ring): the double-buffered scan (permute
+    issued before the block kernel) and chunked ring transfers are
+    *bit-identical* — np.array_equal on loss and every grad, bf16 inputs —
+    to the sequential compute-then-permute baseline on the C=2 smoke mesh.
+    Also covers the windowed block_skip path (where whole ring steps are
+    skipped, the prefetched pack must still circulate identically)."""
+    mesh = make_mesh(c, p)
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    spec = P(None, AXES, None, None)
+
+    def run(pipeline, comm_chunks, *, scheme="zigzag", window=None,
+            block_skip=False):
+        cfg = st.StarTrailConfig(
+            seq_len=seq, axes=AXES, seq_scheme=scheme, causal=True,
+            window=window, block_skip=block_skip,
+            pipeline=pipeline, comm_chunks=comm_chunks)
+        dist = jax.jit(jax.shard_map(
+            lambda q, k, v: st.startrail_attention(q, k, v, cfg),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
+            check_vma=False))
+
+        def loss(q, k, v):
+            return (dist(q, k, v).astype(jnp.float32) ** 2).sum()
+
+        q = _rand(kq, (batch, seq, hq, d), jnp.bfloat16)
+        k = _rand(kk, (batch, seq, hkv, d), jnp.bfloat16)
+        v = _rand(kv, (batch, seq, hkv, d), jnp.bfloat16)
+        l, g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))(q, k, v)
+        return np.asarray(l), [np.asarray(x) for x in g]
+
+    l0, g0 = run(False, 1)
+    for pipe, cc in ((True, 1), (True, 2), (True, 4), (False, 2)):
+        l1, g1 = run(pipe, cc)
+        assert np.array_equal(l0, l1), (
+            f"loss differs pipeline={pipe} cc={cc}: {l0} vs {l1}")
+        for name, a, b in zip("qkv", g0, g1):
+            assert np.array_equal(a, b), (
+                f"d{name} not bit-identical pipeline={pipe} cc={cc}")
+
+    lw0, gw0 = run(False, 1, scheme="contiguous", window=16, block_skip=True)
+    lw1, gw1 = run(True, 2, scheme="contiguous", window=16, block_skip=True)
+    assert np.array_equal(lw0, lw1), "windowed skip loss differs pipelined"
+    for name, a, b in zip("qkv", gw0, gw1):
+        assert np.array_equal(a, b), (
+            f"windowed skip d{name} not bit-identical pipelined")
+
+
+def check_bwd_skip_equiv(c=2, p=8, seq=64, batch=2, hq=4, hkv=2, d=8,
+                         window=16, tol=2e-5):
+    """block_skip over the backward ring scan: grads with dead-block
+    skipping == grads without, f32 tolerance, on the windowed contiguous
+    layout where whole (Q-chunk, K-chunk) ring steps fall outside the
+    attention window."""
+    mesh = make_mesh(c, p)
+    key = jax.random.PRNGKey(4)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = _rand(kq, (batch, seq, hq, d))
+    k = _rand(kk, (batch, seq, hkv, d))
+    v = _rand(kv, (batch, seq, hkv, d))
+    spec = P(None, AXES, None, None)
+
+    def run(block_skip):
+        cfg = st.StarTrailConfig(
+            seq_len=seq, axes=AXES, seq_scheme="contiguous", causal=True,
+            window=window, block_skip=block_skip)
+        dist = jax.jit(jax.shard_map(
+            lambda q, k, v: st.startrail_attention(q, k, v, cfg),
+            mesh=mesh, in_specs=(spec,) * 3, out_specs=spec,
+            check_vma=False))
+
+        def loss(q, k, v):
+            return (dist(q, k, v).astype(jnp.float32) ** 2).sum()
+
+        l, g = jax.jit(jax.value_and_grad(loss, argnums=(0, 1, 2)))(q, k, v)
+        return float(l), [np.asarray(x) for x in g]
+
+    l_skip, g_skip = run(True)
+    l_full, g_full = run(False)
+    # the loss sums ~4k squared terms: bound it relatively (reassociation)
+    assert abs(l_skip - l_full) < 1e-6 * max(abs(l_full), 1.0), (
+        f"loss skip {l_skip} vs {l_full}")
+    for name, a, b in zip("qkv", g_skip, g_full):
+        e = np.abs(a - b).max()
+        assert e < tol, f"d{name} skip-vs-full err {e}"
+
+
 CHECKS.update({
     "microbatch_equiv": check_microbatch_equiv,
     "scheme_crosscheck": check_scheme_crosscheck,
     "ulysses_rejected": check_ulysses_rejected,
     "plan_constructs": check_plan_constructs,
     "commlog_c2": check_commlog_c2,
+    "pipelined_bitexact": check_pipelined_bitexact,
+    "bwd_skip_equiv": check_bwd_skip_equiv,
 })
 
 if __name__ == "__main__":

@@ -45,6 +45,8 @@ def make_runtime(model: Model, run_cfg: RunConfig, shape: ShapeConfig,
         block_skip=run_cfg.block_skip or (cfg.window is not None
                                           and scheme == "contiguous"),
         unroll=run_cfg.unroll_scans,
+        pipeline=run_cfg.pipeline_scan,
+        comm_chunks=run_cfg.comm_chunks,
     )
     batch_axes = ("pod", "data") if run_cfg.multi_pod else ("data",)
     # 'ring' is the C=1 degenerate StarTrail config; 'ulysses' dispatches

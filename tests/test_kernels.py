@@ -194,13 +194,13 @@ def test_resolve_impl():
         dispatch.resolve_impl("cuda")
 
 
-def test_pallas_batched_positions_fallback_is_explicit():
+def test_pallas_batched_positions_no_fallback():
     """impl='pallas' with batched (B, S) positions (per-sequence cache
-    lengths) runs the scalar-prefetch ragged kernel — *no* forward fallback
-    is recorded and the results match the reference. Only the backward pass
-    (no ragged kernel yet) still falls back, explicitly and counted."""
+    lengths) runs the scalar-prefetch ragged kernels — forward AND
+    backward. The fallback counter stays empty and both directions match
+    the reference."""
     key = jax.random.PRNGKey(3)
-    q, k, v, _ = _data(key, 2, 8, 8, 2, 2, 16, jnp.float32)
+    q, k, v, do = _data(key, 2, 8, 8, 2, 2, 16, jnp.float32)
     pos_shared = jnp.arange(8, dtype=jnp.int32)
     pos_batched = jnp.stack([pos_shared, pos_shared + 1])     # (B, S)
 
@@ -224,15 +224,112 @@ def test_pallas_batched_positions_fallback_is_explicit():
     dispatch.block_fwd(q, k, v, pos_batched, pos_batched, causal=True,
                        impl="ref")
     assert dispatch.pallas_fallbacks() == {}
-    # the backward pass has no ragged kernel yet: still an explicit,
-    # counted fallback
-    do = jnp.ones_like(q)
+    # the backward pass now has ragged kernels too: no fallback, and the
+    # grads match the reference
     lse = lse_pl
     delta = jnp.sum(o_pl * do, axis=-1).swapaxes(1, 2).astype(jnp.float32)
-    dispatch.block_bwd(q, k, v, do, lse, delta, pos_batched, pos_batched,
-                       causal=True, impl="pallas")
-    assert dispatch.pallas_fallbacks() == {"block_bwd": 1}
+    got = dispatch.block_bwd(q, k, v, do, lse, delta, pos_batched,
+                             pos_batched, causal=True, impl="pallas")
+    assert dispatch.pallas_fallbacks() == {}, \
+        "batched backward positions must run the ragged kernels, not fall back"
+    want = ref.block_attention_bwd(q, k, v, do, lse, delta, pos_batched,
+                                   pos_batched, causal=True)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=3e-4, rtol=3e-4, err_msg=f"d{name}")
     dispatch.reset_pallas_fallbacks()
+
+
+RAGGED_BWD_CASES = [
+    # B, Sq, Sk, Hq, Hkv, D, causal, window
+    (2, 64, 64, 4, 2, 32, True, None),     # GQA
+    (2, 64, 128, 4, 1, 32, True, None),    # MQA, rectangular
+    (1, 96, 96, 2, 2, 32, True, 24),       # window + non-pow2 seq
+    (2, 64, 64, 2, 2, 32, False, None),    # full attention
+]
+
+
+@pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,D,causal,window", RAGGED_BWD_CASES)
+def test_bwd_ragged_matches_ref(B, Sq, Sk, Hq, Hkv, D, causal, window):
+    """The scalar-prefetch ragged backward kernels (per-batch positions
+    sliced from SMEM) vs the reference backward, including per-row offsets
+    that differ across the batch."""
+    q, k, v, do = _data(jax.random.PRNGKey(7), B, Sq, Sk, Hq, Hkv, D,
+                        jnp.float32)
+    base_q = jnp.arange(Sq, dtype=jnp.int32)
+    base_k = jnp.arange(Sk, dtype=jnp.int32) + (Sq - Sk) // 2
+    pos_q = jnp.stack([base_q + 3 * b for b in range(B)])
+    pos_k = jnp.stack([base_k + 3 * b for b in range(B)])
+    o_ref, lse = ref.block_attention(q, k, v, pos_q, pos_k, causal=causal,
+                                     window=window)
+    delta = jnp.einsum("bshd,bshd->bhs", do.astype(jnp.float32),
+                       o_ref.astype(jnp.float32))
+    got = ops.flash_attention_bwd(q, k, v, do, lse, delta, pos_q, pos_k,
+                                  causal=causal, window=window)
+    want = ref.block_attention_bwd(q, k, v, do, lse, delta, pos_q, pos_k,
+                                   causal=causal, window=window)
+    for g, w, name in zip(got, want, "qkv"):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   atol=3e-4, rtol=3e-4, err_msg=f"d{name}")
+
+
+MERGE_CASES = [
+    # B, S, Hq, Hkv, D, causal, window, seed_dead
+    (2, 128, 4, 2, 64, True, None, False),   # GQA
+    (1, 128, 4, 1, 64, True, None, False),   # MQA
+    (1, 128, 2, 2, 64, True, 32, False),     # window: dead rows in block
+    (2, 128, 2, 2, 64, True, None, True),    # dead rows in the RUNNING acc
+    (1, 128, 2, 2, 64, False, None, False),  # full attention
+]
+
+
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,causal,window,seed_dead", MERGE_CASES)
+def test_fwd_merge_fused_matches_two_step(B, S, Hq, Hkv, D, causal, window,
+                                          seed_dead):
+    """The fused merge epilogue (flash kernel consuming a running
+    (o_acc, lse_acc)) matches the two-step form it replaces — block_fwd
+    followed by combine_pair — to within 2 ulp on o (XLA may fuse the
+    merge's multiply-adds differently across the two compilations) and
+    bit-exactly on lse. Covers GQA, windowed masks that kill whole rows
+    inside the block, and dead rows (lse=-inf) arriving in the running
+    accumulator."""
+    from repro.core.combine import NEG_INF, combine_pair
+
+    q, k, v, _ = _data(jax.random.PRNGKey(11), B, S, S, Hq, Hkv, D,
+                       jnp.float32)
+    pos_q = jnp.arange(S, dtype=jnp.int32)
+    pos_k = jnp.arange(S, dtype=jnp.int32) + 16
+    # a running accumulator from an earlier ring step over different keys
+    k2, v2, _, _ = _data(jax.random.PRNGKey(12), B, S, S, Hkv, Hkv, D,
+                         jnp.float32)
+    o_acc, lse_acc = ref.block_attention(q, k2, v2, pos_q,
+                                         jnp.arange(S, dtype=jnp.int32),
+                                         causal=causal, window=window)
+    if seed_dead:
+        # first half of the rows have seen nothing yet (lse = -inf)
+        dead = (jnp.arange(S) < S // 2)[None, None, :]
+        lse_acc = jnp.where(dead, NEG_INF, lse_acc)
+        o_acc = jnp.where(dead.swapaxes(1, 2)[..., None], 0.0, o_acc)
+
+    fused = dispatch.block_fwd_merge(q, k, v, o_acc, lse_acc, pos_q, pos_k,
+                                     causal=causal, window=window,
+                                     impl="pallas")
+    o_blk, lse_blk = dispatch.block_fwd(q, k, v, pos_q, pos_k,
+                                        causal=causal, window=window,
+                                        impl="pallas")
+    two_step = combine_pair(o_acc, lse_acc, o_blk, lse_blk)
+    np.testing.assert_allclose(np.asarray(fused[0]), np.asarray(two_step[0]),
+                               atol=1e-7, rtol=5e-7,
+                               err_msg="fused merge o vs combine_pair")
+    assert np.array_equal(np.asarray(fused[1]), np.asarray(two_step[1])), (
+        "fused merge lse not bit-identical to combine_pair (max diff "
+        f"{np.abs(np.asarray(fused[1]) - np.asarray(two_step[1])).max()})")
+    # the ref-impl fallback of block_fwd_merge is the same two-step form
+    ref_merge = dispatch.block_fwd_merge(q, k, v, o_acc, lse_acc, pos_q,
+                                         pos_k, causal=causal, window=window,
+                                         impl="ref")
+    np.testing.assert_allclose(np.asarray(ref_merge[0]),
+                               np.asarray(two_step[0]), atol=2e-5, rtol=2e-5)
 
 
 def test_no_direct_kernel_imports():

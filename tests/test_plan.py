@@ -257,3 +257,99 @@ def test_decode_kernel_cost_model():
     assert ranked[0]["kernel"] == "pallas"
     with pytest.raises(ValueError, match="kernel"):
         cost.decode_step_cost(cfg, kernel="cuda", **kw)
+
+
+# ---------------------------------------------------------------------------
+# pipelined ring scan knobs (pipeline_scan / comm_chunks) + overlap model
+# ---------------------------------------------------------------------------
+
+def test_pipeline_knobs_roundtrip_and_validation(tmp_path):
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+    plan = make_plan(cfg, shape, n_devices=8, data=1, c=2,
+                     pipeline_scan=False, comm_chunks=2)
+    assert plan.pipeline_scan is False and plan.comm_chunks == 2
+    rc = plan.run_config()
+    assert rc.pipeline_scan is False and rc.comm_chunks == 2
+    loaded = ExecutionPlan.load(plan.save(tmp_path / "p.json"))
+    assert loaded == plan
+    # defaults: pipelined, unchunked
+    plan_d = make_plan(cfg, shape, n_devices=8, data=1, c=2)
+    assert plan_d.pipeline_scan is True and plan_d.comm_chunks >= 1
+    assert plan_d.run_config().pipeline_scan is True
+    # comm_chunks must divide the team sequence length C*N/P
+    with pytest.raises(ValueError, match="comm_chunks"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=8,
+                      n_devices=8, data=1, c=2, comm_chunks=3)  # 16 % 3
+    with pytest.raises(ValueError, match="comm_chunks"):
+        ExecutionPlan(arch="x", shape="s", seq_len=64, global_batch=8,
+                      n_devices=8, data=1, c=2, comm_chunks=0)
+
+
+def test_overlap_model_properties():
+    """attention_step_cost's measured-overlap parameterization: perfect
+    hiding is never slower than none; chunk latency is monotone; chunking
+    helps exactly when the exposed wire dominates the added latency."""
+    from repro.core import scheduler as sch
+
+    w = sch.AttnWorkload(batch=1, seq_len=65536, num_heads=16,
+                         num_kv_heads=4, head_dim=128)
+    cl = sch.ClusterModel(sp_size=16)
+
+    t_perfect = sch.attention_step_cost(w, cl, 2, "team_inner")["total_s"]
+    t_none = sch.attention_step_cost(
+        w, cl, 2, "team_inner", overlap_frac=0.0)["total_s"]
+    assert t_none >= t_perfect
+    # monotone in f
+    ts = [sch.attention_step_cost(w, cl, 2, "team_inner",
+                                  overlap_frac=f)["total_s"]
+          for f in (0.0, 0.25, 0.5, 0.75, 1.0)]
+    assert ts == sorted(ts, reverse=True)
+
+    # f=0 (nothing hides): chunking pipelines the exposed wire -> faster,
+    # so the chooser picks the largest grid entry
+    n = sch.choose_comm_chunks(w, cl, 2, "team_inner", overlap_frac=0.0,
+                               grid=(1, 2, 4))
+    assert n == 4
+    # f=1 (everything hides): chunks only add latency -> 1 wins
+    n = sch.choose_comm_chunks(w, cl, 2, "team_inner", overlap_frac=1.0,
+                               grid=(1, 2, 4))
+    assert n == 1
+    # latency-bound regime: huge per-message latency kills chunking even
+    # with nothing hidden
+    cl_lat = dc.replace(cl, step_latency=1.0)
+    n = sch.choose_comm_chunks(w, cl_lat, 2, "team_inner",
+                               overlap_frac=0.0, grid=(1, 2, 4))
+    assert n == 1
+
+    with pytest.raises(ValueError, match="overlap_frac"):
+        sch.attention_step_cost(w, cl, 2, "team_inner", overlap_frac=1.5)
+    with pytest.raises(ValueError, match="comm_chunks"):
+        sch.attention_step_cost(w, cl, 2, "team_inner", comm_chunks=0)
+
+
+def test_cost_choose_comm_chunks():
+    """Plan-level resolution: non-ring schemes -> 1; the grid is filtered
+    to divisors of the team sequence length; make_plan(comm_chunks=None)
+    uses the resolved value."""
+    cfg = registry.get_smoke("h2o-danube-1.8b")
+    shape = ShapeConfig("smoke", seq_len=64, global_batch=8, kind="train")
+    ul = cost.Arrangement("ulysses", 1, 8)
+    assert cost.choose_comm_chunks(cfg, shape, 8, ul) == 1
+    st2 = cost.Arrangement("startrail", 2, 2)
+    # s_team = 2*64/8 = 16: every grid entry legal; perfect overlap -> 1
+    assert cost.choose_comm_chunks(cfg, shape, 8, st2) == 1
+    # zero measured overlap -> largest legal chunk count wins on this
+    # bandwidth-bound shape
+    big = ShapeConfig("big", seq_len=65536, global_batch=8, kind="train")
+    assert cost.choose_comm_chunks(cfg, big, 8, st2,
+                                   overlap_frac=0.0) == 4
+    # grid entries that do not divide s_team are dropped (s_team=16 here,
+    # grid entry 5 illegal, 2 legal)
+    assert cost.choose_comm_chunks(cfg, shape, 8, st2, overlap_frac=0.0,
+                                   grid=(5, 2)) == 2
+    plan = make_plan(cfg, shape, n_devices=8, data=1, c=2,
+                     comm_chunks=None)
+    assert plan.comm_chunks == cost.choose_comm_chunks(
+        cfg, shape, 8, cost.Arrangement("startrail", 2, 2,
+                                        placement=plan.placement))

@@ -42,6 +42,9 @@ BATCHES = {
         "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",
         "plan_constructs", "commlog_c2",
     ],
+    "pipelined_scan": [
+        "pipelined_bitexact", "bwd_skip_equiv",
+    ],
 }
 
 

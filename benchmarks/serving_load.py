@@ -35,6 +35,17 @@ tokens/s and the analytical capacity pricing
 bit-identical cached-vs-cold tokens, hit rate > 0, >50% prefill-token
 savings, a tokens/s improvement, and zero recompiles after warmup.
 
+A fifth phase (``offload`` section) cycles Poisson arrivals over several
+shared-prompt *families* whose combined KV exceeds an undersized device
+page pool, pinned-host KV tier ON vs OFF (`engine.kv_connector`): with
+the tier on, prefix-cache evictions spill to host and returning families
+reload instead of re-prefilling. ``--check`` gates a strictly higher
+prefix hit rate AND tokens/s with the tier on, bit-identical tokens, a
+nonzero spill/reload count, and zero recompiles (including the transfer
+islands) after warmup; the analytical transfer-vs-recompute crossover
+(``plan.cost.spill_decision`` / ``spill_threshold_tokens``) lands in the
+JSON alongside.
+
 A fourth phase (``chunked`` section) replays a mixed long/short Poisson
 workload with chunked prefill ON vs OFF (one engine each, shared params).
 Step time is priced on an *analytical clock* (``plan.cost``): CPU wall
@@ -52,6 +63,17 @@ import argparse
 import json
 import os
 import time
+
+
+def exported_transfer_compiles(registry):
+    """Host-transfer island compiles (read/write pages) off the exported
+    metric surface — the offload gate requires these to stay flat after
+    warmup too: one fixed transfer bucket shape, compiled once."""
+    from repro import obs
+
+    parsed = obs.parse_prometheus(registry.render_prometheus())
+    return sum(v for (name, _), v in parsed.items()
+               if name == "engine_transfer_compiles_total")
 
 
 def exported_compiles(registry):
@@ -323,6 +345,120 @@ def run_prefix_phase(args):
     return stats
 
 
+def build_offload_workload(vocab, args):
+    """Poisson arrivals cycling over F prompt families whose combined KV
+    working set exceeds the device page pool. Each family is one long
+    shared prompt; requests carry a short unique tail. Round-robin family
+    order means a family always returns *after* the other families have
+    crowded its pages out of the pool — the regime where the pinned-host
+    tier turns recompute misses into reload hits."""
+    import numpy as np
+
+    from repro.engine import Request
+
+    rng = np.random.default_rng(args.seed + 23)
+    inter = rng.exponential(1.0 / args.rate, args.offload_requests)
+    arrivals = np.floor(np.cumsum(inter)).astype(int)
+    fams = [rng.integers(0, vocab, args.family_prompt).tolist()
+            for _ in range(args.offload_families)]
+    reqs = []
+    for i in range(args.offload_requests):
+        tail = int(rng.integers(2, 7))
+        gen = int(rng.integers(2, 5))
+        reqs.append(Request(
+            uid=f"of{i}",
+            tokens=fams[i % len(fams)]
+            + rng.integers(0, vocab, tail).tolist(),
+            max_new_tokens=gen, seed=args.seed + 300 + i))
+    return list(zip(arrivals.tolist(), reqs))
+
+
+def run_offload_phase(args):
+    """Family-cycling workload under pool pressure, host tier ON vs OFF.
+
+    Both gateways run the identical single-replica plan with the prefix
+    cache on and a page pool sized *below* the families' combined working
+    set; the only difference is ``host_tier_bytes``. The ON gateway's
+    evictions spill to pinned host memory and returning families reload
+    instead of re-prefilling, so (gated under ``--check``) it must see a
+    strictly higher prefix hit rate AND higher tokens/s than OFF, with
+    bit-identical tokens and zero recompiles — including the transfer
+    islands — after warmup.
+    """
+    from repro.configs import registry as arch_registry
+    from repro.engine import EngineConfig
+    from repro.gateway import build_gateway
+    from repro.plan import cost as plan_cost, make_serve_plan
+
+    cfg = (arch_registry.get_smoke(args.arch) if args.smoke
+           else arch_registry.get(args.arch))
+    gws = {}
+    stats = {}
+    outs = {}
+    compiles0 = {}
+    workload = None
+    for mode in ("on", "off"):
+        # a single-device submesh: host transfers then carry no collective
+        # machinery per call, and recompute pays its full serial cost —
+        # the same overhead balance a real deployment sees (one host DMA
+        # link per device vs. SP-parallel recompute is priced separately
+        # by the analytical section below)
+        plan = make_serve_plan(
+            cfg, arch=args.arch, n_devices=1,
+            decode_batch=args.max_slots, page_size=args.page_size,
+            max_len=args.max_len, mesh_kind="local", prefix_cache=True,
+            host_tier_bytes=args.host_tier_bytes if mode == "on" else 0)
+        gw = build_gateway(
+            args.arch, smoke=args.smoke, plan=plan,
+            eng=EngineConfig(max_slots=args.max_slots,
+                             page_size=args.page_size,
+                             pages_per_shard=args.offload_pages,
+                             max_len=args.max_len))
+        if workload is None:
+            workload = build_offload_workload(gw.cfg.vocab_size, args)
+        run_gateway(gw, workload)                    # untimed warmup
+        compiles0[mode] = (exported_compiles(gw.registry),
+                           exported_transfer_compiles(gw.registry))
+        gws[mode] = gw
+    # interleaved timed replays, best wall per mode (noise rejection —
+    # same reasoning as the prefix phase)
+    for _ in range(max(args.offload_reps, 1)):
+        for mode, gw in gws.items():
+            gw.reset()
+            rep, rep_out = run_gateway(gw, workload)
+            assert outs.get(mode) is None or rep_out == outs[mode], \
+                "offload replay diverged"
+            outs[mode] = rep_out
+            rep["host_tier"] = {
+                k: v for k, v in gw.stats()["host_tier"].items()
+                if k != "per_replica"}
+            if mode not in stats or rep["wall_s"] < stats[mode]["wall_s"]:
+                stats[mode] = rep
+    for mode, gw in gws.items():
+        stats[mode]["compiles_after_warmup"] = (
+            (exported_compiles(gw.registry),
+             exported_transfer_compiles(gw.registry)) == compiles0[mode])
+    stats["outputs_identical"] = outs["on"] == outs["off"]
+    stats["hit_rate_gain"] = (stats["on"]["hit_rate"]
+                              - stats["off"]["hit_rate"])
+    stats["speedup"] = (stats["on"]["tokens_per_s"]
+                        / stats["off"]["tokens_per_s"])
+    stats["requests"] = args.offload_requests
+    stats["families"] = args.offload_families
+    stats["family_prompt"] = args.family_prompt
+    stats["pages_per_shard"] = args.offload_pages
+    stats["host_tier_bytes"] = args.host_tier_bytes
+    # analytical transfer-vs-recompute pricing at the family chain length
+    plan = gws["on"].plan
+    stats["analytical"] = plan_cost.spill_decision(
+        cfg, chain_tokens=args.family_prompt, sp=plan.sp_size,
+        page_size=plan.page_size)
+    stats["analytical"]["threshold_tokens"] = \
+        plan_cost.spill_threshold_tokens(cfg, sp=plan.sp_size,
+                                         page_size=plan.page_size)
+    return stats
+
+
 def build_chunked_workload(vocab, args):
     """Mixed long/short Poisson arrivals: short decode-heavy requests keep
     the batch busy while occasional long prompts arrive mid-stream — the
@@ -491,6 +627,24 @@ def main(argv=None):
     ap.add_argument("--prefix-reps", type=int, default=3,
                     help="timed replays per prefix sub-phase (best wall "
                          "wins — sub-second phases need noise rejection)")
+    ap.add_argument("--offload-requests", type=int, default=9,
+                    help="requests in the host-tier offload phase "
+                         "(0 disables it)")
+    ap.add_argument("--offload-families", type=int, default=3,
+                    help="distinct shared-prompt families cycled through "
+                         "the undersized pool")
+    ap.add_argument("--family-prompt", type=int, default=128,
+                    help="shared prompt length per family (the spilled/"
+                         "reloaded chain)")
+    ap.add_argument("--offload-pages", type=int, default=20,
+                    help="pages per shard in the offload phase — sized so "
+                         "one family fits but two do not")
+    ap.add_argument("--host-tier-bytes", type=int, default=1 << 30,
+                    help="pinned-host tier capacity of the offload phase's "
+                         "ON gateway")
+    ap.add_argument("--offload-reps", type=int, default=3,
+                    help="timed replays per offload sub-phase (best wall "
+                         "wins)")
     ap.add_argument("--chunk-requests", type=int, default=9,
                     help="requests in the chunked-prefill latency phase "
                          "(0 disables it)")
@@ -538,6 +692,8 @@ def main(argv=None):
               if args.prefix_requests > 0 else None)
     chunked = (run_chunked_phase(args)
                if args.chunk_requests > 0 else None)
+    offload = (run_offload_phase(args)
+               if args.offload_requests > 0 else None)
 
     identical = cont_out == seq_out
     result = {
@@ -563,6 +719,7 @@ def main(argv=None):
         "kernels": kernels,
         "prefix": prefix,
         "chunked": chunked,
+        "offload": offload,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -591,6 +748,17 @@ def main(argv=None):
               f"{chunked['off']['p99_gap_s']:.3g}s (off) "
               f"({chunked['p99_improvement']:.2f}x better), identical: "
               f"{chunked['outputs_identical']}")
+    if offload is not None:
+        tier = offload["on"]["host_tier"]
+        print(f"[serving_load] host tier: "
+              f"{offload['on']['tokens_per_s']:.2f} tok/s (on) vs "
+              f"{offload['off']['tokens_per_s']:.2f} tok/s (off) "
+              f"(speedup {offload['speedup']:.2f}x), hit rate "
+              f"{offload['on']['hit_rate']:.2f} vs "
+              f"{offload['off']['hit_rate']:.2f}, spilled "
+              f"{tier['spill_pages']} pages / reloaded "
+              f"{tier['reload_pages']}, identical: "
+              f"{offload['outputs_identical']}")
     if args.check:
         assert identical, "batched outputs diverged from solo serving"
         assert result["compiles_after_warmup"], "recompiled after warmup"
@@ -626,6 +794,24 @@ def main(argv=None):
             for mode in ("on", "off"):
                 assert chunked[mode]["compiles_after_warmup"], (
                     f"chunked phase ({mode}) recompiled after warmup")
+        if offload is not None:
+            assert offload["outputs_identical"], (
+                "host-tier tokens diverged from the tier-off run")
+            tier = offload["on"]["host_tier"]
+            assert tier["spill_pages"] > 0, (
+                "pool pressure never spilled to the host tier")
+            assert tier["reload_pages"] > 0, (
+                "returning families never reloaded from the host tier")
+            assert offload["on"]["hit_rate"] > offload["off"]["hit_rate"], (
+                f"host tier did not raise the prefix hit rate: "
+                f"{offload['on']['hit_rate']:.2f} <= "
+                f"{offload['off']['hit_rate']:.2f}")
+            assert offload["speedup"] > 1.0, (
+                f"host tier slower than recompute: "
+                f"{offload['speedup']:.2f}x")
+            for mode in ("on", "off"):
+                assert offload[mode]["compiles_after_warmup"], (
+                    f"offload phase ({mode}) recompiled after warmup")
     return result
 
 

@@ -41,7 +41,7 @@ import numpy as np
 
 from repro import obs
 from repro.dist.sharding import SP_AXES
-from repro.engine import paged_cache, sampling as sampling_lib
+from repro.engine import kv_connector, paged_cache, sampling as sampling_lib
 from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
 from repro.models import transformer
 from repro.models.factory import Model
@@ -63,6 +63,13 @@ class EngineConfig:
     #                             chunk per driver step, interleaved with
     #                             decode so a long prompt never stalls the
     #                             decoding batch
+    host_tier_bytes: int = 0    # pinned-host KV tier capacity; 0 = off
+    #                             (the plan's host_tier_bytes, when set,
+    #                             is authoritative — like the rest of the
+    #                             serving face)
+    transfer_bucket: int = 4    # pages per host-link transfer launch (one
+    #                             fixed shape -> the read/write islands
+    #                             compile exactly once)
 
 
 class EngineMetrics:
@@ -90,6 +97,9 @@ class EngineMetrics:
         "prefill_compiles": ("engine_prefill_compiles_total", "counter",
                              int),
         "decode_compiles": ("engine_decode_compiles_total", "counter", int),
+        # host-link page transfer islands (read/write, one shape each)
+        "transfer_compiles": ("engine_transfer_compiles_total", "counter",
+                              int),
         "occupancy_sum": ("engine_occupancy_sum", "gauge", float),
         "peak_pages": ("engine_peak_pages", "gauge", int),
         "pages_total": ("engine_pages_total", "gauge", int),
@@ -99,7 +109,14 @@ class EngineMetrics:
                                     "counter", int),
         "prefill_tokens_cached": ("engine_prefill_tokens_cached_total",
                                   "counter", int),
+        # of the cached tokens, those reloaded from the pinned-host tier
+        "prefill_tokens_host": ("engine_prefill_tokens_host_total",
+                                "counter", int),
         "prefix_evictions": ("engine_prefix_evictions", "gauge", int),
+        # disaggregated prefill->decode handoffs (out: prefill-role side,
+        # in: decode-role side)
+        "handoffs_out": ("engine_handoffs_out_total", "counter", int),
+        "handoffs_in": ("engine_handoffs_in_total", "counter", int),
     }
     _HISTOGRAMS = ("serve_ttft_seconds", "serve_intertoken_seconds")
 
@@ -137,13 +154,15 @@ class EngineMetrics:
         self.registry.get(metric).set(typ(value), **self.labels)
 
     def reset(self, keep_compiles: bool = True) -> None:
-        pc, dc = self.prefill_compiles, self.decode_compiles
+        pc, dc, tc = (self.prefill_compiles, self.decode_compiles,
+                      self.transfer_compiles)
         for name in self._SPECS:
             setattr(self, name, 0)
         for name in self._HISTOGRAMS:
             self.registry.get(name).reset(**self.labels)
         if keep_compiles:
             self.prefill_compiles, self.decode_compiles = pc, dc
+            self.transfer_compiles = tc
 
     def to_dict(self) -> Dict[str, float]:
         d = {name: getattr(self, name) for name in self._SPECS}
@@ -211,8 +230,11 @@ class Engine:
                 "persisted serve plan")
         # the plan is authoritative for the serving shape; EngineConfig
         # keeps only the pool-capacity and sampling/driver knobs
-        eng = dc.replace(eng, max_slots=plan.decode_batch,
-                         page_size=plan.page_size, max_len=plan.seq_len)
+        eng = dc.replace(
+            eng, max_slots=plan.decode_batch, page_size=plan.page_size,
+            max_len=plan.seq_len,
+            host_tier_bytes=int(getattr(plan, "host_tier_bytes", 0)
+                                or eng.host_tier_bytes))
         run_cfg = plan.run_config()
         mesh = mesh if mesh is not None else plan.build_mesh()
         self.model, self.mesh, self.run_cfg, self.eng = model, mesh, run_cfg, eng
@@ -283,26 +305,118 @@ class Engine:
             raise NotImplementedError(
                 f"repro.engine: {cfg.name}: prefix caching is unsound for "
                 "MoE stacks (capacity couples prefix KV to the suffix)")
-        self.scheduler = self._new_scheduler()
+        if eng.host_tier_bytes > 0 and not self.prefix_caching:
+            raise ValueError(
+                "host_tier_bytes > 0 needs prefix_cache=True: the host "
+                "tier is fed by PrefixCache.evict and hit through the "
+                "same chain hashes")
         self._prefill_fns: Dict[int, object] = {}
         self._suffix_fns: Dict[int, object] = {}
         self._decode_fns: Dict[int, object] = {}
         self._base_keys: Dict[int, np.ndarray] = {}
         self.metrics = EngineMetrics(
-            registry, labels, pages_total=self.scheduler.pages_total())
+            registry, labels, pages_total=self.sp * eng.pages_per_shard)
         self.registry = self.metrics.registry
+        # host-link transfer islands + the connector (spill/reload/handoff)
+        self._read_pages_fn = None
+        self._write_pages_fn = None
+        self._cost_memo: Dict[int, float] = {}
+        self._spill_memo: Dict[int, bool] = {}
+        page_bytes = sum(
+            int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(
+                paged_cache.pool_spec(cfg, 1, eng.page_size)))
+        self.connector = kv_connector.KVConnector(
+            read_fn=self._read_kv, write_fn=self._write_kv,
+            bucket=eng.transfer_bucket, page_size=eng.page_size,
+            pages_per_shard=eng.pages_per_shard, page_bytes=page_bytes,
+            capacity_bytes=eng.host_tier_bytes,
+            spill_fn=self._spill_worthwhile,
+            registry=self.registry, labels=labels)
+        self._handoff_ready: List[SlotState] = []
+        self.scheduler = self._new_scheduler()
 
     def _new_scheduler(self) -> Scheduler:
         sched = Scheduler(
             max_slots=self.eng.max_slots, page_size=self.eng.page_size,
             sp=self.sp, pages_per_shard=self.eng.pages_per_shard,
             max_len=self.eng.max_len)
+        sched.connector = self.connector
         if self.prefix_caching:
             from repro.gateway.prefix_cache import PrefixCache
 
             sched.prefix_cache = PrefixCache(
-                sched.pool, page_size=self.eng.page_size, sp=self.sp)
+                sched.pool, page_size=self.eng.page_size, sp=self.sp,
+                cost_fn=self._recompute_cost,
+                connector=(self.connector if self.connector.enabled
+                           else None))
         return sched
+
+    # ---- host-link transfers (spill / reload / handoff) -----------------
+    def _io_fns(self):
+        """The page gather/scatter islands, built lazily and compiled
+        exactly once — the transfer bucket is a single fixed shape, so a
+        second trace here is operand-provenance drift, not a new bucket."""
+        if self._read_pages_fn is None:
+            import jax
+            from jax.sharding import PartitionSpec as P
+
+            rt = self.rt
+            self._read_pages_fn = jax.jit(jax.shard_map(
+                lambda pools, idx: paged_cache.read_pages(rt, pools, idx),
+                mesh=self.mesh, in_specs=(self._pool_part, P()),
+                out_specs=P(), check_vma=False))
+            self._write_pages_fn = jax.jit(jax.shard_map(
+                lambda pools, idx, data: paged_cache.write_pages(
+                    rt, pools, idx, data),
+                mesh=self.mesh, in_specs=(self._pool_part, P(), P()),
+                out_specs=self._pool_part, check_vma=False),
+                donate_argnums=(0,))
+            self.metrics.transfer_compiles += 2
+        return self._read_pages_fn, self._write_pages_fn
+
+    def _read_kv(self, idx: np.ndarray):
+        read, _ = self._io_fns()
+        return read(self.pools, idx)
+
+    def _write_kv(self, idx: np.ndarray, data) -> None:
+        _, write = self._io_fns()
+        self.pools = write(self.pools, idx, data)
+
+    def transfer_xla_compiles(self) -> int:
+        """XLA trace count of the transfer islands (2 once used; more
+        means silent retracing — same contract as ``xla_compiles``)."""
+        n = 0
+        for fn in (self._read_pages_fn, self._write_pages_fn):
+            if fn is not None:
+                size = getattr(fn, "_cache_size", None)
+                n += size() if callable(size) else 1
+        return n
+
+    def _recompute_cost(self, chain_tokens: int) -> float:
+        """Eviction ranking: seconds to re-prefill a chain cold."""
+        c = self._cost_memo.get(chain_tokens)
+        if c is None:
+            from repro.plan import cost as plan_cost
+
+            c = plan_cost.prefill_step_cost(
+                self.cfg, prompt_len=chain_tokens, sp=self.sp,
+                page_size=self.eng.page_size)["total_s"]
+            self._cost_memo[chain_tokens] = c
+        return c
+
+    def _spill_worthwhile(self, chain_tokens: int) -> bool:
+        """Under host-tier pressure: does the transfer round-trip beat
+        recomputing this chain (plan.cost.spill_decision)?"""
+        v = self._spill_memo.get(chain_tokens)
+        if v is None:
+            from repro.plan import cost as plan_cost
+
+            v = bool(plan_cost.spill_decision(
+                self.cfg, chain_tokens=chain_tokens, sp=self.sp,
+                page_size=self.eng.page_size)["spill"])
+            self._spill_memo[chain_tokens] = v
+        return v
 
     @property
     def prefix_cache(self):
@@ -333,10 +447,13 @@ class Engine:
 
     def reset(self) -> None:
         """Drop all requests and cache contents (including the prefix
-        cache — the pools are zeroed); keep compiled fns."""
+        cache and the host tier — the pools are zeroed); keep compiled
+        fns."""
         self.pools = self._zero_pools(self.pools)
+        self.connector.reset()
         self.scheduler = self._new_scheduler()
         self._prefilling = []
+        self._handoff_ready = []
         self.last_step_prefills = []
         self._arrival.clear()
         self._last_emit.clear()
@@ -524,6 +641,14 @@ class Engine:
         """
         req = st.req
         m = self.metrics
+        if st.pending_reload:
+            # host-tier hits: land their KV in the freshly-allocated pool
+            # pages before any forward reads them
+            with self.tracer.span("engine/host_reload", cat="engine",
+                                  uid=req.uid, blocks=len(st.pending_reload)):
+                self.connector.reload(st.pending_reload)
+            m.prefill_tokens_host += st.host_len
+            st.pending_reload = []
         start = st.prefill_pos
         end = req.prompt_len if not self._chunk \
             else min(start + self._chunk, req.prompt_len)
@@ -576,7 +701,40 @@ class Engine:
             m.observe_ttft(now - arrived)
         self._last_emit[st.req.uid] = now
         if st.done:
-            self._finish_request(st)
+            if st.req.handoff:
+                # keep the slot (and its pages' refs) live until the
+                # gateway exports the prompt KV to a decode replica —
+                # finishing here could recycle the pages mid-export
+                self._handoff_ready.append(st)
+                self.metrics.handoffs_out += 1
+            else:
+                self._finish_request(st)
+
+    # ---- disaggregated prefill -> decode handoff ------------------------
+    def take_handoffs(self) -> List[SlotState]:
+        """Slots whose handoff prefill finished this step (prompt KV still
+        pinned). The caller must ``export_kv`` then ``release_handoff``
+        each one."""
+        out, self._handoff_ready = self._handoff_ready, []
+        return out
+
+    def export_kv(self, st: SlotState) -> List:
+        """Read the slot's prompt-KV pages to host, block order. The
+        partial tail block rides along — positions past ``prompt_len``
+        hold garbage the position-encoded validity never reads."""
+        nb_kv = math.ceil(st.req.prompt_len / self.eng.page_size)
+        return self.connector.export(st.pages[:nb_kv])
+
+    def release_handoff(self, st: SlotState) -> None:
+        """Drop the handoff slot after its KV has been exported."""
+        self._finish_request(st)
+
+    def add_prefilled(self, req: Request, first_token: int,
+                      blocks: List) -> None:
+        """Decode-role entry point: queue a request whose prompt KV and
+        first token came from a prefill replica. No TTFT is observed here
+        — the first token was emitted by the prefill engine."""
+        self.scheduler.enqueue_prefilled(req, first_token, blocks)
 
     def step(self) -> List[Tuple[str, int]]:
         """One driver iteration: admit, advance prefills (one chunk each),
@@ -596,6 +754,28 @@ class Engine:
         m = self.metrics
         tracer = self.tracer
         self.last_step_prefills = []
+
+        # commit spills staged by the previous step's evictions: host-tier
+        # entries become hittable only once their d2h copy has landed (a
+        # torn spill is never observable as a hit)
+        self.connector.flush()
+
+        # disaggregated handoff inbox: requests with prompt KV prefilled
+        # on another replica enter here — inject the exported pages and
+        # the already-sampled first token, skipping prefill entirely
+        for st, tok, blocks in self.scheduler.admit_prefilled(m.steps):
+            with tracer.span("engine/handoff_inject", cat="engine",
+                             uid=st.req.uid, blocks=len(blocks)):
+                nb_kv = math.ceil(st.req.prompt_len / self.eng.page_size)
+                self.connector.inject(st.pages[:nb_kv], blocks)
+            st.cache_len = st.req.prompt_len
+            st.prefill_pos = st.req.prompt_len
+            st.out.append(tok)
+            st.first_token_step = m.steps
+            m.handoffs_in += 1
+            self._last_emit[st.req.uid] = time.monotonic()
+            if st.done:                      # degenerate 1-token budget
+                self._finish_request(st)
 
         # in-flight chunked prefills admitted on earlier steps: one chunk
         # each, *before* this step's admissions (FIFO progress)
@@ -626,8 +806,10 @@ class Engine:
             m.prefix_evictions = self.scheduler.prefix_cache.evicted_pages
 
         # decode: slots whose prefill has completed (mid-chunk slots hold
-        # pages but have no token stream yet)
-        active = [st for st in self.scheduler.active() if st.cache_len > 0]
+        # pages but have no token stream yet; done-but-unreleased handoff
+        # slots only await export and must not keep generating)
+        active = [st for st in self.scheduler.active()
+                  if st.cache_len > 0 and not st.done]
         if active:
             width = self.scheduler.decode_width()
             sampled = any(st.req.temperature > 0.0 for st in active)
@@ -680,7 +862,8 @@ class Engine:
         return emitted
 
     def idle(self) -> bool:
-        return not self.scheduler.queue and not self.scheduler.active()
+        return not self.scheduler.queue and not self.scheduler.prefilled \
+            and not self.scheduler.active()
 
     def run(self, max_steps: Optional[int] = None) -> Dict[str, List[int]]:
         """Drive until every queued/running request finishes."""

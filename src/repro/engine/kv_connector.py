@@ -1,0 +1,448 @@
+"""Tiered KV store: a pinned-host tier behind the HBM page pool, bridged
+by a KV connector (the Mooncake/vLLM-connector construction, on this
+repo's SP-sharded paged pool).
+
+Why
+---
+The prefix cache (`gateway.prefix_cache`) lives entirely in the device
+page pool, so its capacity — and the hit rate it can sustain — is capped
+by HBM. At ring-attention context lengths the KV footprint, not FLOPs, is
+the binding constraint, and the leaf-first eviction throws away KV that
+was *expensive* to compute. The host tier turns that eviction into a
+demotion: a refcount-1 node `PrefixCache.evict` would drop instead spills
+its page to pinned host memory (chain hash preserved), and a later trie
+hit on the same chain reloads it into freshly-acquired pool pages instead
+of re-prefilling.
+
+Tiers and lifecycle
+-------------------
+::
+
+      device HBM page pool          pinned host arrays
+    ┌──────────────────────┐      ┌─────────────────────┐
+    │ PagePool + PrefixCache│ spill│  staging (in-flight │
+    │ (SP-sharded pages,    │─────▶│  device copies)     │
+    │  refcounted, COW)     │      │    │ flush/commit   │
+    │                       │◀─────│    ▼                │
+    │ fresh pages at admit  │reload│  HostTier store     │
+    └──────────────────────┘      │  (hash -> KV, LRU)  │
+                                   └─────────────────────┘
+
+* **spill** — at eviction the victim page is read out of the pool by a
+  jitted gather (`paged_cache.read_pages`, one fixed-size transfer bucket
+  so it compiles exactly once) and parked in a per-shard **staging**
+  list as a device array: the dispatch is asynchronous, and the copy has
+  captured the page's value in program order, so the pool page can be
+  reused immediately.
+* **flush/commit** — at the top of the next engine step the staged
+  arrays are materialised to host numpy and inserted into the
+  :class:`HostTier` store. Only *committed* entries are hittable
+  (`has()`), so a torn or in-flight spill can never satisfy a lookup.
+* **reload** — admission probes the tier with the same chain hashes the
+  device trie uses; hits extend ``cached_len`` past the device match, and
+  the scheduler records pending reloads into the *fresh* pages it just
+  allocated (host hits are cheap-but-not-free: they still consume pool
+  pages and admission feasibility counts them like any uncached block).
+  The engine writes them back with `paged_cache.write_pages` before the
+  suffix prefill runs.
+
+The same read/write islands carry the **prefill -> decode handoff** of a
+disaggregated gateway (`export` / `inject`): finished prefill KV goes
+device -> host -> device between replicas on the smoke path.
+
+Pricing
+-------
+`plan.cost.spill_decision` compares the round-trip transfer bytes against
+the chain's recompute FLOPs. The connector spills unconditionally while
+the tier has free capacity (an idle host tier costs nothing to fill);
+under capacity pressure the decision gates admission, so chains cheaper
+to recompute than to round-trip never displace valuable ones. The same
+cost curve orders `PrefixCache.evict`'s victims (cheapest-recompute
+first).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro import obs
+
+# Host transfers span ~page-bucket DMAs (sub-ms) to multi-MB chain
+# reloads; pinned so latency quantiles are comparable across runs.
+TRANSFER_BUCKETS = (1e-5, 3e-5, 1e-4, 3e-4, 1e-3, 3e-3, 0.01, 0.03,
+                    0.1, 0.3, 1.0, 3.0)
+
+
+@dataclasses.dataclass
+class _HostPage:
+    """One committed page in the host tier (immutable once stored)."""
+
+    key: int                 # chain hash (position-qualified, trie-equal)
+    chain_tokens: int        # tokens of the chain ending at this block
+    data: object             # pool-shaped tree, leaves (n_per, ps, Hkv, hd)
+
+
+@dataclasses.dataclass
+class _Staged:
+    """An in-flight spill: device arrays whose d2h copy may still be
+    running. Invisible to ``has()`` until committed by ``flush()``."""
+
+    key: int
+    chain_tokens: int
+    data: object             # device tree, leaves (n_per, ps, Hkv, hd)
+    t0: float                # dispatch time (for the d2h latency sample)
+
+
+class HostTier:
+    """Pinned-host page store keyed by chain hash, byte-capacity LRU.
+
+    Holds only *committed* numpy pages; capacity is enforced in whole
+    pages (``capacity_bytes // page_bytes``). Eviction is LRU over
+    committed entries — reloads touch, so chains in active rotation
+    survive.
+    """
+
+    def __init__(self, *, capacity_bytes: int, page_bytes: int):
+        if page_bytes <= 0:
+            raise ValueError(f"page_bytes must be positive, got {page_bytes}")
+        self.page_bytes = page_bytes
+        self.capacity_pages = max(int(capacity_bytes) // page_bytes, 0)
+        self._store: "collections.OrderedDict[int, _HostPage]" = \
+            collections.OrderedDict()
+        self.evicted_pages = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    @property
+    def bytes_resident(self) -> int:
+        return len(self._store) * self.page_bytes
+
+    def has(self, key: int) -> bool:
+        """Pure membership probe — no LRU touch (blocked admissions must
+        stay side-effect free)."""
+        return key in self._store
+
+    def get(self, key: int) -> _HostPage:
+        entry = self._store[key]
+        self._store.move_to_end(key)
+        return entry
+
+    def touch(self, key: int) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+
+    def put(self, entry: _HostPage) -> int:
+        """Insert (or LRU-touch) a committed page; evicts LRU entries
+        past capacity. Returns the number of host pages evicted."""
+        if entry.key in self._store:
+            self._store.move_to_end(entry.key)
+            return 0
+        self._store[entry.key] = entry
+        dropped = 0
+        while len(self._store) > self.capacity_pages:
+            self._store.popitem(last=False)
+            dropped += 1
+        self.evicted_pages += dropped
+        return dropped
+
+    def drop_all(self) -> None:
+        self._store.clear()
+
+
+class KVConnector:
+    """Bridge between one engine's page pool and its host tier.
+
+    The engine supplies the two jitted transfer islands:
+
+    * ``read_fn(idx)``  — (bucket,) int32 global page ids (-1 pad) ->
+      pool-shaped tree, leaves (n_per, bucket, ps, Hkv, hd), replicated.
+    * ``write_fn(idx, data)`` — scatter the same shape back into the
+      pools (the engine donates and swaps its pool arrays inside).
+
+    Global page id = ``shard * pages_per_shard + local_page`` — the same
+    linearisation as the SP shard order, so one integer round-trips
+    through the host tier and lands on the owning shard.
+    """
+
+    def __init__(self, *, read_fn: Callable, write_fn: Callable,
+                 bucket: int, page_size: int, pages_per_shard: int,
+                 page_bytes: int, capacity_bytes: int,
+                 spill_fn: Optional[Callable[[int], bool]] = None,
+                 registry: Optional[obs.Registry] = None,
+                 labels: Optional[Dict[str, str]] = None):
+        self.read_fn = read_fn
+        self.write_fn = write_fn
+        self.bucket = bucket
+        self.page_size = page_size
+        self.pages_per_shard = pages_per_shard
+        self.page_bytes = page_bytes
+        self.tier = HostTier(capacity_bytes=capacity_bytes,
+                             page_bytes=page_bytes)
+        # spill_fn(chain_tokens) -> True when the transfer round-trip beats
+        # recompute (plan.cost.spill_decision); consulted only under
+        # capacity pressure — free host capacity always admits.
+        self.spill_fn = spill_fn
+        self._staging: Dict[int, List[_Staged]] = {}     # per source shard
+        self._staged_keys: set = set()
+        self.registry = registry if registry is not None else obs.Registry()
+        self.labels = dict(labels or {})
+        r = self.registry
+        self._pages = r.counter(
+            "kv_transfer_pages_total",
+            "KV pages moved over the host link, by op "
+            "(spill/reload/handoff_out/handoff_in)")
+        self._bytes = r.counter(
+            "kv_transfer_bytes_total", "KV bytes moved over the host link")
+        self._lat = r.histogram(
+            "kv_transfer_seconds",
+            "Host-observed transfer latency (dispatch -> commit for "
+            "spills; host assembly + dispatch for reloads)",
+            buckets=TRANSFER_BUCKETS)
+        self._skipped = r.counter(
+            "host_tier_spill_skipped_total",
+            "Spills refused by the cost model under capacity pressure")
+        self._host_evict = r.counter(
+            "host_tier_evicted_pages_total", "Host-tier LRU evictions")
+        self._hit_tok = r.counter(
+            "host_tier_hit_tokens_total",
+            "Prompt tokens served from the host tier")
+        self._lookup_tok = r.counter(
+            "host_tier_lookup_tokens_total",
+            "Prompt tokens probed against the host tier (past the "
+            "device-trie match)")
+        self._g_pages = r.gauge("host_tier_pages",
+                                "Committed pages resident in the host tier")
+        self._g_bytes = r.gauge("host_tier_bytes",
+                                "Committed bytes resident in the host tier")
+        self._g_hit = r.gauge("host_tier_hit_rate",
+                              "host hit tokens / host lookup tokens")
+
+    # ---- helpers --------------------------------------------------------
+    def global_id(self, page: Tuple[int, int]) -> int:
+        shard, local = page
+        return shard * self.pages_per_shard + local
+
+    def _count(self, op: str, pages: int, seconds: float) -> None:
+        self._pages.inc(pages, op=op, **self.labels)
+        self._bytes.inc(pages * self.page_bytes, op=op, **self.labels)
+        self._lat.observe(seconds, op=op, **self.labels)
+
+    @property
+    def enabled(self) -> bool:
+        return self.tier.capacity_pages > 0
+
+    # ---- spill (device -> staging -> host) ------------------------------
+    def spill(self, *, key: int, page: Tuple[int, int],
+              chain_tokens: int) -> bool:
+        """Stage an evicted page for the host tier. Called by
+        ``PrefixCache.evict`` *before* the pool reference drops: the read
+        is dispatched here, so the page value is captured in program
+        order even though the page may be reallocated within the same
+        admission. Returns True when a copy was staged."""
+        if not self.enabled:
+            return False
+        if self.tier.has(key):
+            self.tier.touch(key)                 # dedupe: already resident
+            return False
+        if key in self._staged_keys:
+            return False
+        occupied = len(self.tier) + len(self._staged_keys)
+        if occupied >= self.tier.capacity_pages and self.spill_fn is not None \
+                and not self.spill_fn(chain_tokens):
+            self._skipped.inc(1, **self.labels)
+            return False
+        import jax
+
+        idx = np.full((self.bucket,), -1, np.int32)
+        idx[0] = self.global_id(page)
+        out = self.read_fn(idx)
+        data = jax.tree.map(lambda v: v[:, 0], out)
+        self._staging.setdefault(page[0], []).append(
+            _Staged(key=key, chain_tokens=chain_tokens, data=data,
+                    t0=time.perf_counter()))
+        self._staged_keys.add(key)
+        return True
+
+    def flush(self) -> int:
+        """Commit every staged spill: block on the d2h copies, move the
+        pages into the host store, and only then make them hittable.
+        Called once per engine step — a crash or reset mid-flight loses
+        staged pages, never corrupts committed ones."""
+        import jax
+
+        committed = 0
+        for shard in sorted(self._staging):
+            for entry in self._staging[shard]:
+                data = jax.tree.map(np.asarray, entry.data)   # blocks on d2h
+                self._count("spill", 1, time.perf_counter() - entry.t0)
+                dropped = self.tier.put(_HostPage(
+                    key=entry.key, chain_tokens=entry.chain_tokens,
+                    data=data))
+                if dropped:
+                    self._host_evict.inc(dropped, **self.labels)
+                committed += 1
+        self._staging.clear()
+        self._staged_keys.clear()
+        self._update_gauges()
+        return committed
+
+    # ---- lookup / reload (host -> device) -------------------------------
+    def has(self, key: int) -> bool:
+        """Committed-only membership (staged in-flight spills are not
+        hittable). Pure — safe on blocked admissions."""
+        return self.tier.has(key)
+
+    def note_probe(self, lookup_blocks: int, hit_blocks: int) -> None:
+        """Hit-rate accounting, called once per *successful* admission
+        (blocked admissions leave no trace)."""
+        self._lookup_tok.inc(lookup_blocks * self.page_size, **self.labels)
+        self._hit_tok.inc(hit_blocks * self.page_size, **self.labels)
+        self._update_gauges()
+
+    def reload(self, items: Sequence[Tuple[int, Tuple[int, int]]]) -> None:
+        """Write committed host pages into freshly-allocated pool pages.
+
+        items: (chain hash, (shard, local page)) per block, in block
+        order. The entries stay resident in the tier (LRU-touched): other
+        arrivals of the same chain may need them again after the fresh
+        copies are themselves evicted.
+        """
+        if not items:
+            return
+        import jax
+
+        for lo in range(0, len(items), self.bucket):
+            batch = items[lo:lo + self.bucket]
+            t0 = time.perf_counter()
+            entries = []
+            for key, page in batch:
+                if not self.tier.has(key):
+                    raise RuntimeError(
+                        f"host-tier reload of missing chain hash {key:#x} "
+                        "(evicted between admission and reload?)")
+                entries.append(self.tier.get(key))
+            idx = np.full((self.bucket,), -1, np.int32)
+            for j, (_, page) in enumerate(batch):
+                idx[j] = self.global_id(page)
+            pad = self.bucket - len(batch)
+
+            def stack(*leaves):
+                arr = np.stack(leaves, axis=1)
+                if pad:
+                    z = np.zeros((arr.shape[0], pad) + arr.shape[2:],
+                                 arr.dtype)
+                    arr = np.concatenate([arr, z], axis=1)
+                return arr
+
+            data = jax.tree.map(stack, *[e.data for e in entries])
+            self.write_fn(idx, data)
+            self._count("reload", len(batch), time.perf_counter() - t0)
+        self._update_gauges()
+
+    # ---- prefill -> decode handoff --------------------------------------
+    def export(self, pages: Sequence[Tuple[int, int]]):
+        """Read whole pages to host (synchronous) for a cross-replica
+        handoff. Returns a list of pool-shaped page trees, leaves
+        (n_per, ps, Hkv, hd), in the given block order. The pages are not
+        inserted into this tier — they belong to the receiving replica."""
+        import jax
+
+        out: List[object] = []
+        for lo in range(0, len(pages), self.bucket):
+            batch = pages[lo:lo + self.bucket]
+            t0 = time.perf_counter()
+            idx = np.full((self.bucket,), -1, np.int32)
+            for j, page in enumerate(batch):
+                idx[j] = self.global_id(page)
+            dev = self.read_fn(idx)
+            host = jax.tree.map(np.asarray, dev)          # blocks on d2h
+            self._count("handoff_out", len(batch),
+                        time.perf_counter() - t0)
+            for j in range(len(batch)):
+                out.append(jax.tree.map(lambda v: v[:, j], host))
+        return out
+
+    def inject(self, pages: Sequence[Tuple[int, int]], blocks) -> None:
+        """Write exported page trees (from a peer connector's ``export``)
+        into this engine's pool pages, block order matching ``pages``."""
+        assert len(pages) == len(blocks)
+        import jax
+
+        for lo in range(0, len(pages), self.bucket):
+            bp = pages[lo:lo + self.bucket]
+            bb = blocks[lo:lo + self.bucket]
+            t0 = time.perf_counter()
+            idx = np.full((self.bucket,), -1, np.int32)
+            for j, page in enumerate(bp):
+                idx[j] = self.global_id(page)
+            pad = self.bucket - len(bp)
+
+            def stack(*leaves):
+                arr = np.stack(leaves, axis=1)
+                if pad:
+                    z = np.zeros((arr.shape[0], pad) + arr.shape[2:],
+                                 arr.dtype)
+                    arr = np.concatenate([arr, z], axis=1)
+                return arr
+
+            data = jax.tree.map(stack, *bb)
+            self.write_fn(idx, data)
+            self._count("handoff_in", len(bp), time.perf_counter() - t0)
+
+    # ---- lifecycle / stats ----------------------------------------------
+    def reset(self) -> None:
+        """Engine reset: drop committed and staged pages, zero the
+        tier-level series (transfer counters follow the benchmark-phase
+        reset convention of ``EngineMetrics``)."""
+        self.tier.drop_all()
+        self.tier.evicted_pages = 0
+        self._staging.clear()
+        self._staged_keys.clear()
+        for op in ("spill", "reload", "handoff_out", "handoff_in"):
+            self._pages.set(0, op=op, **self.labels)
+            self._bytes.set(0, op=op, **self.labels)
+            self._lat.reset(op=op, **self.labels)
+        for c in (self._skipped, self._host_evict, self._hit_tok,
+                  self._lookup_tok):
+            c.set(0, **self.labels)
+        self._update_gauges()
+
+    def _update_gauges(self) -> None:
+        self._g_pages.set(len(self.tier), **self.labels)
+        self._g_bytes.set(self.tier.bytes_resident, **self.labels)
+        lookup = self._lookup_tok.value(**self.labels)
+        hit = self._hit_tok.value(**self.labels)
+        self._g_hit.set(hit / lookup if lookup else 0.0, **self.labels)
+
+    @property
+    def hit_rate(self) -> float:
+        lookup = self._lookup_tok.value(**self.labels)
+        return (self._hit_tok.value(**self.labels) / lookup) if lookup \
+            else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        v = self.labels
+        return {
+            "capacity_pages": self.tier.capacity_pages,
+            "resident_pages": len(self.tier),
+            "resident_bytes": self.tier.bytes_resident,
+            "staged_pages": len(self._staged_keys),
+            "spill_pages": int(self._pages.value(op="spill", **v)),
+            "spill_bytes": int(self._bytes.value(op="spill", **v)),
+            "reload_pages": int(self._pages.value(op="reload", **v)),
+            "reload_bytes": int(self._bytes.value(op="reload", **v)),
+            "handoff_out_pages": int(
+                self._pages.value(op="handoff_out", **v)),
+            "handoff_in_pages": int(self._pages.value(op="handoff_in", **v)),
+            "spills_skipped": int(self._skipped.value(**v)),
+            "host_evicted_pages": int(self._host_evict.value(**v)),
+            "hit_tokens": int(self._hit_tok.value(**v)),
+            "lookup_tokens": int(self._lookup_tok.value(**v)),
+            "hit_rate": self.hit_rate,
+        }

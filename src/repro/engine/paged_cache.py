@@ -176,6 +176,55 @@ def init_pools(cfg: ModelConfig, mesh, pages_global: int, page_size: int):
 # device-side read/write (call inside shard_map; pools are local slices)
 # ---------------------------------------------------------------------------
 
+def read_pages(rt: Runtime, pools, idx):
+    """Gather whole pages by *global* page id, replicated to every device.
+
+    pools: the full pool tree's local slices, leaves
+      (n_periods, pages_loc, page_size, Hkv, hd).
+    idx: (B,) int32 global page ids (``shard * pages_loc + local_page``);
+      -1 pads the fixed transfer bucket (padding reads as zeros).
+
+    Each shard contributes the pages it owns (zeros elsewhere); a psum
+    over the SP axes rebuilds the full batch on every device, so the
+    caller can pull the result to the host from any one of them. This is
+    the device->host leg of the KV connector's spill and of the
+    prefill->decode handoff (`engine.kv_connector`).
+    """
+    rank = rt.sp_rank()
+
+    def leaf(pool):
+        pages_loc = pool.shape[1]
+        local = idx - rank * pages_loc
+        ok = (idx >= 0) & (local >= 0) & (local < pages_loc)
+        vals = jnp.take(pool, jnp.where(ok, local, 0), axis=1)
+        vals = jnp.where(ok[None, :, None, None, None], vals,
+                         jnp.zeros_like(vals))
+        return rt.psum_model(vals)
+
+    return jax.tree.map(leaf, pools)
+
+
+def write_pages(rt: Runtime, pools, idx, data):
+    """Scatter whole pages by global page id (inverse of ``read_pages``).
+
+    data: a tree like ``pools`` with leaves (n_periods, B, page_size, Hkv,
+    hd), replicated. Every shard writes only the batch entries whose page
+    it owns; idx -1 (bucket padding) and out-of-range ids drop. This is
+    the host->device leg of the connector's reload and of the decode-side
+    handoff injection.
+    """
+    rank = rt.sp_rank()
+
+    def leaf(pool, d):
+        pages_loc = pool.shape[1]
+        local = idx - rank * pages_loc
+        ok = (idx >= 0) & (local >= 0) & (local < pages_loc)
+        tgt = jnp.where(ok, local, pages_loc)               # OOB -> drop
+        return pool.at[:, tgt].set(d.astype(pool.dtype), mode="drop")
+
+    return jax.tree.map(leaf, pools, data)
+
+
 def write_token(rt: Runtime, cache: Dict[str, jax.Array], k_new, v_new,
                 paged: PagedTables, cache_len, active):
     """Append one token per slot into its owning shard's page.

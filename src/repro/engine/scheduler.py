@@ -49,6 +49,10 @@ class Request:
     top_k: int = 0                     # 0 disables
     top_p: float = 1.0                 # 1.0 disables
     seed: int = 0
+    handoff: bool = False              # prefill-role request: stop after the
+    #                                    first token and keep the prompt KV
+    #                                    live until the gateway exports it to
+    #                                    a decode replica
 
     @property
     def prompt_len(self) -> int:
@@ -68,9 +72,16 @@ class SlotState:
     #                                    pool pages (chunked prefill cursor;
     #                                    starts at cached_len, reaches
     #                                    prompt_len when prefill completes)
+    host_len: int = 0                  # of cached_len, tokens whose blocks
+    #                                    are host-tier hits: their KV must be
+    #                                    reloaded into the fresh pages listed
+    #                                    in pending_reload before any forward
     out: List[int] = dataclasses.field(default_factory=list)
     pages: List[Tuple[int, int]] = dataclasses.field(default_factory=list)
     hashes: List[int] = dataclasses.field(default_factory=list)
+    # (chain hash, (shard, local page)) per host-hit block, block order
+    pending_reload: List[Tuple[int, Tuple[int, int]]] = \
+        dataclasses.field(default_factory=list)
     first_token_step: Optional[int] = None
     done_step: Optional[int] = None
 
@@ -104,6 +115,13 @@ class Scheduler:
         self.pool = PagePool(sp, pages_per_shard)
         # optional repro.gateway.prefix_cache.PrefixCache sharing this pool
         self.prefix_cache = prefix_cache
+        # optional repro.engine.kv_connector.KVConnector: admission probes
+        # its committed host tier for blocks past the device-trie match
+        self.connector = None
+        # disaggregated handoff inbox: (req, first token, exported KV
+        # blocks) injected by the gateway, admitted like prefills but
+        # skipping the forward entirely
+        self.prefilled: Deque[Tuple[Request, int, list]] = collections.deque()
         self.table = np.full((max_slots, sp, self.table_width), -1, np.int32)
         self.finished: Dict[str, SlotState] = {}
 
@@ -181,6 +199,8 @@ class Scheduler:
             nb = self._blocks_for(req)
             hashes: List[int] = []
             matched: List[Tuple[int, int]] = []
+            host_hits: List[int] = []
+            usable = 0
             if self.prefix_cache is not None:
                 # all full prompt blocks (register_prefix inserts them)...
                 hashes = self.prefix_cache.hashes(req.tokens)
@@ -190,6 +210,17 @@ class Scheduler:
                 # the suffix prefill
                 usable = (req.prompt_len - 1) // self.page_size
                 matched = self.prefix_cache.match(hashes[:usable])
+                if self.connector is not None and self.connector.enabled:
+                    # host-tier hits extend the cached prefix past the
+                    # device match — cheap (no recompute) but not free:
+                    # they still need fresh pages, so they stay in `need`
+                    # and the feasibility check below counts them like
+                    # any uncached block. `has` is pure: a blocked
+                    # admission leaves no trace in either tier.
+                    b = len(matched)
+                    while b < usable and self.connector.has(hashes[b]):
+                        host_hits.append(hashes[b])
+                        b += 1
             n_hits = len(matched)
             need = [0] * self.sp
             for b in range(n_hits, nb):
@@ -210,16 +241,84 @@ class Scheduler:
             fresh = [(b % self.sp, self._alloc_evicting(b % self.sp))
                      for b in range(n_hits, nb)]
             self.queue.popleft()
+            cached = (n_hits + len(host_hits)) * self.page_size
             st = SlotState(req=req, slot=free_slot, arrived_step=step,
-                           cached_len=len(hits) * self.page_size,
-                           prefill_pos=len(hits) * self.page_size,
+                           cached_len=cached, prefill_pos=cached,
+                           host_len=len(host_hits) * self.page_size,
                            hashes=hashes)
+            # host-hit block b maps to fresh[b - n_hits]: the engine
+            # reloads its KV there before the suffix prefill runs
+            st.pending_reload = [(h, fresh[j])
+                                 for j, h in enumerate(host_hits)]
+            if self.connector is not None and self.connector.enabled \
+                    and usable > n_hits:
+                self.connector.note_probe(usable - n_hits, len(host_hits))
             st.pages = hits + fresh
             for b, (shard, page) in enumerate(st.pages):
                 self.table[free_slot, shard, b // self.sp] = page
             self.slots[free_slot] = st
             admitted.append(st)
         return admitted
+
+    # ---- disaggregated handoff (decode-role replicas) -------------------
+    def enqueue_prefilled(self, req: Request, first_token: int,
+                          blocks: list) -> None:
+        """Queue a request whose prompt KV was prefilled on another
+        replica: ``blocks`` are the exported page trees (one per block of
+        ``ceil(prompt_len / page_size)``), ``first_token`` the token the
+        prefill replica already sampled and emitted."""
+        if req.prompt_len < 1:
+            raise ValueError(f"{req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"{req.uid}: max_new_tokens must be >= 1")
+        if req.prompt_len + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"{req.uid}: prompt {req.prompt_len} + budget "
+                f"{req.max_new_tokens} exceeds engine max_len {self.max_len}")
+        nb_kv = math.ceil(req.prompt_len / self.page_size)
+        if len(blocks) != nb_kv:
+            raise ValueError(
+                f"{req.uid}: handoff carries {len(blocks)} KV blocks, "
+                f"prompt needs {nb_kv}")
+        worst = max(self._per_shard_need(self._blocks_for(req)))
+        if worst > self.pages_per_shard:
+            raise ValueError(
+                f"{req.uid}: needs {worst} pages on a shard but the pool "
+                f"holds {self.pages_per_shard}/shard")
+        self.prefilled.append((req, first_token, blocks))
+
+    def admit_prefilled(self, step: int, limit: Optional[int] = None
+                        ) -> List[Tuple[SlotState, int, list]]:
+        """FIFO-admit handed-off requests into free slots. Every block
+        allocates fresh pages (an injected prompt never shares the trie —
+        its KV arrives from outside the pool), with the same read-only
+        feasibility check as :meth:`admit`. The caller (the engine) must
+        inject the returned blocks into the slot's pages before the next
+        decode step."""
+        out: List[Tuple[SlotState, int, list]] = []
+        while self.prefilled and (limit is None or len(out) < limit):
+            free_slot = next(
+                (i for i, s in enumerate(self.slots) if s is None), None)
+            if free_slot is None:
+                break
+            req, tok, blocks = self.prefilled[0]
+            nb = self._blocks_for(req)
+            need = self._per_shard_need(nb)
+            evictable = (self.prefix_cache.evictable_counts(self.sp)
+                         if self.prefix_cache is not None else [0] * self.sp)
+            if any(self.pool.available(s) + evictable[s] < need[s]
+                   for s in range(self.sp)):
+                break                                       # head-of-line
+            fresh = [(b % self.sp, self._alloc_evicting(b % self.sp))
+                     for b in range(nb)]
+            self.prefilled.popleft()
+            st = SlotState(req=req, slot=free_slot, arrived_step=step)
+            st.pages = fresh
+            for b, (shard, page) in enumerate(st.pages):
+                self.table[free_slot, shard, b // self.sp] = page
+            self.slots[free_slot] = st
+            out.append((st, tok, blocks))
+        return out
 
     def register_prefix(self, st: SlotState) -> None:
         """Offer a freshly prefilled request's full prompt blocks to the

@@ -22,15 +22,24 @@ live request**: evicting a node only drops the cache's reference, and the
 page body survives until the last sharing request finishes
 (``dist_checks.check_gateway_prefix_cow`` proves this on the C=2 mesh).
 
-Eviction is leaf-first LRU: only nodes with no children and no live sharer
-(refcount == 1, the cache's own hold) are candidates, so an interior node
-is never dropped while a descendant could still be matched through it.
+Eviction is leaf-first and cost-aware: only nodes with no children and no
+live sharer (refcount == 1, the cache's own hold) are candidates, so an
+interior node is never dropped while a descendant could still be matched
+through it. Candidates are ranked by the recompute cost a future miss on
+their chain would pay (``cost_fn`` over tokens-in-chain — the engine
+injects `plan.cost.prefill_step_cost`; the default is the token count
+itself, the same ordering for any monotone cost), with the LRU stamp as
+the tie-break, so an expensive deep chain outlives a cheap shallow one
+that happens to be more recent. When a ``connector``
+(`engine.kv_connector.KVConnector`) is attached, every dropped node's
+page is offered to the pinned-host tier first — eviction then demotes KV
+instead of destroying it.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 _HASH_SEED = 0x51ab5eed
 
@@ -59,11 +68,17 @@ class _Node:
 class PrefixCache:
     """Trie of cached full prompt blocks over one engine's page pool."""
 
-    def __init__(self, pool, *, page_size: int, sp: int):
+    def __init__(self, pool, *, page_size: int, sp: int,
+                 cost_fn: Optional[Callable[[int], float]] = None,
+                 connector=None):
         self.pool = pool                # paged_cache.PagePool (shared with
         #                                 the scheduler — same refcounts)
         self.page_size = page_size
         self.sp = sp
+        # cost_fn(chain_tokens) -> relative recompute cost of losing a node
+        # at that chain depth; tokens themselves are the cost-aware default
+        self.cost_fn = cost_fn or float
+        self.connector = connector      # engine.kv_connector.KVConnector
         self.children: Dict[int, _Node] = {}     # root level
         self._clock = 0
         # metrics (token-denominated where it matters for hit rate)
@@ -174,15 +189,27 @@ class PrefixCache:
         self.pool.decref(*node.page)
         self.evicted_pages += 1
 
+    def _chain_tokens(self, node: _Node) -> int:
+        depth = 0
+        cur: Optional[_Node] = node
+        while cur is not None:
+            depth += 1
+            cur = cur.parent
+        return depth * self.page_size
+
     def evict(self, shard: int, need: int) -> int:
-        """Free up to ``need`` pages on ``shard`` by dropping leaf-first LRU
-        nodes nobody else references (refcount 1 == the cache's hold — a
-        block shared with a live request is skipped: dropping it would not
-        free a page, only forfeit future hits). Blocks are round-robin over
-        shards, so the page wanted on ``shard`` may sit mid-chain under
-        leaves on *other* shards: when the target shard has no evictable
-        leaf, the LRU evictable leaf anywhere is dropped to unwind its
-        chain toward one. Returns pages freed on ``shard``."""
+        """Free up to ``need`` pages on ``shard`` by dropping leaf nodes
+        nobody else references (refcount 1 == the cache's hold — a block
+        shared with a live request is skipped: dropping it would not free
+        a page, only forfeit future hits). Victims are the *cheapest to
+        recompute* first (``cost_fn`` over tokens-in-chain, LRU stamp as
+        tie-break). Blocks are round-robin over shards, so the page wanted
+        on ``shard`` may sit mid-chain under leaves on *other* shards:
+        when the target shard has no evictable leaf, the cheapest
+        evictable leaf anywhere is dropped to unwind its chain toward one.
+        With a connector attached the victim's page spills to the host
+        tier before the device page is released. Returns pages freed on
+        ``shard``."""
         freed = 0
         while freed < need:
             victims = [n for n in self._leaves()
@@ -190,7 +217,13 @@ class PrefixCache:
             if not victims:
                 break
             on_shard = [n for n in victims if n.page[0] == shard]
-            victim = min(on_shard or victims, key=lambda n: n.stamp)
+            victim = min(on_shard or victims,
+                         key=lambda n: (self.cost_fn(self._chain_tokens(n)),
+                                        n.stamp))
+            if self.connector is not None:
+                self.connector.spill(
+                    key=victim.key, page=victim.page,
+                    chain_tokens=self._chain_tokens(victim))
             self._drop(victim)
             if victim.page[0] == shard:
                 freed += 1

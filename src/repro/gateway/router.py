@@ -15,6 +15,10 @@ Three signals, in priority order:
   budget), then to the lowest replica index (deterministic routing — the
   serving benchmark replays workloads across cache-on/off phases and needs
   identical placement to compare tokens bit-for-bit).
+
+Disaggregated gateways restrict new requests to the ``eligible`` replica
+indices (the prefill/unified ones) — decode-role replicas only ever see
+KV handed to them via ``Engine.add_prefilled``, never a raw prompt.
 """
 
 from __future__ import annotations
@@ -23,9 +27,12 @@ from typing import Dict, List, Optional, Sequence
 
 
 class Router:
-    def __init__(self, engines: Sequence, *, prefix_aware: bool = True):
+    def __init__(self, engines: Sequence, *, prefix_aware: bool = True,
+                 eligible: Optional[Sequence[int]] = None):
         self.engines = list(engines)
         self.prefix_aware = prefix_aware
+        self.eligible = list(eligible) if eligible is not None \
+            else list(range(len(self.engines)))
         self.affinity: Dict[str, int] = {}
         self.affinity_hits = 0
         self.routed: List[int] = [0] * len(self.engines)
@@ -49,7 +56,7 @@ class Router:
             i = self.affinity[session]
             self.affinity_hits += 1
         else:
-            i = min(range(len(self.engines)),
+            i = min(self.eligible,
                     key=lambda j: (-self.cached_tokens(j, req),
                                    self.load(j), j))
             if session is not None:

@@ -27,6 +27,16 @@ gateway's hit-rate/eviction/routing metrics are printed:
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --smoke --devices 8 --replicas 2 --prefix-cache --requests 8
 
+``--host-tier-bytes N`` adds the pinned-host KV tier under the prefix
+cache (evictions spill, later hits reload — `engine.kv_connector`);
+``--roles prefill,decode`` disaggregates the gateway into one engine per
+role on disjoint submeshes, with finished prompts' KV handed from the
+prefill replica to a decode replica through the connector:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+      --smoke --devices 8 --roles prefill,decode --prefix-cache \
+      --host-tier-bytes 268435456 --requests 8
+
 ``--legacy`` keeps the pre-engine static-batch greedy path (one fixed batch,
 capacity-sized contiguous cache) — with the decode step compiled ONCE before
 the token loop, not per token.
@@ -138,7 +148,7 @@ def _engine_main(args, plan, cfg, registry=None, tracer=None):
     return out
 
 
-def _gateway_main(args, plan, cfg, registry=None, tracer=None):
+def _gateway_main(args, plan, cfg, registry=None, tracer=None, plans=None):
     import numpy as np
 
     from repro.engine import EngineConfig, Request
@@ -150,7 +160,7 @@ def _gateway_main(args, plan, cfg, registry=None, tracer=None):
     gw = Gateway(model, plan,
                  EngineConfig(pages_per_shard=args.pages_per_shard,
                               prefill_chunk=args.prefill_chunk),
-                 registry=registry, tracer=tracer)
+                 registry=registry, tracer=tracer, plans=plans)
     rng = np.random.default_rng(args.seed)
     vocab = cfg.vocab_size
     sys_len = args.system_prompt_len
@@ -176,15 +186,22 @@ def _gateway_main(args, plan, cfg, registry=None, tracer=None):
     for r in reqs:
         print(f"[gateway] {r.uid} (replica {gw._owner[r.uid]}): "
               f"prompt_len={r.prompt_len} -> {out[r.uid]}")
-    stats = gw.metrics_dict()
+    stats = gw.stats()
+    tier = stats.pop("host_tier")
     per = stats.pop("per_replica")
     print("[gateway] metrics: " + ", ".join(
         f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
         for k, v in sorted(stats.items())))
     for i, m in enumerate(per):
-        print(f"[gateway]   replica {i}: tokens={m['tokens_out']} "
+        print(f"[gateway]   replica {i} ({gw.roles[i]}): "
+              f"tokens={m['tokens_out']} "
               f"hit_rate={m['prefix_hit_rate']:.3g} "
               f"occupancy={m['occupancy']:.3g}")
+    if tier["enabled"]:
+        tier.pop("per_replica")
+        print("[gateway] host tier: " + ", ".join(
+            f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in sorted(tier.items())))
     if plan.prefix_cache and sys_len:
         roi = plan_cost.prefix_cache_value(
             cfg, prompt_len=sys_len + args.prompt_len, shared_len=sys_len,
@@ -199,31 +216,57 @@ def _gateway_main(args, plan, cfg, registry=None, tracer=None):
 
 
 def _resolve_plan(args):
-    from repro.configs import registry
-    from repro.plan import ExecutionPlan, make_serve_plan
+    """Returns ``(plan, plans, cfg)`` — ``plans`` is the per-role list in
+    disaggregated mode (``--roles`` or a multi-plan json), else None."""
+    import json
 
-    if args.plan:
-        plan = ExecutionPlan.load(args.plan)
-        print(f"[serve] loaded plan {args.plan}: scheme={plan.scheme} "
-              f"C={plan.c} R={plan.r} kernel={plan.kernel_impl} "
-              f"slots={plan.decode_batch} page={plan.page_size} "
-              f"replicas={plan.replicas} prefix_cache={plan.prefix_cache}")
+    from repro.configs import registry
+    from repro.plan import (ExecutionPlan, make_role_plans, make_serve_plan)
+
+    def _cfg_for(plan):
         if not plan.arch or plan.arch not in registry.ASSIGNED_ARCHS:
             raise SystemExit(
                 f"[serve] plan {args.plan} names unknown arch "
                 f"{plan.arch!r}; known: {sorted(registry.ASSIGNED_ARCHS)}")
         # mesh_kind='local' plans are smoke runs (same convention as
         # launch.train); production plans carry the full config
-        cfg = (registry.get_smoke(plan.arch) if plan.mesh_kind == "local"
-               else registry.get(plan.arch))
-        return plan, cfg
+        return (registry.get_smoke(plan.arch) if plan.mesh_kind == "local"
+                else registry.get(plan.arch))
+
+    if args.plan:
+        rec = json.loads(open(args.plan).read())
+        if "plans" in rec:                      # disaggregated role plans
+            plans = [ExecutionPlan.from_dict(d) for d in rec["plans"]]
+            plan = plans[0]
+            print(f"[serve] loaded {len(plans)} role plans {args.plan}: "
+                  f"roles={[p.role for p in plans]} "
+                  f"host_tier={plan.host_tier_bytes}")
+            return plan, plans, _cfg_for(plan)
+        plan = ExecutionPlan.load(args.plan)
+        print(f"[serve] loaded plan {args.plan}: scheme={plan.scheme} "
+              f"C={plan.c} R={plan.r} kernel={plan.kernel_impl} "
+              f"slots={plan.decode_batch} page={plan.page_size} "
+              f"replicas={plan.replicas} prefix_cache={plan.prefix_cache} "
+              f"host_tier={plan.host_tier_bytes}")
+        return plan, None, _cfg_for(plan)
     import jax
 
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
     # --smoke = forced-host/local mesh; otherwise the production mesh
     # (mesh_kind also encodes smoke-ness for --plan replay, as in
-    # launch.train). With --replicas the plan's n_devices is the
+    # launch.train). With --replicas/--roles the plan's n_devices is the
     # per-replica share of the visible devices.
+    if args.roles:
+        roles = [r.strip() for r in args.roles.split(",") if r.strip()]
+        n_dev = len(jax.devices()) // len(roles)
+        plans = make_role_plans(
+            cfg, roles=roles, n_devices=n_dev, arch=args.arch,
+            data=args.data, c=args.c, decode_batch=args.max_slots,
+            page_size=args.page_size, max_len=args.max_len,
+            mesh_kind="local" if args.smoke else "production",
+            kernel_impl=args.kernel, prefix_cache=bool(args.prefix_cache),
+            host_tier_bytes=args.host_tier_bytes)
+        return plans[0], plans, cfg
     replicas = max(args.replicas, 1)
     n_dev = len(jax.devices()) // replicas
     plan = make_serve_plan(
@@ -231,8 +274,9 @@ def _resolve_plan(args):
         c=args.c, decode_batch=args.max_slots, page_size=args.page_size,
         max_len=args.max_len, mesh_kind="local" if args.smoke
         else "production", kernel_impl=args.kernel,
-        replicas=replicas, prefix_cache=bool(args.prefix_cache))
-    return plan, cfg
+        replicas=replicas, prefix_cache=bool(args.prefix_cache),
+        host_tier_bytes=args.host_tier_bytes)
+    return plan, None, cfg
 
 
 def main(argv=None):
@@ -266,6 +310,15 @@ def main(argv=None):
                     default=False,
                     help="block-hash prefix cache with COW page reuse "
                          "(gateway mode)")
+    ap.add_argument("--host-tier-bytes", type=int, default=0,
+                    help="pinned-host KV tier capacity per engine, bytes "
+                         "(0 = off; prefix-cache evictions spill here and "
+                         "later trie hits reload instead of re-prefilling; "
+                         "needs --prefix-cache)")
+    ap.add_argument("--roles", default=None,
+                    help="comma-separated replica roles for disaggregated "
+                         "serving, e.g. 'prefill,decode' — one engine per "
+                         "role on disjoint submeshes; overrides --replicas")
     ap.add_argument("--system-prompt-len", type=int, default=32,
                     help="shared prompt prefix length in gateway mode "
                          "(0 = fully independent prompts)")
@@ -303,21 +356,38 @@ def main(argv=None):
         import json
 
         rec = json.loads(open(args.plan).read())
-        rec = rec.get("plan", rec)
-        if rec.get("mesh_kind") == "local":
-            args.devices = int(rec["n_devices"]) * int(rec.get("replicas", 1))
+        if "plans" in rec:                      # disaggregated role plans
+            if rec["plans"] and rec["plans"][0].get("mesh_kind") == "local":
+                args.devices = sum(int(d["n_devices"]) for d in rec["plans"])
+        else:
+            rec = rec.get("plan", rec)
+            if rec.get("mesh_kind") == "local":
+                args.devices = \
+                    int(rec["n_devices"]) * int(rec.get("replicas", 1))
     if args.devices:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={args.devices}")
 
-    plan, cfg = _resolve_plan(args)
+    plan, plans, cfg = _resolve_plan(args)
     print(f"[serve] plan: P_sp={plan.sp_size} scheme={plan.scheme} "
           f"C={plan.c} R={plan.r} data={plan.data} "
           f"kernel={plan.kernel_impl} slots={plan.decode_batch} "
           f"page={plan.page_size} capacity={plan.seq_len} "
-          f"replicas={plan.replicas} prefix_cache={plan.prefix_cache}")
+          f"replicas={len(plans) if plans else plan.replicas} "
+          f"roles={[p.role for p in plans] if plans else [plan.role]} "
+          f"prefix_cache={plan.prefix_cache} "
+          f"host_tier={plan.host_tier_bytes}")
     if args.save_plan:
-        path = plan.save(args.save_plan)
+        if plans:
+            import json as _json
+            import pathlib
+
+            path = pathlib.Path(args.save_plan)
+            path.parent.mkdir(parents=True, exist_ok=True)
+            path.write_text(_json.dumps(
+                {"plans": [p.to_dict() for p in plans]}, indent=2))
+        else:
+            path = plan.save(args.save_plan)
         print(f"[serve] plan saved -> {path}")
 
     from repro import obs
@@ -326,9 +396,9 @@ def main(argv=None):
     tracer = obs.Tracer(enabled=bool(args.trace_out))
     if args.legacy:
         out = _legacy_main(args, plan, cfg)
-    elif plan.replicas > 1 or plan.prefix_cache:
+    elif plans or plan.replicas > 1 or plan.prefix_cache:
         out = _gateway_main(args, plan, cfg, registry=registry,
-                            tracer=tracer)
+                            tracer=tracer, plans=plans)
     else:
         out = _engine_main(args, plan, cfg, registry=registry,
                            tracer=tracer)

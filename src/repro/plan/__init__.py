@@ -7,7 +7,8 @@ the ranking with measured steps and persists the winner. See docs/TUNING.md.
 """
 
 from repro.plan import autotune, cost
-from repro.plan.plan import ExecutionPlan, make_plan, make_serve_plan, plan_path
+from repro.plan.plan import (ExecutionPlan, make_plan, make_role_plans,
+                             make_serve_plan, plan_path)
 
-__all__ = ["ExecutionPlan", "make_plan", "make_serve_plan", "plan_path",
-           "cost", "autotune"]
+__all__ = ["ExecutionPlan", "make_plan", "make_role_plans",
+           "make_serve_plan", "plan_path", "cost", "autotune"]

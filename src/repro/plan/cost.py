@@ -473,6 +473,93 @@ def prefix_cache_value(cfg: ModelConfig, *, prompt_len: int,
 
 
 # ---------------------------------------------------------------------------
+# Host-tier spill/reload pricing (the KV-connector decision)
+# ---------------------------------------------------------------------------
+
+def kv_bytes_per_token(cfg: ModelConfig, *, dtype_bytes: int = 2) -> int:
+    """Bytes of K+V one token pins across all attention layers."""
+    n_attn = max(num_attention_layers(cfg), 1)
+    return n_attn * 2 * cfg.num_kv_heads * cfg.head_dim_ * dtype_bytes
+
+
+def kv_transfer_cost(cfg: ModelConfig, *, tokens: int, dtype_bytes: int = 2,
+                     link_bw: Optional[float] = None) -> Dict[str, float]:
+    """Price moving ``tokens`` of KV over the device<->host link.
+
+    The pool is SP-sharded but the host link is per-*host*, so the bytes
+    are not divided by ``sp``: every shard's pages cross the same DMA
+    engine. ``roundtrip_s`` is spill (d2h) plus the eventual reload (h2d)
+    — the full price a host-tier hit pays instead of recompute.
+    """
+    bw = link_bw if link_bw is not None else hw.HOST_LINK_BW
+    total = float(tokens) * kv_bytes_per_token(cfg, dtype_bytes=dtype_bytes)
+    one_way = total / bw
+    return {"bytes": total, "d2h_s": one_way, "h2d_s": one_way,
+            "roundtrip_s": 2.0 * one_way}
+
+
+def spill_decision(cfg: ModelConfig, *, chain_tokens: int, sp: int = 1,
+                   page_size: int = 8, dtype_bytes: int = 2,
+                   link_bw: Optional[float] = None,
+                   cluster: Optional[sch.ClusterModel] = None
+                   ) -> Dict[str, object]:
+    """Should an evicted ``chain_tokens``-token prefix spill to host?
+
+    Compares what a future capacity miss would pay either way: recomputing
+    the chain cold (``prefill_step_cost`` — dense FLOPs linear in tokens,
+    attention quadratic) vs round-tripping its KV bytes over the host link
+    (linear in tokens). Because only recompute has a quadratic term, the
+    decision has a crossover chain length: short cheap chains are faster
+    to re-prefill, long chains are faster to reload
+    (``spill_threshold_tokens`` locates the boundary).
+
+    Returns {'recompute_s', 'transfer_s', 'bytes', 'spill'}.
+    """
+    if chain_tokens <= 0:
+        raise ValueError(f"chain_tokens must be positive, got {chain_tokens}")
+    rec = prefill_step_cost(cfg, prompt_len=chain_tokens, sp=sp,
+                            page_size=page_size, dtype_bytes=dtype_bytes,
+                            cluster=cluster)
+    xfer = kv_transfer_cost(cfg, tokens=chain_tokens,
+                            dtype_bytes=dtype_bytes, link_bw=link_bw)
+    return {"recompute_s": rec["total_s"],
+            "transfer_s": xfer["roundtrip_s"],
+            "bytes": xfer["bytes"],
+            "spill": xfer["roundtrip_s"] < rec["total_s"]}
+
+
+def spill_threshold_tokens(cfg: ModelConfig, *, sp: int = 1,
+                           page_size: int = 8, max_tokens: int = 1 << 20,
+                           dtype_bytes: int = 2,
+                           link_bw: Optional[float] = None,
+                           cluster: Optional[sch.ClusterModel] = None
+                           ) -> Optional[int]:
+    """Smallest page-multiple chain length for which spilling beats
+    recompute, or None if no chain up to ``max_tokens`` does.
+
+    recompute_s - transfer_s = a*t^2 + b*t with a > 0 (the attention
+    term), so the decision is monotone in t: binary search the first
+    page boundary where it flips.
+    """
+    def spills(tokens: int) -> bool:
+        return bool(spill_decision(
+            cfg, chain_tokens=tokens, sp=sp, page_size=page_size,
+            dtype_bytes=dtype_bytes, link_bw=link_bw,
+            cluster=cluster)["spill"])
+
+    lo, hi = 1, max_tokens // page_size          # in blocks
+    if hi < 1 or not spills(hi * page_size):
+        return None
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if spills(mid * page_size):
+            hi = mid
+        else:
+            lo = mid + 1
+    return lo * page_size
+
+
+# ---------------------------------------------------------------------------
 # Microbatch selection (gradient accumulation)
 # ---------------------------------------------------------------------------
 

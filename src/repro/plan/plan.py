@@ -21,7 +21,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import pathlib
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.dist.meshes import PLACEMENTS
@@ -65,6 +65,10 @@ class ExecutionPlan:
     replicas: int = 1              # gateway engine replicas (n_devices is
     #                                the per-replica device count)
     prefix_cache: bool = False     # block-hash prefix cache (repro.gateway)
+    role: str = "unified"          # 'unified' | 'prefill' | 'decode' —
+    #                                disaggregated serving (repro.gateway)
+    host_tier_bytes: int = 0       # pinned-host KV tier capacity per engine
+    #                                (0 = tier off; needs prefix_cache)
 
     # ---- derived sizes ---------------------------------------------------
     @property
@@ -137,6 +141,21 @@ class ExecutionPlan:
                 "replicas/prefix_cache are serving-face knobs — only valid "
                 "on kind='decode' plans with decode_batch/page_size set "
                 "(build them with plan.make_serve_plan)")
+        if self.role not in ("unified", "prefill", "decode"):
+            raise ValueError(
+                f"role must be 'unified' | 'prefill' | 'decode', "
+                f"got {self.role!r}")
+        if self.role != "unified" and not self.page_size:
+            raise ValueError(
+                "role is a serving-face knob — only valid on plans with "
+                "decode_batch/page_size set (plan.make_serve_plan)")
+        if self.host_tier_bytes < 0:
+            raise ValueError("host_tier_bytes must be >= 0")
+        if self.host_tier_bytes and not self.prefix_cache:
+            raise ValueError(
+                "host_tier_bytes > 0 needs prefix_cache=True: the host "
+                "tier is fed by prefix-cache eviction (spilled chains are "
+                "rediscovered through the trie hash walk)")
         if self.kind == "train":
             if self.global_batch % self.dp_size != 0:
                 raise ValueError(
@@ -316,6 +335,7 @@ def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
                     block_impl: Optional[str] = None,
                     sharding_rules: str = "default",
                     replicas: int = 1, prefix_cache: bool = False,
+                    role: str = "unified", host_tier_bytes: int = 0,
                     cluster=None) -> ExecutionPlan:
     """Resolve one *serving* run (the engine's mesh + kernels) into a plan.
 
@@ -356,4 +376,27 @@ def make_serve_plan(cfg: ModelConfig, *, arch: Optional[str] = None,
                      cluster=cluster)
     return dataclasses.replace(base, decode_batch=decode_batch,
                                page_size=page_size, replicas=replicas,
-                               prefix_cache=prefix_cache)
+                               prefix_cache=prefix_cache, role=role,
+                               host_tier_bytes=host_tier_bytes)
+
+
+def make_role_plans(cfg: ModelConfig, *, roles: Sequence[str],
+                    n_devices: int, **kw) -> List[ExecutionPlan]:
+    """Per-replica plans for a disaggregated gateway.
+
+    ``roles`` is one entry per replica (e.g. ``['prefill', 'decode']``);
+    ``n_devices`` is the per-replica device count, as in the ``replicas``
+    face of `make_serve_plan`. Every other knob is shared across roles so
+    the engines stay numerically interchangeable — same kernels, same page
+    size, same rounded capacity — which is what makes the prefill→decode
+    KV handoff bit-exact. Returns one plan per role with ``replicas=1``
+    (the gateway composes them; a mixed-role gateway cannot be described
+    by a single plan's ``replicas`` count).
+    """
+    if not roles:
+        raise ValueError("roles must name at least one replica")
+    kw.pop("replicas", None)
+    kw.pop("role", None)
+    return [make_serve_plan(cfg, n_devices=n_devices, replicas=1,
+                            role=role, **kw)
+            for role in roles]

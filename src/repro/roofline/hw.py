@@ -6,3 +6,4 @@ ICI_BW_PER_LINK = 50e9         # bytes/s per ICI link (given constant)
 CHIPS_PER_POD = 256
 VMEM_BYTES = 128 * 2**20       # ~128 MiB VMEM per chip
 HBM_BYTES = 16 * 2**30         # 16 GiB HBM per chip
+HOST_LINK_BW = 32e9            # bytes/s device<->pinned-host DMA (PCIe-class)

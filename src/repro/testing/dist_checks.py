@@ -830,6 +830,60 @@ def check_gateway_prefix_cow(arch="h2o-danube-1.8b"):
     assert gp.engines[0].prefix_cache.evicted_pages > 0, \
         "pool pressure should have evicted cache-only pages"
 
+    # --- host tier: the same kind of pool-pressure eviction, but with a
+    # pinned-host tier attached the evicted family prefix is *demoted*
+    # (spilled) instead of destroyed — a re-arrival reloads its KV from
+    # host into fresh pool pages and the stream stays bit-identical to a
+    # big-pool serve that never evicted anything
+    rng = np.random.default_rng(17)
+    fam = rng.integers(0, vocab, 16).tolist()
+    first = Request("h0", fam + rng.integers(0, vocab, 3).tolist(), 3,
+                    seed=21)
+    # deep filler chains (24 tokens > the 16-token family) so cost-aware
+    # eviction unwinds the *family* chain, spilling it block by block
+    evictors = [Request(f"e{i}", rng.integers(0, vocab, 24).tolist(), 1,
+                        seed=30 + i) for i in range(2)]
+    again = Request("h1", fam + rng.integers(0, vocab, 5).tolist(), 3,
+                    seed=22)
+
+    def serve_pressure(gw):
+        out = {}
+        gw.add_request(first)
+        out.update(gw.run())                      # family registered
+        for r in evictors:
+            gw.add_request(r)
+            out.update(gw.run())                  # family evicted/spilled
+        gw.add_request(again)
+        out.update(gw.run())                      # re-arrival: host reload
+        return out
+
+    ref_out = serve_pressure(build_gateway(        # 16 pages/shard: roomy,
+        arch, smoke=True, c=2, data=1, replicas=1,  # nothing ever evicts
+        prefix_cache=True, eng=eng_cfg))
+    tiny = EngineConfig(max_slots=2, page_size=4, pages_per_shard=2,
+                        max_len=64)
+    gwt = build_gateway(arch, smoke=True, c=2, data=1, replicas=1,
+                        prefix_cache=True, host_tier_bytes=64 << 20,
+                        eng=tiny)
+    tier_out = serve_pressure(gwt)
+    assert tier_out == ref_out, (
+        f"host-tier reload diverged from the never-evicted serve:\n"
+        f"  ref:  {ref_out}\n  tier: {tier_out}")
+    tier = gwt.stats()["host_tier"]
+    assert tier["spill_pages"] >= 4, tier         # the 4 family blocks
+    assert tier["reload_pages"] >= 4, tier
+    assert tier["hit_tokens"] >= 16 and tier["hit_rate"] > 0, tier
+    # both transfer islands (read + write) compiled exactly once
+    assert gwt.engines[0].transfer_xla_compiles() <= 2, \
+        "transfer bucket recompiled"
+    # same pressure without the tier: same tokens, but the re-arrival pays
+    # full recompute (no host hits) — the tier's win is the avoided prefill
+    gwo = build_gateway(arch, smoke=True, c=2, data=1, replicas=1,
+                        prefix_cache=True, eng=tiny)
+    off_out = serve_pressure(gwo)
+    assert off_out == ref_out, "tier-off pressure serve diverged"
+    assert gwo.stats()["host_tier"]["hit_tokens"] == 0
+
 
 def check_gateway_replicas(arch="h2o-danube-1.8b"):
     """Acceptance (multi-replica gateway): 2 engine replicas on disjoint
@@ -885,6 +939,75 @@ def check_gateway_replicas(arch="h2o-danube-1.8b"):
         solo = cold.run()
         assert solo[uid] == out[uid], (
             f"{uid}: gateway {out[uid]} != solo cold {solo[uid]}")
+
+
+def check_gateway_disagg(arch="h2o-danube-1.8b"):
+    """Acceptance (disaggregated prefill/decode): one prefill-role and one
+    decode-role replica on disjoint 4-device C=2 submeshes. Prompts enter
+    the prefill replica only, run prefill + the first sampled token, then
+    the prompt KV hands off through the connector (device -> host ->
+    device) and decode resumes on the decode replica — every stream
+    bit-identical to a unified gateway on an identical 4-device mesh, and
+    the decode replica never prefills a raw prompt."""
+    from repro.configs import registry as arch_registry
+    from repro.engine import EngineConfig, Request
+    from repro.gateway import build_gateway
+    from repro.plan import make_serve_plan
+
+    eng_cfg = EngineConfig(max_slots=2, page_size=4, pages_per_shard=16,
+                           max_len=64)
+    gw = build_gateway(arch, smoke=True, c=2, data=1,
+                       roles=["prefill", "decode"], prefix_cache=True,
+                       eng=eng_cfg)
+    assert gw.roles == ["prefill", "decode"]
+    assert all(p.n_devices == 4 and p.c == 2 for p in gw.plans)
+    assert set(gw.engines[0].mesh.devices.ravel()).isdisjoint(
+        gw.engines[1].mesh.devices.ravel())
+
+    rng = np.random.default_rng(7)
+    vocab = gw.cfg.vocab_size
+    reqs = [
+        Request("g", rng.integers(0, vocab, 11).tolist(), 4, seed=1),
+        Request("s", rng.integers(0, vocab, 17).tolist(), 5,
+                temperature=0.8, top_k=8, top_p=0.9, seed=3),
+        Request("one", rng.integers(0, vocab, 5).tolist(), 1, seed=4),
+        Request("g2", rng.integers(0, vocab, 6).tolist(), 3, seed=5),
+    ]
+    owners = [gw.add_request(r) for r in reqs]
+    assert owners == [0] * 4, "new requests must enter the prefill replica"
+    out = gw.run()
+    assert all(len(out[r.uid]) == r.max_new_tokens for r in reqs)
+    # 'one' finished inside its prefill (budget 1): no handoff for it
+    assert gw.handoffs == 3, gw.handoffs
+    tier = gw.stats()["host_tier"]
+    assert tier["handoff_out_pages"] == tier["handoff_in_pages"] > 0, tier
+    assert gw.engines[1].metrics.prefills == 0, \
+        "decode replica must never see a raw prompt"
+    assert gw.engines[1].metrics.decode_steps > 0
+
+    # unified baseline on an identical 4-device C=2 mesh
+    cfg = arch_registry.get_smoke(arch)
+    uplan = make_serve_plan(cfg, arch=arch, n_devices=4, c=2,
+                            decode_batch=2, page_size=4, max_len=64,
+                            mesh_kind="local", prefix_cache=True)
+    uni = build_gateway(arch, smoke=True, eng=eng_cfg, plan=uplan)
+    for r in reqs:
+        uni.add_request(r)
+    ref = uni.run()
+    assert out == ref, (
+        f"disaggregated streams diverged from the unified gateway:\n"
+        f"  unified: {ref}\n  disagg:  {out}")
+
+    # replay on the warm disaggregated gateway: same tokens, no recompiles
+    compiles = [(e.metrics.prefill_compiles, e.metrics.decode_compiles,
+                 e.transfer_xla_compiles()) for e in gw.engines]
+    gw.reset()
+    for r in reqs:
+        gw.add_request(r)
+    assert gw.run() == out, "disagg replay diverged"
+    assert [(e.metrics.prefill_compiles, e.metrics.decode_compiles,
+             e.transfer_xla_compiles()) for e in gw.engines] == compiles, \
+        "disaggregated gateway recompiled on replay"
 
 
 def check_chunked_prefill_dist(arch="h2o-danube-1.8b"):
@@ -958,6 +1081,7 @@ CHECKS.update({
     "engine_paged_kernel": check_engine_paged_kernel,
     "gateway_prefix_cow": check_gateway_prefix_cow,
     "gateway_replicas": check_gateway_replicas,
+    "gateway_disagg": check_gateway_disagg,
     "chunked_prefill_dist": check_chunked_prefill_dist,
 })
 

@@ -1,0 +1,437 @@
+"""Unit tests for the tiered KV store and disaggregated-serving plumbing:
+HostTier LRU semantics, KVConnector spill/flush/reload/handoff against a
+fake numpy "pool" (no devices), cost-aware prefix-cache eviction, host-hit
+admission accounting, the spill-vs-recompute cost crossover, role-plan
+validation, and eligible-restricted routing."""
+
+import numpy as np
+import pytest
+
+from repro.configs import registry as arch_registry
+from repro.engine import Request, Scheduler
+from repro.engine.kv_connector import HostTier, KVConnector, _HostPage
+from repro.engine.paged_cache import PagePool
+from repro.gateway import PrefixCache, Router, block_hashes
+from repro.gateway.gateway import Gateway
+from repro.plan import ExecutionPlan, cost, make_role_plans, make_serve_plan
+
+ARCH = "h2o-danube-1.8b"
+
+
+# ---------------------------------------------------------------------------
+# HostTier: committed-page LRU store (no devices)
+# ---------------------------------------------------------------------------
+
+def _hp(key, tokens=4):
+    return _HostPage(key=key, chain_tokens=tokens, data=np.zeros(1))
+
+
+def test_host_tier_capacity_lru():
+    tier = HostTier(capacity_bytes=2 * 64, page_bytes=64)
+    assert tier.capacity_pages == 2
+    tier.put(_hp(1))
+    tier.put(_hp(2))
+    tier.get(1)                          # touch: 1 is now most recent
+    dropped = tier.put(_hp(3))           # over capacity: LRU (2) goes
+    assert dropped == 1 and tier.evicted_pages == 1
+    assert tier.has(1) and tier.has(3) and not tier.has(2)
+    assert tier.bytes_resident == 2 * 64
+
+
+def test_host_tier_has_is_pure():
+    tier = HostTier(capacity_bytes=2 * 64, page_bytes=64)
+    tier.put(_hp(1))
+    tier.put(_hp(2))
+    tier.has(1)                          # probe must NOT touch LRU order
+    assert tier.put(_hp(3)) == 1
+    assert not tier.has(1)               # 1 stayed LRU and was evicted
+
+
+def test_host_tier_put_dedupes():
+    tier = HostTier(capacity_bytes=4 * 64, page_bytes=64)
+    tier.put(_hp(1))
+    assert tier.put(_hp(1)) == 0
+    assert len(tier) == 1
+
+
+def test_host_tier_rejects_bad_page_bytes():
+    with pytest.raises(ValueError, match="page_bytes"):
+        HostTier(capacity_bytes=64, page_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# KVConnector against a fake numpy pool (the two transfer islands are
+# plain ndarray gathers/scatters — same shapes, no jit, no devices)
+# ---------------------------------------------------------------------------
+
+class _FakePool:
+    """Stand-in for the engine's transfer islands: one (n_per, pages, ps,
+    Hkv, hd) array; read gathers a bucket, write scatters one back."""
+
+    def __init__(self, n_pages=8, ps=4, hkv=2, hd=3):
+        self.arr = np.arange(n_pages * ps * hkv * hd, dtype=np.float32) \
+            .reshape(1, n_pages, ps, hkv, hd)
+
+    def read(self, idx):
+        return self.arr[:, np.clip(idx, 0, None)].copy()
+
+    def write(self, idx, data):
+        for j, g in enumerate(np.asarray(idx)):
+            if g >= 0:
+                self.arr[:, g] = data[:, j]
+
+
+def _connector(fake, capacity_pages=8, spill_fn=None):
+    page_bytes = fake.arr[:, 0].nbytes
+    return KVConnector(read_fn=fake.read, write_fn=fake.write, bucket=2,
+                       page_size=4, pages_per_shard=fake.arr.shape[1],
+                       page_bytes=page_bytes,
+                       capacity_bytes=capacity_pages * page_bytes,
+                       spill_fn=spill_fn)
+
+
+def test_torn_spill_not_hittable_until_flush():
+    fake = _FakePool()
+    conn = _connector(fake)
+    assert conn.spill(key=11, page=(0, 2), chain_tokens=4)
+    assert not conn.has(11)              # staged only: a torn spill can
+    #                                      never satisfy a lookup
+    assert conn.stats()["staged_pages"] == 1
+    assert conn.flush() == 1
+    assert conn.has(11)
+    np.testing.assert_array_equal(conn.tier.get(11).data, fake.arr[:, 2])
+    assert conn.stats()["spill_pages"] == 1
+
+
+def test_spill_captures_value_before_page_reuse():
+    fake = _FakePool()
+    conn = _connector(fake)
+    snapshot = fake.arr[:, 2].copy()
+    conn.spill(key=11, page=(0, 2), chain_tokens=4)
+    fake.arr[:, 2] = -1.0                # page recycled before the flush
+    conn.flush()
+    np.testing.assert_array_equal(conn.tier.get(11).data, snapshot)
+
+
+def test_spill_dedupe_staged_and_committed():
+    fake = _FakePool()
+    conn = _connector(fake)
+    assert conn.spill(key=11, page=(0, 2), chain_tokens=4)
+    assert not conn.spill(key=11, page=(0, 2), chain_tokens=4)  # staged dup
+    conn.flush()
+    assert not conn.spill(key=11, page=(0, 3), chain_tokens=4)  # committed
+    assert conn.stats()["spill_pages"] == 1
+
+
+def test_spill_fn_gates_only_under_pressure():
+    fake = _FakePool()
+    gate = {"ok": False}
+    conn = _connector(fake, capacity_pages=1,
+                      spill_fn=lambda tokens: gate["ok"])
+    # free capacity always admits, even with a refusing cost model
+    assert conn.spill(key=1, page=(0, 0), chain_tokens=4)
+    conn.flush()
+    # at capacity the cost model decides
+    assert not conn.spill(key=2, page=(0, 1), chain_tokens=4)
+    assert conn.stats()["spills_skipped"] == 1
+    gate["ok"] = True
+    assert conn.spill(key=3, page=(0, 2), chain_tokens=8)
+    conn.flush()                         # displaces the LRU committed page
+    assert conn.stats()["host_evicted_pages"] == 1
+    assert conn.has(3) and not conn.has(1)
+
+
+def test_disabled_connector_never_spills():
+    conn = _connector(_FakePool(), capacity_pages=0)
+    assert not conn.enabled
+    assert not conn.spill(key=1, page=(0, 0), chain_tokens=4)
+
+
+def test_reload_roundtrip_and_missing_key():
+    fake = _FakePool()
+    conn = _connector(fake)
+    want = {11: fake.arr[:, 1].copy(), 12: fake.arr[:, 2].copy(),
+            13: fake.arr[:, 3].copy()}
+    for key, page in ((11, 1), (12, 2), (13, 3)):
+        conn.spill(key=key, page=(0, page), chain_tokens=4)
+    conn.flush()
+    fake.arr[:] = 0.0                    # device pages recycled
+    # reload into fresh pages 5, 6, 7 — spans two transfer buckets
+    conn.reload([(11, (0, 5)), (12, (0, 6)), (13, (0, 7))])
+    for key, page in ((11, 5), (12, 6), (13, 7)):
+        np.testing.assert_array_equal(fake.arr[:, page], want[key])
+    assert conn.stats()["reload_pages"] == 3
+    assert conn.has(11)                  # entries stay resident after reload
+    with pytest.raises(RuntimeError, match="missing chain hash"):
+        conn.reload([(999, (0, 4))])
+
+
+def test_export_inject_handoff_between_pools():
+    src, dst = _FakePool(), _FakePool()
+    dst.arr[:] = 0.0
+    a = _connector(src, capacity_pages=0)     # handoff works with tier off
+    b = _connector(dst, capacity_pages=0)
+    blocks = a.export([(0, 1), (0, 2), (0, 3)])
+    assert len(blocks) == 3
+    b.inject([(0, 4), (0, 5), (0, 6)], blocks)
+    for s, d in ((1, 4), (2, 5), (3, 6)):
+        np.testing.assert_array_equal(dst.arr[:, d], src.arr[:, s])
+    assert a.stats()["handoff_out_pages"] == 3
+    assert b.stats()["handoff_in_pages"] == 3
+
+
+def test_connector_reset_drops_everything():
+    fake = _FakePool()
+    conn = _connector(fake)
+    conn.spill(key=1, page=(0, 0), chain_tokens=4)
+    conn.flush()
+    conn.spill(key=2, page=(0, 1), chain_tokens=4)   # left staged
+    conn.note_probe(2, 1)
+    conn.reset()
+    s = conn.stats()
+    assert s["resident_pages"] == 0 and s["staged_pages"] == 0
+    assert s["spill_pages"] == 0 and s["hit_tokens"] == 0
+    assert conn.hit_rate == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware prefix-cache eviction (satellite: works with the tier off)
+# ---------------------------------------------------------------------------
+
+def _insert_chain(cache, pool, tokens):
+    hashes = block_hashes(tokens, cache.page_size)
+    pages = [(b % cache.sp, pool.alloc(b % cache.sp))
+             for b in range(len(hashes))]
+    cache.insert(hashes, pages)
+    for s, p in pages:
+        pool.decref(s, p)                # cache-only holds remain
+    return hashes
+
+
+def test_evict_cheap_shallow_before_expensive_deep():
+    pool = PagePool(sp=1, pages_per_shard=8)
+    cache = PrefixCache(pool, page_size=4, sp=1)
+    deep = _insert_chain(cache, pool, list(range(12)))       # 3 blocks, old
+    shallow = _insert_chain(cache, pool, [100, 101, 102, 103])  # 1, recent
+    assert cache.evict(0, 1) == 1
+    # the recent-but-cheap chain went; the deep expensive one survived
+    assert cache.match_len(shallow) == 0
+    assert cache.match_len(deep) == 3
+
+
+def test_evict_quadratic_cost_fn_same_ordering():
+    pool = PagePool(sp=1, pages_per_shard=8)
+    cache = PrefixCache(pool, page_size=4, sp=1,
+                        cost_fn=lambda t: float(t) ** 2)
+    deep = _insert_chain(cache, pool, list(range(12)))
+    shallow = _insert_chain(cache, pool, [100, 101, 102, 103])
+    cache.evict(0, 1)
+    assert cache.match_len(shallow) == 0 and cache.match_len(deep) == 3
+
+
+def test_evict_lru_breaks_cost_ties():
+    pool = PagePool(sp=1, pages_per_shard=8)
+    cache = PrefixCache(pool, page_size=4, sp=1)
+    old = _insert_chain(cache, pool, [1, 2, 3, 4])
+    new = _insert_chain(cache, pool, [5, 6, 7, 8])
+    cache.evict(0, 1)
+    assert cache.match_len(old) == 0 and cache.match_len(new) == 1
+
+
+def test_evict_offers_victim_to_connector_before_drop():
+    pool = PagePool(sp=1, pages_per_shard=8)
+
+    class _Rec:
+        calls = []
+
+        def spill(self, *, key, page, chain_tokens):
+            # the pool page must still be held when the spill is staged
+            _Rec.calls.append((key, tuple(page), chain_tokens,
+                               pool.refs[tuple(page)]))
+            return True
+
+    cache = PrefixCache(pool, page_size=4, sp=1, connector=_Rec())
+    hashes = _insert_chain(cache, pool, list(range(8)))
+    cache.evict(0, 2)
+    assert [(c[0], c[2]) for c in _Rec.calls] == \
+        [(hashes[1], 8), (hashes[0], 4)]          # leaf-first, chain depth
+    assert all(c[3] == 1 for c in _Rec.calls)     # spilled before release
+
+
+# ---------------------------------------------------------------------------
+# Scheduler admission with host-tier hits
+# ---------------------------------------------------------------------------
+
+class _StubConnector:
+    enabled = True
+
+    def __init__(self, keys):
+        self.keys = set(keys)
+        self.probes = []
+
+    def has(self, key):
+        return key in self.keys
+
+    def note_probe(self, lookup_blocks, hit_blocks):
+        self.probes.append((lookup_blocks, hit_blocks))
+
+
+def test_admit_counts_host_hits_and_records_reloads():
+    sched = Scheduler(max_slots=2, page_size=4, sp=1, pages_per_shard=8,
+                      max_len=64)
+    sched.prefix_cache = PrefixCache(sched.pool, page_size=4, sp=1)
+    tokens = list(range(13))             # 3 full blocks + tail, usable=3
+    hashes = block_hashes(tokens, 4)
+    conn = _StubConnector(hashes[:2])    # blocks 0,1 live on host
+    sched.connector = conn
+    sched.enqueue(Request("r", tokens, 2))
+    st, = sched.admit(0)
+    assert st.cached_len == 8 and st.host_len == 8
+    assert st.prefill_pos == 8           # suffix prefill starts past hits
+    # host hits still consumed fresh pool pages (cheap, not free)
+    assert len(st.pages) == 4 and sched.pool.pages_in_use() == 4
+    assert [h for h, _ in st.pending_reload] == hashes[:2]
+    assert [p for _, p in st.pending_reload] == st.pages[:2]
+    assert conn.probes == [(3, 2)]
+
+
+def test_blocked_admission_is_side_effect_free_with_host_hits():
+    sched = Scheduler(max_slots=2, page_size=4, sp=1, pages_per_shard=4,
+                      max_len=64)
+    sched.prefix_cache = PrefixCache(sched.pool, page_size=4, sp=1)
+    for _ in range(2):                   # live sequences pin half the pool
+        sched.pool.alloc(0)
+    tokens = list(range(13))             # needs 4 pages; only 2 are free
+    conn = _StubConnector(block_hashes(tokens, 4))
+    sched.connector = conn
+    sched.enqueue(Request("r", tokens, 2))
+    assert sched.admit(0) == []
+    assert conn.probes == []             # no hit-rate skew
+    assert sched.pool.pages_in_use() == 2
+    assert len(sched.queue) == 1
+
+
+# ---------------------------------------------------------------------------
+# Spill-vs-recompute pricing (plan.cost)
+# ---------------------------------------------------------------------------
+
+def _cfg():
+    return arch_registry.get_smoke(ARCH)
+
+
+def test_spill_decision_fields_and_validation():
+    cfg = _cfg()
+    d = cost.spill_decision(cfg, chain_tokens=64, page_size=4)
+    assert d["bytes"] == 64 * cost.kv_bytes_per_token(cfg)
+    assert d["spill"] == (d["transfer_s"] < d["recompute_s"])
+    with pytest.raises(ValueError, match="chain_tokens"):
+        cost.spill_decision(cfg, chain_tokens=0)
+
+
+def test_spill_threshold_matches_brute_force():
+    cfg = _cfg()
+    ps, max_blocks = 4, 256
+
+    def brute(link_bw):
+        for b in range(1, max_blocks + 1):
+            if cost.spill_decision(cfg, chain_tokens=b * ps, page_size=ps,
+                                   link_bw=link_bw)["spill"]:
+                return b * ps
+        return None
+
+    for link_bw in (1e3, 1e6, 1e9, 1e12, 1e15):
+        th = cost.spill_threshold_tokens(cfg, page_size=ps,
+                                         max_tokens=max_blocks * ps,
+                                         link_bw=link_bw)
+        assert th == brute(link_bw), f"link_bw={link_bw}"
+    # a faster link can only lower the crossover (monotone in bandwidth)
+    ths = [cost.spill_threshold_tokens(cfg, page_size=ps,
+                                       max_tokens=max_blocks * ps,
+                                       link_bw=bw) or (max_blocks + 1) * ps
+           for bw in (1e6, 1e9, 1e12, 1e15)]
+    assert ths == sorted(ths, reverse=True)
+
+
+def test_transfer_cost_linear_not_sp_divided():
+    cfg = _cfg()
+    a = cost.kv_transfer_cost(cfg, tokens=100)
+    b = cost.kv_transfer_cost(cfg, tokens=200)
+    assert b["bytes"] == 2 * a["bytes"]
+    assert b["roundtrip_s"] == pytest.approx(2 * a["roundtrip_s"])
+    assert a["roundtrip_s"] == pytest.approx(a["d2h_s"] + a["h2d_s"])
+
+
+# ---------------------------------------------------------------------------
+# Role plans + gateway validation (no engines are ever built)
+# ---------------------------------------------------------------------------
+
+def _role_plan(role, **kw):
+    args = dict(arch=ARCH, n_devices=1, decode_batch=2, page_size=4,
+                max_len=64, mesh_kind="local", prefix_cache=True)
+    args.update(kw)
+    return make_serve_plan(_cfg(), role=role, **args)
+
+
+def test_role_plan_roundtrip():
+    plan = _role_plan("prefill", host_tier_bytes=1 << 20)
+    back = ExecutionPlan.from_dict(plan.to_dict())
+    assert back.role == "prefill" and back.host_tier_bytes == 1 << 20
+
+
+def test_role_plan_validation():
+    with pytest.raises(ValueError, match="role"):
+        _role_plan("bogus")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        _role_plan("unified", prefix_cache=False, host_tier_bytes=1)
+
+
+def test_make_role_plans():
+    plans = make_role_plans(_cfg(), roles=["prefill", "decode"], n_devices=1,
+                            arch=ARCH, decode_batch=2, page_size=4,
+                            max_len=64, mesh_kind="local", prefix_cache=True)
+    assert [p.role for p in plans] == ["prefill", "decode"]
+    assert all(p.n_devices == 1 and p.replicas == 1 for p in plans)
+    with pytest.raises(ValueError, match="roles"):
+        make_role_plans(_cfg(), roles=[], n_devices=1, arch=ARCH)
+
+
+def test_gateway_rejects_bad_role_topologies():
+    prefill, decode = _role_plan("prefill"), _role_plan("decode")
+    # model=None proves validation fires before any engine is built
+    with pytest.raises(ValueError, match="unified"):
+        Gateway(None, prefill)                    # single plan, wrong role
+    with pytest.raises(ValueError, match="admit"):
+        Gateway(None, None, plans=[decode])       # no entry replica
+    with pytest.raises(ValueError, match="decode"):
+        Gateway(None, None, plans=[prefill])      # nowhere to hand off
+    with pytest.raises(ValueError, match="agree"):
+        Gateway(None, None,
+                plans=[prefill, _role_plan("decode", page_size=8)])
+
+
+# ---------------------------------------------------------------------------
+# Router: eligible-restricted routing
+# ---------------------------------------------------------------------------
+
+class _StubSched:
+    def __init__(self, load):
+        self.queue = [Request("q", [0] * load, 1)] if load else []
+
+    def active(self):
+        return []
+
+
+class _StubEngine:
+    prefix_cache = None
+
+    def __init__(self, load):
+        self.scheduler = _StubSched(load)
+
+
+def test_router_respects_eligible():
+    engines = [_StubEngine(5), _StubEngine(0)]
+    r = Router(engines, prefix_aware=False, eligible=[0])
+    req = Request("a", [1, 2, 3], 2)
+    assert r.route(req) == 0             # engine 1 is idle but ineligible
+    r2 = Router(engines, prefix_aware=False)
+    assert r2.route(req) == 1            # default: least-loaded wins

@@ -36,7 +36,7 @@ BATCHES = {
         "paged_decode_dist", "engine_paged_kernel", "chunked_prefill_dist",
     ],
     "gateway_serving": [
-        "gateway_prefix_cow", "gateway_replicas",
+        "gateway_prefix_cow", "gateway_replicas", "gateway_disagg",
     ],
     "plan_and_microbatch": [
         "microbatch_equiv", "scheme_crosscheck", "ulysses_rejected",

@@ -591,6 +591,247 @@ def run_chunked_phase(args):
     return stats
 
 
+def build_frontend_workload(vocab, args, n):
+    """Deterministic mixed greedy/sampled request kwargs for the
+    frontend phases (orchestrator submit signature)."""
+    import numpy as np
+
+    rng = np.random.default_rng(args.seed + 99)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(args.min_prompt, args.max_prompt + 1))
+        gen = int(rng.integers(args.min_gen, args.max_gen + 1))
+        t, k, p = (0.8, 32, 0.95) if args.sampled and i % 2 else \
+            (0.0, 0, 1.0)
+        reqs.append(dict(prompt=rng.integers(0, vocab, plen).tolist(),
+                         max_new_tokens=gen, temperature=t, top_k=k,
+                         top_p=p, seed=args.seed + i))
+    return reqs
+
+
+def drive_orchestrator(orch, reqs, arrivals, *, cls=None,
+                       max_steps=100_000):
+    """Feed orchestrator submissions at their arrival steps and drive to
+    drain. Returns (rids, wall_s, steps)."""
+    pending = sorted(zip(arrivals, range(len(reqs))))
+    rids = []
+    step = 0
+    t0 = time.monotonic()
+    while pending or not orch.idle():
+        while pending and pending[0][0] <= step:
+            _, i = pending.pop(0)
+            kw = dict(reqs[i])
+            if cls is not None:
+                kw["cls"] = cls
+            rid = orch.submit(kw.pop("prompt"), kw.pop("max_new_tokens"),
+                              **kw)
+            assert isinstance(rid, int), f"frontend rejected: {rid}"
+            rids.append(rid)
+        orch.step()
+        step += 1
+        if step > max_steps:
+            raise RuntimeError("frontend phase did not drain")
+    return rids, time.monotonic() - t0, step
+
+
+def _point_stats(orch, rids, wall_s):
+    import numpy as np
+
+    toks = sum(len(orch.streams[r].tokens) for r in rids)
+    ttfts = [orch.streams[r].first_token_t - orch.streams[r].submitted_t
+             for r in rids if orch.streams[r].first_token_t is not None]
+    return {
+        "requests": len(rids), "tokens": toks, "wall_s": wall_s,
+        "tokens_per_s": toks / max(wall_s, 1e-9),
+        "ttft_p50_s": float(np.quantile(ttfts, 0.5)) if ttfts else None,
+        "ttft_p99_s": float(np.quantile(ttfts, 0.99)) if ttfts else None,
+    }
+
+
+def run_frontend_phase(args):
+    """Process-separated frontend (``repro.frontend``): 2 worker
+    processes x 1 device vs 1 worker process x 2 devices — equal total
+    devices, so any aggregate-tokens/s edge is genuine cross-process
+    overlap of engine steps. Streamed tokens are bit-compared against an
+    in-process 2-replica ``repro.gateway`` baseline built from the same
+    per-replica plan. A Poisson rate sweep on the 2-process deployment
+    then finds the knee: the lowest offered rate whose saturated
+    tokens/s is within 10% of the best measured."""
+    from repro.configs import registry as arch_registry
+    from repro.engine import EngineConfig, Request
+    from repro.frontend.orchestrator import Orchestrator
+    from repro.frontend.protocol import make_worker_spec
+    from repro.frontend.worker import ProcReplica
+    from repro.gateway import build_gateway
+    from repro.plan import make_serve_plan
+
+    import numpy as np
+
+    cfg = (arch_registry.get_smoke(args.arch) if args.smoke
+           else arch_registry.get(args.arch))
+    eng = EngineConfig(max_slots=args.max_slots, page_size=args.page_size,
+                       pages_per_shard=args.pages_per_shard,
+                       max_len=args.max_len)
+    plans = {}
+    for n_dev in (1, 2):
+        plans[n_dev] = make_serve_plan(
+            cfg, arch=args.arch, n_devices=n_dev,
+            decode_batch=args.max_slots, page_size=args.page_size,
+            max_len=args.max_len, mesh_kind="local")
+    reqs = build_frontend_workload(cfg.vocab_size, args,
+                                   args.frontend_requests)
+    zeros = [0] * len(reqs)
+    stats = {}
+
+    # --- 2 processes x 1 device ---
+    print("[serving_load] frontend: spawning 2x1-device workers...",
+          flush=True)
+    spec1 = make_worker_spec(plan=plans[1], eng=eng)
+    orch2 = Orchestrator([ProcReplica(0, spec1), ProcReplica(1, spec1)])
+    drive_orchestrator(orch2, reqs, zeros)            # untimed warmup
+    rids2, wall, _ = drive_orchestrator(orch2, reqs, zeros)  # saturated
+    stats["two_proc"] = _point_stats(orch2, rids2, wall)
+    out2 = {i: list(orch2.streams[r].tokens) for i, r in enumerate(rids2)}
+
+    # rate sweep on the 2-process deployment: find the knee
+    rng = np.random.default_rng(args.seed + 7)
+    sweep = []
+    for rate in [float(r) for r in args.frontend_rates.split(",") if r]:
+        inter = rng.exponential(1.0 / rate, len(reqs))
+        arrivals = np.floor(np.cumsum(inter)).astype(int).tolist()
+        rids, wall, steps = drive_orchestrator(orch2, reqs, arrivals)
+        sweep.append({"rate": rate, "steps": steps,
+                      **_point_stats(orch2, rids, wall)})
+    best = max(s["tokens_per_s"] for s in sweep)
+    knee = next((s["rate"] for s in sweep
+                 if s["tokens_per_s"] >= 0.9 * best), None)
+    orch2.shutdown(drain=False)
+
+    # --- 1 process x 2 devices ---
+    print("[serving_load] frontend: spawning 1x2-device worker...",
+          flush=True)
+    orch1 = Orchestrator([ProcReplica(0, make_worker_spec(plan=plans[2],
+                                                          eng=eng))])
+    drive_orchestrator(orch1, reqs, zeros)            # untimed warmup
+    rids1, wall, _ = drive_orchestrator(orch1, reqs, zeros)
+    stats["one_proc"] = _point_stats(orch1, rids1, wall)
+    orch1.shutdown(drain=False)
+
+    # --- in-process gateway baseline: same per-replica plan, bit-compare
+    gw_plan = make_serve_plan(
+        cfg, arch=args.arch, n_devices=1, decode_batch=args.max_slots,
+        page_size=args.page_size, max_len=args.max_len, mesh_kind="local",
+        replicas=2)
+    gw = build_gateway(args.arch, smoke=args.smoke, plan=gw_plan, eng=eng)
+    greqs = [Request(uid=f"g{i}", tokens=list(kw["prompt"]),
+                     max_new_tokens=kw["max_new_tokens"],
+                     temperature=kw["temperature"], top_k=kw["top_k"],
+                     top_p=kw["top_p"], seed=kw["seed"])
+             for i, kw in enumerate(reqs)]
+    for r in greqs:
+        gw.add_request(r)
+    gout = gw.run()
+    stats["outputs_identical"] = all(
+        gout[f"g{i}"] == out2[i] for i in range(len(reqs)))
+    stats["speedup"] = (stats["two_proc"]["tokens_per_s"]
+                        / stats["one_proc"]["tokens_per_s"])
+    stats["sweep"] = sweep
+    stats["knee_rate"] = knee
+    stats["requests"] = args.frontend_requests
+    return stats
+
+
+def run_preempt_phase(args):
+    """Mixed interactive/batch Poisson workload through the frontend
+    orchestrator (single in-process replica, 2 decode slots), priority
+    preemption ON vs OFF. With the slots pinned by long batch streams,
+    arriving interactive requests sit queued unless preemption spills a
+    batch stream (valid KV into the prefix cache; resume re-queued).
+    Gates (under --check): interactive p99 TTFT from the obs histogram
+    strictly better with preemption ON, at least one preemption, and
+    every stream — including preempted-and-resumed ones — bit-identical
+    to the preemption-OFF run."""
+    from repro.configs import registry as arch_registry
+    from repro.engine import EngineConfig
+    from repro.frontend.orchestrator import Orchestrator
+    from repro.frontend.protocol import make_worker_spec
+    from repro.frontend.slo import PriorityClass
+    from repro.frontend.worker import LocalReplica
+    from repro.plan import make_serve_plan
+
+    import numpy as np
+
+    cfg = (arch_registry.get_smoke(args.arch) if args.smoke
+           else arch_registry.get(args.arch))
+    plan = make_serve_plan(
+        cfg, arch=args.arch, n_devices=1, decode_batch=2,
+        page_size=args.page_size, max_len=args.max_len, mesh_kind="local",
+        prefix_cache=True)
+    eng = EngineConfig(max_slots=2, page_size=args.page_size,
+                       pages_per_shard=args.pages_per_shard,
+                       max_len=args.max_len)
+    spec = make_worker_spec(plan=plan, eng=eng)
+    classes = {
+        "interactive": PriorityClass("interactive", rank=0),
+        "batch": PriorityClass("batch", rank=1, preemptible=True),
+    }
+    rng = np.random.default_rng(args.seed + 5)
+    vocab = cfg.vocab_size
+    batch_reqs = [dict(prompt=rng.integers(0, vocab, 12).tolist(),
+                       max_new_tokens=args.preempt_batch_gen,
+                       temperature=0.8 if i % 2 else 0.0,
+                       top_k=16 if i % 2 else 0, top_p=1.0,
+                       seed=args.seed + 50 + i)
+                  for i in range(2)]
+    inter_reqs = build_frontend_workload(vocab, args,
+                                         args.preempt_requests)
+    for kw in inter_reqs:
+        kw["max_new_tokens"] = min(kw["max_new_tokens"], 4)
+    # interactive Poisson arrivals land after the batch streams hold
+    # both slots
+    inter = rng.exponential(3.0, len(inter_reqs))
+    arrivals = (3 + np.floor(np.cumsum(inter)).astype(int)).tolist()
+
+    def one_run(preempt):
+        orch = Orchestrator([LocalReplica(0, spec)], classes=classes,
+                            preempt=preempt)
+        brids = []
+        for kw in batch_reqs:
+            kw = dict(kw)
+            rid = orch.submit(kw.pop("prompt"), kw.pop("max_new_tokens"),
+                              cls="batch", **kw)
+            assert isinstance(rid, int), f"batch rejected: {rid}"
+            brids.append(rid)
+        irids, wall, steps = drive_orchestrator(orch, inter_reqs, arrivals,
+                                                cls="interactive")
+        out = {("b", i): list(orch.streams[r].tokens)
+               for i, r in enumerate(brids)}
+        out.update({("i", i): list(orch.streams[r].tokens)
+                    for i, r in enumerate(irids)})
+        preempted = sum(orch.streams[r].preemptions for r in brids)
+        return {
+            "wall_s": wall, "steps": steps, "preemptions": preempted,
+            "interactive_ttft_p99_s": orch.ttft_quantile(
+                0.99, cls="interactive"),
+            "interactive_ttft_p50_s": orch.ttft_quantile(
+                0.5, cls="interactive"),
+            **{k: v for k, v in _point_stats(
+                orch, brids + irids, wall).items()
+               if k in ("tokens", "tokens_per_s")},
+        }, out
+
+    on, out_on = one_run(True)
+    off, out_off = one_run(False)
+    return {
+        "on": on, "off": off,
+        "outputs_identical": out_on == out_off,
+        "ttft_improvement": (off["interactive_ttft_p99_s"]
+                             / max(on["interactive_ttft_p99_s"], 1e-9)),
+        "batch_requests": 2, "interactive_requests": args.preempt_requests,
+        "batch_gen": args.preempt_batch_gen,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="h2o-danube-1.8b")
@@ -652,6 +893,19 @@ def main(argv=None):
                     help="chunk size (tokens) of the chunked-prefill phase")
     ap.add_argument("--long-prompt", type=int, default=48,
                     help="long-prompt length of the chunked-prefill phase")
+    ap.add_argument("--frontend-requests", type=int, default=6,
+                    help="requests in the process-separated frontend "
+                         "phase (0 disables it; spawns worker processes)")
+    ap.add_argument("--frontend-rates", default="0.25,0.5,1.0,2.0",
+                    help="comma-separated Poisson rates (requests per "
+                         "step) swept on the 2-process frontend to find "
+                         "the saturation knee")
+    ap.add_argument("--preempt-requests", type=int, default=4,
+                    help="interactive requests in the priority-preemption "
+                         "phase (0 disables it)")
+    ap.add_argument("--preempt-batch-gen", type=int, default=32,
+                    help="decode budget of the slot-pinning batch streams "
+                         "in the preemption phase")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="results/BENCH_serving.json")
     ap.add_argument("--check", action="store_true",
@@ -694,6 +948,10 @@ def main(argv=None):
                if args.chunk_requests > 0 else None)
     offload = (run_offload_phase(args)
                if args.offload_requests > 0 else None)
+    frontend = (run_frontend_phase(args)
+                if args.frontend_requests > 0 else None)
+    preempt = (run_preempt_phase(args)
+               if args.preempt_requests > 0 else None)
 
     identical = cont_out == seq_out
     result = {
@@ -720,6 +978,8 @@ def main(argv=None):
         "prefix": prefix,
         "chunked": chunked,
         "offload": offload,
+        "frontend": frontend,
+        "preempt": preempt,
     }
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     with open(args.out, "w") as f:
@@ -759,6 +1019,21 @@ def main(argv=None):
               f"{tier['spill_pages']} pages / reloaded "
               f"{tier['reload_pages']}, identical: "
               f"{offload['outputs_identical']}")
+    if frontend is not None:
+        print(f"[serving_load] frontend: "
+              f"{frontend['two_proc']['tokens_per_s']:.2f} tok/s (2 proc) "
+              f"vs {frontend['one_proc']['tokens_per_s']:.2f} tok/s "
+              f"(1 proc, equal devices; speedup "
+              f"{frontend['speedup']:.2f}x), knee rate "
+              f"{frontend['knee_rate']}, identical to gateway: "
+              f"{frontend['outputs_identical']}")
+    if preempt is not None:
+        print(f"[serving_load] preemption: interactive p99 TTFT "
+              f"{preempt['on']['interactive_ttft_p99_s']:.3g}s (on, "
+              f"{preempt['on']['preemptions']} preemptions) vs "
+              f"{preempt['off']['interactive_ttft_p99_s']:.3g}s (off) "
+              f"({preempt['ttft_improvement']:.2f}x better), identical: "
+              f"{preempt['outputs_identical']}")
     if args.check:
         assert identical, "batched outputs diverged from solo serving"
         assert result["compiles_after_warmup"], "recompiled after warmup"
@@ -812,6 +1087,25 @@ def main(argv=None):
             for mode in ("on", "off"):
                 assert offload[mode]["compiles_after_warmup"], (
                     f"offload phase ({mode}) recompiled after warmup")
+        if frontend is not None:
+            assert frontend["outputs_identical"], (
+                "frontend streams diverged from the in-process gateway")
+            assert frontend["speedup"] > 1.0, (
+                f"2-process frontend not faster than 1 process at equal "
+                f"devices: {frontend['speedup']:.2f}x")
+        if preempt is not None:
+            assert preempt["outputs_identical"], (
+                "preempted/resumed streams diverged from the "
+                "preemption-off run")
+            assert preempt["on"]["preemptions"] > 0, (
+                "the preemption-on run never preempted")
+            assert preempt["off"]["preemptions"] == 0, (
+                "the preemption-off run preempted")
+            assert (preempt["on"]["interactive_ttft_p99_s"]
+                    < preempt["off"]["interactive_ttft_p99_s"]), (
+                f"preemption did not improve interactive p99 TTFT: "
+                f"{preempt['on']['interactive_ttft_p99_s']:.3g}s >= "
+                f"{preempt['off']['interactive_ttft_p99_s']:.3g}s")
     return result
 
 

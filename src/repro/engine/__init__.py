@@ -22,9 +22,10 @@ from repro import compat as _compat  # noqa: F401  (jax shims)
 from repro.engine.engine import (Engine, EngineConfig, EngineMetrics,
                                  build_engine)
 from repro.engine.paged_cache import PagePool
-from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
+from repro.engine.scheduler import (Rejection, Request, Scheduler, SlotState,
+                                    bucket_pow2)
 
 __all__ = [
     "Engine", "EngineConfig", "EngineMetrics", "build_engine", "PagePool",
-    "Request", "Scheduler", "SlotState", "bucket_pow2",
+    "Rejection", "Request", "Scheduler", "SlotState", "bucket_pow2",
 ]

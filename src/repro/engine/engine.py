@@ -42,7 +42,8 @@ import numpy as np
 from repro import obs
 from repro.dist.sharding import SP_AXES
 from repro.engine import kv_connector, paged_cache, sampling as sampling_lib
-from repro.engine.scheduler import Request, Scheduler, SlotState, bucket_pow2
+from repro.engine.scheduler import (Rejection, Request, Scheduler, SlotState,
+                                    bucket_pow2)
 from repro.models import transformer
 from repro.models.factory import Model
 
@@ -117,6 +118,8 @@ class EngineMetrics:
         # in: decode-role side)
         "handoffs_out": ("engine_handoffs_out_total", "counter", int),
         "handoffs_in": ("engine_handoffs_in_total", "counter", int),
+        # priority preemptions (spill + re-admit; frontend-driven)
+        "preemptions": ("engine_preemptions_total", "counter", int),
     }
     _HISTOGRAMS = ("serve_ttft_seconds", "serve_intertoken_seconds")
 
@@ -423,12 +426,77 @@ class Engine:
         return self.scheduler.prefix_cache
 
     # ---- request lifecycle ---------------------------------------------
-    def add_request(self, req: Request) -> None:
-        self.scheduler.enqueue(req)
+    def add_request(self, req: Request) -> Optional[Rejection]:
+        """Queue ``req``. Returns ``None`` on success or a typed
+        :class:`Rejection` (never raises for unserveable requests — the
+        HTTP layer maps ``reason`` to a status code)."""
+        rej = self.scheduler.validate(req)
+        if rej is not None:
+            return rej
+        self.scheduler.queue.append(req)
         self._arrival[req.uid] = time.monotonic()
         self._req_spans[req.uid] = self.tracer.async_begin(
             "request", uid=req.uid, prompt_len=req.prompt_len,
             max_new=req.max_new_tokens)
+        return None
+
+    def preempt(self, uid: str) -> Optional[Request]:
+        """Evict ``uid`` from the engine, preserving its progress, and
+        return the *resume request* to re-admit later (here or on another
+        replica). ``None`` if the uid is not queued or active here.
+
+        The resume request's prompt is ``tokens + out`` with the remaining
+        token budget: re-admission prefills it like any other prompt, and
+        because sampling is keyed by (seed, absolute position) — prefill
+        folds at ``prompt_len``, decode at ``cache_len + 1`` — the resumed
+        stream continues bit-identically to the uninterrupted one. With a
+        prefix cache attached, the preempted slot's complete valid KV
+        blocks are registered in the trie first, so the resume prefill is
+        mostly (often entirely) a cache hit instead of a recompute; under
+        memory pressure those blocks are spillable to the host tier like
+        any cached chain.
+        """
+        for i, r in enumerate(self.scheduler.queue):
+            if r.uid == uid:                 # still queued: nothing started
+                del self.scheduler.queue[i]
+                self._arrival.pop(uid, None)
+                self.tracer.async_end(
+                    "request", self._req_spans.pop(uid, None), preempted=True)
+                self.metrics.preemptions += 1
+                return r
+        st = next((s for s in self.scheduler.active() if s.req.uid == uid),
+                  None)
+        if st is None or st.req.handoff:
+            # handoff slots pin exported KV — preempting one mid-export
+            # would tear the transfer; the gateway owns their lifecycle
+            return None
+        req = st.req
+        seq = list(req.tokens) + [int(t) for t in st.out]
+        # KV valid through max(cache_len, prefill_pos): decode keeps
+        # cache_len, a mid-chunk prefill only prefill_pos. pending_reload
+        # blocks hold garbage until _advance_prefill lands them, so a slot
+        # that never ran a chunk registers nothing new (its device-hit
+        # prefix is already in the trie).
+        valid = max(st.cache_len, st.prefill_pos)
+        pc = self.prefix_cache
+        if pc is not None and not st.pending_reload:
+            full = valid // self.eng.page_size
+            if full > 0:
+                pc.insert(pc.hashes(seq)[:full], st.pages[:full])
+        if st in self._prefilling:
+            self._prefilling.remove(st)
+        remaining = req.max_new_tokens - len(st.out)
+        self.scheduler.finish(st.slot, self.metrics.steps)
+        self.scheduler.finished.pop(uid, None)    # not finished: preempted
+        self.metrics.preemptions += 1
+        self._arrival.pop(uid, None)
+        self._last_emit.pop(uid, None)
+        self.tracer.async_end("request", self._req_spans.pop(uid, None),
+                              preempted=True, tokens=len(st.out))
+        if not st.out:
+            return req
+        return dataclasses.replace(req, tokens=seq,
+                                   max_new_tokens=remaining)
 
     def _finish_request(self, st: SlotState) -> None:
         """Bookkeeping common to every finish site (prefill or decode)."""

@@ -53,10 +53,32 @@ class Request:
     #                                    first token and keep the prompt KV
     #                                    live until the gateway exports it to
     #                                    a decode replica
+    priority: str = "batch"            # frontend priority class name; the
+    #                                    engine itself is priority-blind
 
     @property
     def prompt_len(self) -> int:
         return len(self.tokens)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejection:
+    """Typed admission failure.
+
+    ``reason`` is a stable machine-readable slug (one per failure mode so
+    the HTTP layer can map it to a status code), ``detail`` the human
+    string, and ``retry_after_steps`` an engine-step hint for when retrying
+    could succeed — ``None`` means the request can never be admitted as-is
+    (a client error, not back-pressure).
+    """
+
+    reason: str
+    detail: str = ""
+    retry_after_steps: Optional[int] = None
+
+    @property
+    def retryable(self) -> bool:
+        return self.retry_after_steps is not None
 
 
 @dataclasses.dataclass
@@ -126,21 +148,34 @@ class Scheduler:
         self.finished: Dict[str, SlotState] = {}
 
     # ---- queue ----------------------------------------------------------
-    def enqueue(self, req: Request) -> None:
+    def validate(self, req: Request) -> Optional[Rejection]:
+        """Read-only admission probe: the :class:`Rejection` this request
+        would draw, or ``None`` if it is serveable. All four reasons are
+        permanent (``retry_after_steps=None``): they depend only on the
+        request shape and the engine geometry, never on load."""
         if req.prompt_len < 1:
-            raise ValueError(f"{req.uid}: empty prompt")
+            return Rejection("empty_prompt", f"{req.uid}: empty prompt")
         if req.max_new_tokens < 1:
-            raise ValueError(f"{req.uid}: max_new_tokens must be >= 1")
+            return Rejection(
+                "bad_budget", f"{req.uid}: max_new_tokens must be >= 1")
         if req.prompt_len + req.max_new_tokens > self.max_len:
-            raise ValueError(
+            return Rejection(
+                "too_long",
                 f"{req.uid}: prompt {req.prompt_len} + budget "
                 f"{req.max_new_tokens} exceeds engine max_len {self.max_len}")
         worst = max(self._per_shard_need(self._blocks_for(req)))
         if worst > self.pages_per_shard:
-            raise ValueError(
+            return Rejection(
+                "pool_too_small",
                 f"{req.uid}: needs {worst} pages on a shard but the pool "
                 f"holds {self.pages_per_shard}/shard — raise pages_per_shard "
                 f"or shrink the request")
+        return None
+
+    def enqueue(self, req: Request) -> None:
+        rej = self.validate(req)
+        if rej is not None:
+            raise ValueError(rej.detail)
         self.queue.append(req)
 
     # ---- paging ---------------------------------------------------------

@@ -1,0 +1,41 @@
+"""repro.frontend — process-separated serving front end.
+
+JetStream-style orchestrator/engine split: an :class:`Orchestrator`
+drives worker replicas (in-process ``LocalReplica`` or spawned
+``ProcReplica``) through the small engine-API boundary in
+:mod:`repro.frontend.protocol`, with async HTTP/SSE streaming on top
+(:mod:`repro.frontend.server`).
+
+Attribute access is lazy: spawned worker children import
+``repro.frontend.worker`` during unpickling *before* they get to set
+XLA flags, so nothing here may pull in jax (or the orchestrator, whose
+import chain reaches the engine) eagerly.
+"""
+
+_EXPORTS = {
+    "Orchestrator": "repro.frontend.orchestrator",
+    "EngineHost": "repro.frontend.worker",
+    "LocalReplica": "repro.frontend.worker",
+    "ProcReplica": "repro.frontend.worker",
+    "worker_main": "repro.frontend.worker",
+    "StepResult": "repro.frontend.protocol",
+    "ReplicaDead": "repro.frontend.protocol",
+    "make_worker_spec": "repro.frontend.protocol",
+    "PriorityClass": "repro.frontend.slo",
+    "SLOAdmission": "repro.frontend.slo",
+    "default_classes": "repro.frontend.slo",
+    "parse_classes": "repro.frontend.slo",
+    "FrontendServer": "repro.frontend.server",
+    "run_server": "repro.frontend.server",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(mod), name)

@@ -35,12 +35,12 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
 from repro import obs
-from repro.engine import Engine, EngineConfig, Request
+from repro.engine import Engine, EngineConfig, Rejection, Request
 from repro.gateway.router import Router
 
 
@@ -149,31 +149,57 @@ class Gateway:
         self.handoffs = 0
         self.wall_s = 0.0
         self.max_steps = eng.max_steps
+        self.draining = False
 
     # ---- request lifecycle ---------------------------------------------
     def add_request(self, req: Request, session: Optional[str] = None,
-                    replica: Optional[int] = None) -> int:
-        """Route and enqueue; returns the replica index. ``replica`` pins
-        the choice (the benchmark replays recorded placements so cache-on
-        and cache-off phases compare the same per-replica workloads)."""
+                    replica: Optional[int] = None) -> Union[int, Rejection]:
+        """Route and enqueue; returns the replica index, or a typed
+        :class:`Rejection` when admission fails (a draining gateway or an
+        unserveable request — never a raise, so the HTTP layer can answer
+        429/503 instead of 500). ``replica`` pins the choice (the
+        benchmark replays recorded placements so cache-on and cache-off
+        phases compare the same per-replica workloads)."""
+        if self.draining:
+            return Rejection("draining",
+                             "gateway is draining: not accepting requests")
+        if not self.router.live_eligible():
+            return Rejection("no_live_replica",
+                             "no live replica can admit requests",
+                             retry_after_steps=1)
         with self.tracer.span("gateway/route", cat="gateway", uid=req.uid):
             i = self.router.route(req, session) if replica is None \
                 else replica
         if replica is not None:
             self.router.routed[i] += 1
-        self.registry.counter(
-            "gateway_requests_routed_total",
-            "Requests routed to each replica").inc(replica=str(i))
         if self.roles[i] == "prefill":
             # the prefill replica runs a 1-token twin; the original budget
             # and sampling state resume on the decode replica at handoff
+            twin = dataclasses.replace(req, max_new_tokens=1, handoff=True)
+            rej = self.engines[i].add_request(twin)
+            if rej is not None:
+                return rej
             self._pending_handoff[req.uid] = req
-            req = dataclasses.replace(req, max_new_tokens=1, handoff=True)
-        self.engines[i].add_request(req)
+        else:
+            rej = self.engines[i].add_request(req)
+            if rej is not None:
+                return rej
+        self.registry.counter(
+            "gateway_requests_routed_total",
+            "Requests routed to each replica").inc(replica=str(i))
         self._owner[req.uid] = i
         self._streams[req.uid] = []
         self._cursor[req.uid] = 0
         return i
+
+    def preempt(self, uid: str) -> Optional[Request]:
+        """Evict ``uid`` from whichever replica holds it and return the
+        resume request (``Engine.preempt`` semantics: re-admitting it —
+        anywhere — continues the stream bit-identically)."""
+        i = self._owner.get(uid)
+        if i is None:
+            return None
+        return self.engines[i].preempt(uid)
 
     def _drain_handoffs(self) -> None:
         """Move every finished prefill-role prompt to a decode replica:
@@ -279,6 +305,23 @@ class Gateway:
         self._handoff_dst.clear()
         self.handoffs = 0
         self.wall_s = 0.0
+        self.draining = False
+
+    def shutdown(self, drain: bool = True,
+                 max_steps: Optional[int] = None) -> Dict[str, List[int]]:
+        """Stop accepting requests and wind the gateway down.
+
+        ``drain=True`` finishes every in-flight request first (same loop
+        as :meth:`run`) and then flushes each replica's staged host-tier
+        spills so nothing committed to the host tier is torn; ``False``
+        abandons in-flight work. Returns the finished streams. Idempotent
+        — a second call is a no-op returning the collected streams."""
+        self.draining = True
+        if drain and not self.idle():
+            self.run(max_steps)
+        for engine in self.engines:
+            engine.connector.flush()
+        return self.collect()
 
     # ---- metrics --------------------------------------------------------
     def compiles(self) -> Tuple[int, int]:

@@ -40,6 +40,19 @@ prefill replica to a decode replica through the connector:
 ``--legacy`` keeps the pre-engine static-batch greedy path (one fixed batch,
 capacity-sized contiguous cache) — with the decode step compiled ONCE before
 the token loop, not per token.
+
+**HTTP front-end mode** (``--http``) starts the process-separated
+``repro.frontend`` stack instead of running a canned workload: ``--workers``
+engine processes (the device count is split evenly across them; ``0`` keeps
+a single in-process replica), an async HTTP/SSE server streaming tokens
+per request, priority classes (``--priority-classes``, highest first) with
+optional per-class preemption (``--preempt``) and SLO-priced admission
+(``--slo-ttft-ms``). SIGTERM drains gracefully: in-flight streams finish,
+host-tier spills flush, workers join.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
+      --smoke --devices 2 --workers 2 --http --port 8080 \
+      --max-slots 2 --page-size 4 --max-len 64
 """
 
 import argparse
@@ -215,6 +228,50 @@ def _gateway_main(args, plan, cfg, registry=None, tracer=None, plans=None):
     return out
 
 
+def _frontend_main(args, plan, cfg, registry=None, tracer=None):
+    """JetStream-style process-separated serving: spawn ``--workers``
+    engine processes behind the orchestrator, serve HTTP/SSE until
+    SIGTERM, then drain."""
+    import dataclasses
+
+    from repro.engine import EngineConfig
+    from repro.frontend.orchestrator import Orchestrator
+    from repro.frontend.protocol import make_worker_spec
+    from repro.frontend.server import run_server
+    from repro.frontend.slo import SLOAdmission, parse_classes
+    from repro.frontend.worker import LocalReplica, ProcReplica
+
+    # each worker is a single-engine replica of the per-worker plan
+    spec = make_worker_spec(
+        plan=dataclasses.replace(plan, replicas=1),
+        eng=EngineConfig(pages_per_shard=args.pages_per_shard,
+                         prefill_chunk=args.prefill_chunk),
+        init_seed=0, trace=bool(args.trace_out))
+    workers = max(args.workers, 0)
+    if workers:
+        print(f"[serve] spawning {workers} worker processes "
+              f"({plan.n_devices} devices each)...", flush=True)
+        replicas = [ProcReplica(i, spec) for i in range(workers)]
+    else:
+        print("[serve] --workers 0: single in-process replica", flush=True)
+        replicas = [LocalReplica(0, spec)]
+    classes = parse_classes(args.priority_classes,
+                            slo_ttft_ms=args.slo_ttft_ms,
+                            budget_tokens=args.class_budget_tokens)
+    slo = None
+    if args.slo_ttft_ms > 0:
+        slo = SLOAdmission(cfg, sp=plan.sp_size, page_size=plan.page_size,
+                           decode_batch=plan.decode_batch,
+                           kernel=plan.kernel_impl,
+                           calibration=args.slo_calibration)
+    orch = Orchestrator(replicas, classes=classes, slo=slo,
+                        preempt=bool(args.preempt), registry=registry,
+                        tracer=tracer)
+    run_server(orch, host=args.host, port=args.port, worker_spec=spec,
+               workers=workers)
+    return {}
+
+
 def _resolve_plan(args):
     """Returns ``(plan, plans, cfg)`` — ``plans`` is the per-role list in
     disaggregated mode (``--roles`` or a multi-plan json), else None."""
@@ -322,6 +379,32 @@ def main(argv=None):
     ap.add_argument("--system-prompt-len", type=int, default=32,
                     help="shared prompt prefix length in gateway mode "
                          "(0 = fully independent prompts)")
+    # HTTP front-end knobs (repro.frontend; --http switches modes)
+    ap.add_argument("--http", action="store_true",
+                    help="serve an async HTTP/SSE front end "
+                         "(repro.frontend) instead of a canned workload")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="engine worker *processes* behind the front end "
+                         "(--devices is split evenly across them; 0 = one "
+                         "in-process replica)")
+    ap.add_argument("--priority-classes", default="interactive,batch",
+                    help="comma-separated priority classes, highest "
+                         "first; classes after the first are preemptible")
+    ap.add_argument("--slo-ttft-ms", type=float, default=0.0,
+                    help="TTFT SLO for the highest class, priced at "
+                         "admission from plan.cost (0 = no SLO gate)")
+    ap.add_argument("--class-budget-tokens", type=int, default=0,
+                    help="outstanding-token budget for the highest class "
+                         "(0 = unlimited)")
+    ap.add_argument("--slo-calibration", type=float, default=1.0,
+                    help="scale analytical seconds to this machine "
+                         "(measured_step_s / analytical_step_s)")
+    ap.add_argument("--preempt", action=argparse.BooleanOptionalAction,
+                    default=False,
+                    help="spill the worst preemptible stream when a "
+                         "higher-priority request is stuck queued")
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--pages-per-shard", type=int, default=128)
@@ -348,6 +431,10 @@ def main(argv=None):
     args = ap.parse_args(argv)
     if not args.plan and not args.arch:
         ap.error("--arch is required (unless --plan carries it)")
+    if args.http and args.workers > 1:
+        # the device count is split across worker processes exactly like
+        # gateway replicas; the resolved plan is then per worker
+        args.replicas = args.workers
 
     if args.plan and not args.devices:
         # a local-mesh plan records its forced-host device count; read it
@@ -394,7 +481,10 @@ def main(argv=None):
 
     registry = obs.Registry()
     tracer = obs.Tracer(enabled=bool(args.trace_out))
-    if args.legacy:
+    if args.http:
+        out = _frontend_main(args, plan, cfg, registry=registry,
+                             tracer=tracer)
+    elif args.legacy:
         out = _legacy_main(args, plan, cfg)
     elif plans or plan.replicas > 1 or plan.prefix_cache:
         out = _gateway_main(args, plan, cfg, registry=registry,

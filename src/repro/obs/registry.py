@@ -448,3 +448,125 @@ def parse_prometheus(text: str) -> Dict[Tuple[str, LabelKey], float]:
         out[(m.group("name"), _label_key(labels))] = \
             float(raw) if value is None else value
     return out
+
+
+def parse_prometheus_families(text: str) -> Dict[str, Dict]:
+    """``# TYPE``-aware Prometheus text parse.
+
+    Returns {family name -> {"kind", "help", "samples"}} where ``samples``
+    maps (sample name, label key) -> value, sample names keeping their
+    ``_bucket``/``_sum``/``_count`` suffixes for histograms. Families
+    without a ``# TYPE`` line parse as ``untyped`` under their sample
+    name. This is the structured half of cross-process metrics merging:
+    ``Registry.merge_prometheus_text`` consumes it to rebuild real
+    Counter/Gauge/Histogram series from a worker's scrape.
+    """
+    kinds: Dict[str, str] = {}
+    helps: Dict[str, str] = {}
+    out: Dict[str, Dict] = {}
+    for line in text.splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        if line.startswith("# TYPE "):
+            _, _, rest = line.partition("# TYPE ")
+            name, _, kind = rest.partition(" ")
+            kinds[name] = kind.strip()
+            continue
+        if line.startswith("# HELP "):
+            _, _, rest = line.partition("# HELP ")
+            name, _, h = rest.partition(" ")
+            helps[name] = _unescape(h)
+            continue
+        if line.startswith("#"):
+            continue
+        m = _SAMPLE_RE.match(line)
+        if not m:
+            raise ValueError(f"unparseable sample line: {line!r}")
+        sample = m.group("name")
+        family = sample
+        for suffix in ("_bucket", "_sum", "_count"):
+            base = sample[:-len(suffix)] if sample.endswith(suffix) else None
+            if base and kinds.get(base) == "histogram":
+                family = base
+                break
+        fam = out.setdefault(family, {
+            "kind": kinds.get(family, "untyped"),
+            "help": helps.get(family, ""),
+            "samples": {},
+        })
+        labels: Dict[str, str] = {}
+        if m.group("labels"):
+            for lm in _LABEL_RE.finditer(m.group("labels")):
+                labels[lm.group(1)] = _unescape(lm.group(2))
+        raw = m.group("value")
+        special = {"+Inf": math.inf, "-Inf": -math.inf,
+                   "NaN": math.nan}.get(raw)
+        fam["samples"][(sample, _label_key(labels))] = \
+            float(raw) if special is None else special
+    return out
+
+
+def merge_prometheus_text(registry: Registry, text: str,
+                          **extra_labels) -> Registry:
+    """Fold a scraped Prometheus exposition into ``registry``, adding
+    ``extra_labels`` to every series (the orchestrator merges each
+    worker's ``/metrics`` text under ``worker=<i>``).
+
+    Counters and gauges merge by *addition* so same-named series from
+    several workers aggregate; histograms are rebuilt bucket-for-bucket —
+    cumulative ``_bucket`` lines are differenced back to per-bucket
+    counts, and ``_sum``/``_count`` restored — so quantile estimates over
+    the merged registry see every process's observations. Merge each
+    scrape into a *fresh* registry (merging the same text twice
+    double-counts, exactly like summing a scrape with itself).
+    """
+    for family, fam in parse_prometheus_families(text).items():
+        kind, help_, samples = fam["kind"], fam["help"], fam["samples"]
+        if kind == "histogram":
+            # bucket bounds from any one series' finite `le` labels
+            bounds = sorted({float(dict(key)["le"])
+                             for (s, key) in samples
+                             if s == f"{family}_bucket"
+                             and dict(key)["le"] != "+Inf"
+                             and not math.isinf(float(dict(key)["le"]))})
+            if not bounds:
+                continue
+            h = registry.histogram(family, help_, buckets=bounds)
+            series: Dict[LabelKey, Dict[float, float]] = {}
+            sums: Dict[LabelKey, float] = {}
+            counts_n: Dict[LabelKey, float] = {}
+            for (sample, key), v in samples.items():
+                if sample == f"{family}_bucket":
+                    lab = dict(key)
+                    le_raw = lab.pop("le")
+                    le = math.inf if le_raw == "+Inf" else float(le_raw)
+                    series.setdefault(_label_key(lab), {})[le] = v
+                elif sample == f"{family}_sum":
+                    sums[key] = v
+                elif sample == f"{family}_count":
+                    counts_n[key] = v
+            for key, bucket_map in series.items():
+                lab = dict(key)
+                lab.update({k: str(v) for k, v in extra_labels.items()})
+                dst = _label_key(lab)
+                cum = [bucket_map.get(b, 0.0) for b in bounds]
+                cum.append(bucket_map.get(math.inf, cum[-1] if cum else 0.0))
+                per = [cum[0]] + [cum[i] - cum[i - 1]
+                                  for i in range(1, len(cum))]
+                with h._lock:
+                    have = h._counts.setdefault(
+                        dst, [0] * (len(h.buckets) + 1))
+                    for i, c in enumerate(per):
+                        have[i] += int(c)
+                    h._n[dst] = h._n.get(dst, 0) + int(counts_n.get(key, 0))
+                    h._series[dst] = h._series.get(dst, 0.0) \
+                        + sums.get(key, 0.0)
+            continue
+        m = registry.counter(family, help_) if kind == "counter" \
+            else registry.gauge(family, help_)
+        for (sample, key), v in samples.items():
+            lab = dict(key)
+            lab.update({k: str(v2) for k, v2 in extra_labels.items()})
+            m._add(v, lab)
+    return registry

@@ -129,6 +129,17 @@ class Tracer:
         with self._lock:
             self._events.clear()
 
+    def extend(self, events: List[Dict[str, Any]]) -> None:
+        """Merge events recorded by another tracer (typically shipped back
+        from a worker process at drain — each event already carries its
+        origin ``pid``, so Chrome/Perfetto lays processes out side by
+        side). Events are appended as-is: the two tracers' clocks are
+        both process-relative, close enough for eyeballing one serve run.
+        Works on a disabled tracer too — the merged trace is still
+        dumpable even when local span recording is off."""
+        with self._lock:
+            self._events.extend(events)
+
     # -- export -----------------------------------------------------------
     def chrome_trace(self) -> Dict[str, Any]:
         return {"traceEvents": self.events(), "displayTimeUnit": "ms"}

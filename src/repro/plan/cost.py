@@ -302,6 +302,38 @@ def rank_decode_kernels(cfg: ModelConfig, *, batch: int, cache_len: int,
     return out
 
 
+def serve_slo_cost(cfg: ModelConfig, *, prompt_len: int,
+                   queued_tokens: int = 0, sp: int = 1, page_size: int = 8,
+                   decode_batch: int = 1, kernel: str = "ref",
+                   cluster: Optional[sch.ClusterModel] = None
+                   ) -> Dict[str, float]:
+    """Price a request's TTFT and steady tokens/s for SLO-aware admission.
+
+    The front end (``repro.frontend.slo.SLOAdmission``) calls this per
+    admission: TTFT ~ this prompt's own cold prefill plus the time the
+    replica spends clearing the ``queued_tokens`` already committed ahead
+    of it, drained at the full-batch decode rate. Both terms come from the
+    same cost model the planner ranks kernels and factorisations with, so
+    the admission decision and the plan agree about the machine.
+
+    Returns ``{'prefill_s', 'decode_step_s', 'queue_s', 'ttft_s',
+    'tokens_per_s'}`` (analytical seconds — callers calibrate to measured
+    hardware with one scale factor).
+    """
+    prefill_s = prefill_step_cost(
+        cfg, prompt_len=max(prompt_len, 1), sp=sp, page_size=page_size,
+        cluster=cluster)["total_s"]
+    decode_step_s = decode_step_cost(
+        cfg, batch=max(decode_batch, 1),
+        cache_len=max(prompt_len, page_size * sp), sp=sp,
+        page_size=page_size, kernel=kernel, cluster=cluster)["total_s"]
+    rate = max(decode_batch, 1) / max(decode_step_s, 1e-12)
+    queue_s = queued_tokens / rate
+    return {"prefill_s": prefill_s, "decode_step_s": decode_step_s,
+            "queue_s": queue_s, "ttft_s": prefill_s + queue_s,
+            "tokens_per_s": rate}
+
+
 # ---------------------------------------------------------------------------
 # Serving prefill cost and the prefix-cache capacity / hit-rate trade
 # ---------------------------------------------------------------------------

@@ -208,15 +208,22 @@ def test_engine_single_device_end_to_end():
 
 
 def test_unserveable_request_rejected_at_enqueue():
-    from repro.engine import EngineConfig, build_engine
+    from repro.engine import EngineConfig, Rejection, build_engine
 
     eng = build_engine("h2o-danube-1.8b", smoke=True, c=1, data=1,
                        eng=EngineConfig(max_slots=1, page_size=4,
                                         pages_per_shard=4, max_len=64))
+    # 40 positions -> 10 blocks on the 1-shard pool of 4 pages: would
+    # head-of-line block forever; must be rejected up front, as a typed
+    # Rejection (permanent: no retry hint) rather than an exception
+    rej = eng.add_request(Request("big", [1] * 30, 10))
+    assert isinstance(rej, Rejection)
+    assert rej.reason == "pool_too_small" and "pages" in rej.detail
+    assert not rej.retryable
+    assert eng.idle()                       # nothing was enqueued
+    # the raw scheduler enqueue keeps its raising contract
     with pytest.raises(ValueError, match="pages"):
-        # 40 positions -> 10 blocks on the 1-shard pool of 4 pages: would
-        # head-of-line block forever; must be rejected up front
-        eng.add_request(Request("big", [1] * 30, 10))
+        eng.scheduler.enqueue(Request("big", [1] * 30, 10))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,499 @@
+"""Tests for the process-separated serving front end (``repro.frontend``).
+
+Three tiers, cheapest first:
+
+  * pure-host unit tests — the engine-API wire protocol, typed
+    ``Rejection`` reasons (engine- and frontend-side), priority-class
+    parsing, SLO-priced admission, the cross-process Prometheus merge,
+    and orchestrator policy (budgets, liveness, failover) driven through
+    a scripted fake replica: no jax, no devices;
+  * one shared single-device engine behind ``LocalReplica`` —
+    orchestrator-vs-engine token parity, preemption bit-identity
+    (greedy AND sampled), drain/shutdown semantics, and the HTTP/SSE
+    server end to end on an ephemeral port;
+  * one spawned two-worker session — engine-API over real pipes:
+    bit-identity vs the in-process baseline, merged ``/metrics``, then
+    one worker hard-killed mid-decode and every stream (the dead
+    worker's re-admitted on the survivor included) still bit-identical.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.engine import Rejection, Request
+from repro.frontend import protocol
+from repro.frontend.orchestrator import Orchestrator
+from repro.frontend.protocol import ReplicaDead, StepResult, pack_step
+from repro.frontend.slo import (PriorityClass, SLOAdmission,
+                                default_classes, parse_classes)
+
+ARCH = "h2o-danube-1.8b"
+
+
+# ---------------------------------------------------------------------------
+# protocol: wire round-trips and the packed step result
+# ---------------------------------------------------------------------------
+
+def test_request_wire_roundtrip():
+    req = Request(uid=protocol.uid_for(7), tokens=[1, 2, 3],
+                  max_new_tokens=4, temperature=0.8, top_k=16, top_p=0.9,
+                  seed=3, priority="batch")
+    assert protocol.request_from_wire(protocol.request_to_wire(req)) == req
+    assert protocol.rid_for(req.uid) == 7
+
+
+def test_rejection_wire_roundtrip():
+    rej = Rejection("slo_ttft_unattainable", "priced out",
+                    retry_after_steps=12)
+    back = protocol.rejection_from_wire(protocol.rejection_to_wire(rej))
+    assert back == rej and back.retryable
+    perm = Rejection("empty_prompt", "no tokens")
+    assert not perm.retryable
+
+
+def test_pack_step_is_one_host_array():
+    import numpy as np
+
+    res = pack_step([(3, 101), (9, 102)], [9], free_slots=1, queued=2,
+                    active=1, outstanding_tokens=40)
+    assert isinstance(res.tokens, np.ndarray)
+    assert res.tokens.dtype == np.int32 and res.tokens.shape == (2, 2)
+    assert res.emitted == [(3, 101), (9, 102)]
+    assert res.finished == [9]
+    empty = pack_step([], [], free_slots=0, queued=0, active=0,
+                      outstanding_tokens=0)
+    assert empty.tokens.shape == (0, 2) and empty.emitted == []
+
+
+# ---------------------------------------------------------------------------
+# engine-side typed rejections (scheduler.validate, one reason each)
+# ---------------------------------------------------------------------------
+
+def _sched(**kw):
+    from repro.engine import Scheduler
+
+    base = dict(max_slots=2, page_size=4, sp=1, pages_per_shard=4,
+                max_len=32)
+    base.update(kw)
+    return Scheduler(**base)
+
+
+@pytest.mark.parametrize("req,reason", [
+    (Request("a", [], 4), "empty_prompt"),
+    (Request("b", [1, 2], 0), "bad_budget"),
+    (Request("c", [1] * 30, 10), "too_long"),
+    (Request("d", [1] * 20, 11), "pool_too_small"),
+])
+def test_engine_rejection_reasons(req, reason):
+    rej = _sched().validate(req)
+    assert rej is not None and rej.reason == reason
+    assert rej.retry_after_steps is None    # all permanent
+    # enqueue keeps raising on the same condition
+    with pytest.raises(ValueError):
+        _sched().enqueue(req)
+
+
+def test_valid_request_passes_validate():
+    assert _sched().validate(Request("ok", [1, 2, 3], 4)) is None
+
+
+# ---------------------------------------------------------------------------
+# priority classes + SLO admission (analytic, no devices)
+# ---------------------------------------------------------------------------
+
+def test_parse_classes():
+    classes = parse_classes("interactive,batch,scavenger",
+                            slo_ttft_ms=250.0, budget_tokens=1000)
+    assert [c.rank for c in classes.values()] == [0, 1, 2]
+    assert classes["interactive"].slo_ttft_ms == 250.0
+    assert classes["interactive"].budget_tokens == 1000
+    assert not classes["interactive"].preemptible
+    assert classes["batch"].preemptible
+    assert classes["scavenger"].preemptible
+    assert classes["batch"].slo_ttft_ms == 0.0
+    with pytest.raises(ValueError):
+        parse_classes("  ,  ")
+    assert set(default_classes()) == {"interactive", "batch"}
+
+
+def test_slo_admission_prices_queue_depth():
+    from repro.configs import registry
+
+    cfg = registry.get_smoke(ARCH)
+    slo = SLOAdmission(cfg, sp=1, page_size=4, decode_batch=4)
+    d = slo.price(prompt_len=16, queued_tokens=0)
+    assert d["ttft_s"] == pytest.approx(d["prefill_s"])
+    d2 = slo.price(prompt_len=16, queued_tokens=4000)
+    assert d2["ttft_s"] > d["ttft_s"]       # queued work prices into TTFT
+    # no SLO -> never rejects; tight SLO + deep queue -> typed 429
+    assert slo.check(prompt_len=16, slo_ttft_ms=0.0,
+                     queued_tokens=10**9) is None
+    rej = slo.check(prompt_len=16, slo_ttft_ms=1e-6,
+                    queued_tokens=10**6)
+    assert rej is not None and rej.reason == "slo_ttft_unattainable"
+    assert rej.retryable and rej.retry_after_steps >= 1
+    # a generous SLO with an empty queue admits
+    assert slo.check(prompt_len=16, slo_ttft_ms=1e9,
+                     queued_tokens=0) is None
+
+
+# ---------------------------------------------------------------------------
+# cross-process Prometheus merge
+# ---------------------------------------------------------------------------
+
+def test_prometheus_merge_roundtrip():
+    from repro import obs
+
+    w = obs.Registry()
+    w.counter("engine_steps_total", "steps").inc(5)
+    h = w.histogram("engine_ttft_seconds", "ttft")
+    for v in (0.002, 0.03, 0.4, 2.0):
+        h.observe(v)
+    text = w.render_prometheus()
+
+    merged = obs.Registry()
+    obs.merge_prometheus_text(merged, text, worker="0")
+    obs.merge_prometheus_text(merged, text, worker="1")
+    c = merged.get("engine_steps_total")
+    assert c.sum() == 10
+    assert c.value(worker="0") == 5 and c.value(worker="1") == 5
+    hm = merged.get("engine_ttft_seconds")
+    assert hm.count() == 8
+    # per-worker filtering and quantiles survive the text round-trip
+    assert hm.count(worker="0") == 4
+    assert hm.quantile(0.5) == h.quantile(0.5)
+
+
+# ---------------------------------------------------------------------------
+# orchestrator policy on a scripted fake replica (no engine, no jax)
+# ---------------------------------------------------------------------------
+
+class FakeReplica:
+    """Engine-API double: admits everything, emits one token per active
+    rid per step, finishes each request after its budget."""
+
+    def __init__(self, index):
+        self.index = index
+        self.alive = True
+        self.last = None
+        self.active = {}                    # rid -> remaining budget
+        self._pending = False
+        self.free_slots_override = None
+
+    def add(self, rid, wire):
+        self.active[rid] = int(wire["max_new_tokens"])
+        return None
+
+    def step_send(self):
+        if not self.alive:
+            raise ReplicaDead(self.index)
+        self._pending = True
+
+    def step_recv(self):
+        assert self._pending
+        self._pending = False
+        if not self.alive:
+            raise ReplicaDead(self.index)
+        emitted, finished = [], []
+        for rid in list(self.active):
+            emitted.append((rid, 1000 + rid))
+            self.active[rid] -= 1
+            if self.active[rid] <= 0:
+                finished.append(rid)
+                del self.active[rid]
+        free = 4 - len(self.active)
+        if self.free_slots_override is not None:
+            free = self.free_slots_override
+        self.last = pack_step(
+            emitted, finished, free_slots=free, queued=0,
+            active=len(self.active),
+            outstanding_tokens=sum(self.active.values()))
+        return self.last
+
+    def preempt(self, rid):
+        return None
+
+    def idle(self):
+        return not self.active
+
+    def flush(self):
+        pass
+
+    def metrics_text(self):
+        return ""
+
+    def trace_events(self):
+        return []
+
+    def shutdown(self):
+        self.alive = False
+
+    def kill(self):
+        self.alive = False
+
+
+def test_frontend_rejection_reasons():
+    orch = Orchestrator([FakeReplica(0)], classes={
+        "interactive": PriorityClass("interactive", 0, budget_tokens=10)})
+    rej = orch.submit([1, 2], 4, cls="nope")
+    assert isinstance(rej, Rejection) and rej.reason == "unknown_class"
+
+    ok = orch.submit([1, 2], 8)
+    assert isinstance(ok, int)
+    rej = orch.submit([1, 2], 8)            # 8 + 8 > 10-token class budget
+    assert isinstance(rej, Rejection)
+    assert rej.reason == "class_budget_exhausted" and rej.retryable
+
+    orch.draining = True
+    rej = orch.submit([1, 2], 2)
+    assert isinstance(rej, Rejection) and rej.reason == "draining"
+    orch.draining = False
+
+    orch.run()                              # finish the admitted stream
+    orch.replicas[0].kill()
+    orch.step()                             # notices the dead replica
+    rej = orch.submit([1, 2], 2)
+    assert isinstance(rej, Rejection) and rej.reason == "no_live_replica"
+    # every rejection was counted by reason on the frontend registry
+    c = orch.registry.get("frontend_rejections_total")
+    for reason in ("unknown_class", "class_budget_exhausted", "draining",
+                   "no_live_replica"):
+        assert c.value(reason=reason) == 1, reason
+
+
+def test_failover_readmits_on_survivor():
+    orch = Orchestrator([FakeReplica(0), FakeReplica(1)])
+    rids = [orch.submit([1, 2, 3], 5) for _ in range(4)]
+    for _ in range(2):
+        orch.step()
+    dead = orch.streams[rids[0]].replica
+    survivor = 1 - dead
+    orch.replicas[dead].kill()
+    out = orch.run()
+    for rid in rids:
+        s = orch.streams[rid]
+        assert s.done and len(out[rid]) == 5, (rid, out[rid])
+        assert s.replica in (dead, survivor)
+    moved = [r for r in rids if orch.streams[r].replica == survivor
+             and orch.streams[r].resumed > 0]
+    assert orch.registry.get("frontend_failovers_total").value() >= 1
+    assert moved, "no stream was re-admitted on the survivor"
+
+
+def test_shutdown_drains_and_joins():
+    orch = Orchestrator([FakeReplica(0)])
+    rid = orch.submit([1, 2], 3)
+    streams = orch.shutdown(drain=True)
+    assert orch.draining
+    assert streams[rid] == [1000 + rid] * 3
+    assert not orch.replicas[0].alive       # shut down, not abandoned
+    rej = orch.submit([1, 2], 3)
+    assert isinstance(rej, Rejection) and rej.reason == "draining"
+
+
+# ---------------------------------------------------------------------------
+# engine-backed: one shared LocalReplica spec (single smoke device)
+# ---------------------------------------------------------------------------
+
+_CTX = {}
+
+
+def _spec():
+    if not _CTX:
+        from repro.configs import registry
+        from repro.engine import EngineConfig
+        from repro.plan import make_serve_plan
+
+        cfg = registry.get_smoke(ARCH)
+        plan = make_serve_plan(cfg, arch=ARCH, n_devices=1, decode_batch=2,
+                               page_size=4, max_len=64, mesh_kind="local",
+                               prefix_cache=True)
+        eng = EngineConfig(max_slots=2, page_size=4, pages_per_shard=64,
+                           max_len=64)
+        _CTX["spec"] = protocol.make_worker_spec(plan=plan, eng=eng)
+        _CTX["cfg"] = cfg
+        _CTX["plan"] = plan
+        _CTX["eng"] = eng
+    return _CTX["spec"]
+
+
+def _mixed_requests(n=4, gen=6):
+    reqs = []
+    for i in range(n):
+        prompt = [(3 * i + j) % 97 + 1 for j in range(10 + i)]
+        reqs.append(dict(prompt=prompt, max_new_tokens=gen,
+                         temperature=0.0 if i % 2 == 0 else 0.8,
+                         top_k=0 if i % 2 == 0 else 16, seed=5 + i))
+    return reqs
+
+
+def _submit_all(orch, reqs, **kw):
+    rids = []
+    for r in reqs:
+        r = dict(r, **kw)
+        rid = orch.submit(r.pop("prompt"), r.pop("max_new_tokens"), **r)
+        assert isinstance(rid, int), rid
+        rids.append(rid)
+    return rids
+
+
+def test_orchestrator_matches_engine_tokens():
+    import jax
+
+    from repro.engine import Engine
+    from repro.frontend.worker import LocalReplica
+    from repro.models.factory import build_model
+
+    spec = _spec()
+    reqs = _mixed_requests()
+    orch = Orchestrator([LocalReplica(0, spec)])
+    rids = _submit_all(orch, reqs)
+    out = orch.run()
+
+    model = build_model(_CTX["cfg"])
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, _CTX["plan"], _CTX["eng"], params)
+    for i, r in enumerate(reqs):
+        assert engine.add_request(Request(
+            uid=f"q{i}", tokens=r["prompt"],
+            max_new_tokens=r["max_new_tokens"],
+            temperature=r["temperature"], top_k=r["top_k"],
+            seed=r["seed"])) is None
+    ref = engine.run()
+    for i, rid in enumerate(rids):
+        assert out[rid] == ref[f"q{i}"], i
+    # engine-side rejection surfaces through the orchestrator, typed
+    rej = orch.submit([], 4)
+    assert isinstance(rej, Rejection) and rej.reason == "empty_prompt"
+
+
+def test_preemption_is_bit_identical():
+    """Interactive arrivals preempt a slot-pinning batch stream; every
+    stream — the spilled-and-resumed one included, greedy and sampled —
+    matches the preemption-off run bit for bit."""
+    from repro.frontend.worker import LocalReplica
+
+    classes = {"interactive": PriorityClass("interactive", 0),
+               "batch": PriorityClass("batch", 1, preemptible=True)}
+
+    def run(preempt):
+        orch = Orchestrator([LocalReplica(0, _spec())], classes=classes,
+                            preempt=preempt)
+        b1 = orch.submit(list(range(1, 11)), 12, cls="batch", seed=2)
+        b2 = orch.submit(list(range(2, 12)), 12, cls="batch",
+                         temperature=0.7, top_k=8, seed=3)
+        for _ in range(6):                  # both batch streams decoding
+            orch.step()
+        i1 = orch.submit(list(range(5, 13)), 4, cls="interactive", seed=9)
+        out = orch.run()
+        pre = sum(orch.streams[r].preemptions for r in (b1, b2))
+        return [out[r] for r in (b1, b2, i1)], pre
+
+    on, n_on = run(True)
+    off, n_off = run(False)
+    assert n_on > 0 and n_off == 0
+    assert on == off, "preempted/resumed streams diverged"
+
+
+def test_http_server_streams_and_rejects():
+    """The asyncio HTTP/SSE server end to end on an ephemeral port:
+    streamed tokens equal the orchestrator's, typed rejections map to
+    400, /metrics and /healthz serve."""
+    import asyncio
+    import threading
+    import time
+
+    from repro.frontend import client
+    from repro.frontend.server import FrontendServer, status_for
+    from repro.frontend.worker import LocalReplica
+
+    assert status_for(Rejection("empty_prompt", "")) == 400
+    assert status_for(Rejection("slo_ttft_unattainable", "",
+                                retry_after_steps=3)) == 429
+    assert status_for(Rejection("draining", "")) == 503
+    assert status_for(Rejection("no_live_replica", "",
+                                retry_after_steps=1)) == 503
+
+    orch = Orchestrator([LocalReplica(0, _spec())])
+    srv = FrontendServer(orch, port=0, worker_spec=_spec(), workers=0)
+    loop = asyncio.new_event_loop()
+
+    def serve():
+        asyncio.set_event_loop(loop)
+        loop.run_until_complete(srv.start())
+        loop.run_forever()
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    for _ in range(200):
+        if srv.port:
+            break
+        time.sleep(0.05)
+    assert srv.port, "server did not come up"
+
+    res = client.generate("127.0.0.1", srv.port, [5, 3, 8, 1, 9, 2], 5,
+                          seed=11)
+    assert len(res["tokens"]) == 5
+    assert res["n_streamed"] == 5           # one SSE event per token
+    assert res["tokens"] == orch.streams[res["rid"]].tokens
+
+    with pytest.raises(client.HTTPError) as ei:
+        client.generate("127.0.0.1", srv.port, [], 4)
+    assert ei.value.status == 400
+    assert ei.value.body["error"] == "empty_prompt"
+
+    health = client.get_json("127.0.0.1", srv.port, "/healthz")
+    assert health["ok"] and health["live_replicas"] == 1
+    metrics = client.get_text("127.0.0.1", srv.port, "/metrics")
+    assert "frontend_ttft_seconds" in metrics
+    assert 'worker="0"' in metrics
+
+    srv._stop.set()                         # stop the stepper thread
+    loop.call_soon_threadsafe(loop.stop)
+
+
+# ---------------------------------------------------------------------------
+# spawned workers: engine-API over real pipes + death mid-decode
+# ---------------------------------------------------------------------------
+
+def test_worker_processes_and_death_failover():
+    """One spawn session, three claims: (1) tokens through two worker
+    processes are bit-identical to the in-process baseline; (2) the
+    merged /metrics scrape carries per-worker series; (3) after one
+    worker is hard-killed mid-decode its streams finish on the survivor
+    — every stream, unaffected ones included, still bit-identical."""
+    from repro.frontend.worker import LocalReplica, ProcReplica
+
+    spec = _spec()
+    reqs = _mixed_requests(n=6, gen=5)
+
+    base = Orchestrator([LocalReplica(0, spec)])
+    want = [base.run()[r] for r in _submit_all(base, reqs)]
+
+    orch = Orchestrator([ProcReplica(0, spec), ProcReplica(1, spec)])
+    try:
+        rids = _submit_all(orch, reqs)
+        # both replicas took work (router spreads by load)
+        assert {orch.streams[r].replica for r in rids} == {0, 1}
+        out = orch.run()
+        assert [out[r] for r in rids] == want
+        merged = orch.metrics_text()
+        assert 'worker="0"' in merged and 'worker="1"' in merged
+        assert "engine_steps_total" in merged
+
+        # round 2: kill one worker mid-decode
+        rids2 = _submit_all(orch, reqs)
+        for _ in range(2):
+            orch.step()
+        victim = next(i for i in (0, 1)
+                      if any(orch.streams[r].replica == i
+                             and not orch.streams[r].done for r in rids2))
+        orch.replicas[victim].kill()
+        out2 = orch.run()
+        assert [out2[r] for r in rids2] == want
+        assert orch.registry.get("frontend_failovers_total").value() >= 1
+        assert len(orch.live()) == 1
+    finally:
+        orch.shutdown(drain=False)
+    assert all(not r.proc.is_alive() for r in orch.replicas)
